@@ -1,0 +1,66 @@
+"""Fig 9: execution-time breakdown (Q12/Q14) at high/medium/low power.
+
+Claims: the non-pushable portion is stable across modes; adaptive's
+pushdown and pushback paths finish near-simultaneously (the balance
+condition T_pd_part ~= T_pb_part of Eq 2).
+"""
+from __future__ import annotations
+
+from repro.core import engine
+from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+from repro.core.simulator import MODE_ADAPTIVE, MODE_EAGER, MODE_NO_PUSHDOWN
+from repro.queryproc import queries as Q
+
+from benchmarks import common
+
+
+def run(qids=("Q12", "Q14"), powers=(1.0, 0.375, 0.12)) -> dict:
+    cat = common.catalog()
+    out = {"powers": list(powers), "queries": {}}
+    for qid in qids:
+        q = Q.build_query(qid)
+        rows = []
+        for p in powers:
+            entry = {"power": p}
+            for m in (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE):
+                r = engine.run_query(q, cat, common.engine_cfg(m, p))
+                fins = {PUSHDOWN: 0.0, PUSHBACK: 0.0}
+                for path, _s, f in r.sim.per_request.values():
+                    fins[path] = max(fins[path], f)
+                entry[m] = {"t_total": r.t_total,
+                            "t_pushable": r.t_pushable,
+                            "t_nonpushable": r.t_nonpushable,
+                            "pd_part_finish": fins[PUSHDOWN],
+                            "pb_part_finish": fins[PUSHBACK]}
+            a = entry[MODE_ADAPTIVE]
+            lo = min(a["pd_part_finish"], a["pb_part_finish"])
+            hi = max(a["pd_part_finish"], a["pb_part_finish"])
+            entry["balance"] = lo / hi if hi > 0 else 1.0
+            rows.append(entry)
+        out["queries"][qid] = rows
+    return out
+
+
+def render(out: dict) -> str:
+    rows = []
+    for qid, rs in out["queries"].items():
+        for e in rs:
+            a = e[MODE_ADAPTIVE]
+            rows.append([qid, e["power"],
+                         f'{e[MODE_NO_PUSHDOWN]["t_total"]:.3f}',
+                         f'{e[MODE_EAGER]["t_total"]:.3f}',
+                         f'{a["t_total"]:.3f}',
+                         f'{a["pd_part_finish"]:.3f}',
+                         f'{a["pb_part_finish"]:.3f}',
+                         f'{e["balance"]:.2f}',
+                         f'{a["t_nonpushable"]:.3f}'])
+    hdr = ["query", "power", "npd", "eager", "adaptive", "pd-part", "pb-part",
+           "balance", "non-pushable"]
+    return common.table(rows, hdr) + \
+        "\n(balance -> 1.0 means pd/pb paths finish together, Eq 2)"
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("fig9_breakdown", o)
+    print(render(o))

@@ -1,0 +1,63 @@
+"""Shared benchmark harness: dataset setup, run helpers, table printing.
+
+Every benchmark mirrors one paper figure (DESIGN.md §7 maps them) and
+returns a JSON-serializable dict saved under reports/bench/. Scale: sf=4
+(~240k-row fact table, ~160 partitions) — big enough that per-request
+tails amortize like the paper's SF50 setup, small enough for one CPU.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core.cost import StorageResources
+from repro.core.engine import EngineConfig
+from repro.queryproc import tpch
+
+SF = 4.0
+ROWS_PER_PART = 1_500
+POWERS = (1.0, 0.75, 0.5, 0.375, 0.25, 0.12, 0.06)
+REPORT_DIR = Path("reports/bench")
+
+_catalogs: Dict = {}
+
+
+def catalog(num_nodes: int = 1, sf: float = SF):
+    key = (num_nodes, sf)
+    if key not in _catalogs:
+        _catalogs[key] = tpch.build_catalog(
+            sf=sf, num_nodes=num_nodes, rows_per_partition=ROWS_PER_PART)
+    return _catalogs[key]
+
+
+def engine_cfg(mode: str, power: float = 1.0,
+               num_compute_nodes: int = 1) -> EngineConfig:
+    return EngineConfig(res=StorageResources(storage_power=power), mode=mode,
+                        num_compute_nodes=num_compute_nodes)
+
+
+def save_report(name: str, data: dict) -> Path:
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    path = REPORT_DIR / f"{name}.json"
+    path.write_text(json.dumps(data, indent=1, default=float))
+    return path
+
+
+def table(rows: List[List], header: List[str]) -> str:
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    lines = [fmt.format(*header), fmt.format(*["-" * w for w in widths])]
+    lines += [fmt.format(*[str(c) for c in r]) for r in rows]
+    return "\n".join(lines)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

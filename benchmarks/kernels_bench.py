@@ -1,0 +1,82 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle vs numpy engine.
+
+On this CPU container interpret-mode wall time is NOT a TPU performance
+signal — correctness + structural numbers (VMEM footprint per block,
+bytes/row) are what carries to hardware; wall times are recorded for
+regression tracking only.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.queryproc.expressions import Col
+
+from benchmarks import common
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / reps
+
+
+def run(rows=65_536) -> dict:
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(1, 51, rows).astype(np.float32))
+    d = jnp.asarray(rng.uniform(0, 0.11, rows).astype(np.float32))
+    vals = jnp.asarray(rng.normal(size=rows).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, rows).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, 1 << 31, rows).astype(np.int32))
+
+    pred = ops.compile_predicate((Col("q") <= 24) & (Col("d") > 0.05))
+    out = {"rows": rows, "kernels": {}}
+
+    words = ops.predicate_bitmap({"q": q, "d": d}, pred)
+    out["kernels"]["predicate_bitmap"] = {
+        "pallas_s": _time(lambda: ops.predicate_bitmap({"q": q, "d": d}, pred)),
+        "ref_s": _time(lambda: ref.predicate_bitmap(
+            {"q": q, "d": d}, pred)),
+        "vmem_block_bytes": 2 * ops.DEFAULT_BLOCK * 4,
+        "out_bytes_per_row": 1 / 8,
+    }
+    out["kernels"]["bitmap_apply"] = {
+        "pallas_s": _time(lambda: ops.bitmap_apply(words, vals)),
+        "ref_s": _time(lambda: ref.bitmap_apply(
+            jnp.pad(words, (0, 0)), vals.reshape(-1))),
+        "vmem_block_bytes": ops.DEFAULT_BLOCK * 4 + ops.DEFAULT_BLOCK // 8,
+    }
+    out["kernels"]["grouped_agg"] = {
+        "pallas_s": _time(lambda: ops.grouped_agg(ids, vals, 64)),
+        "ref_s": _time(lambda: ref.grouped_agg(ids, vals, 64)),
+        "vmem_block_bytes": ops.DEFAULT_BLOCK * (4 + 4) + 65 * 8,
+        "mxu_shape": (1, ops.DEFAULT_BLOCK, 65),
+    }
+    out["kernels"]["hash_partition"] = {
+        "pallas_s": _time(lambda: ops.hash_partition(keys, 16)),
+        "ref_s": _time(lambda: ref.hash_partition(keys.reshape(-1), 16)),
+        "vmem_block_bytes": ops.DEFAULT_BLOCK * 8 + 16 * 4,
+    }
+    return out
+
+
+def render(out: dict) -> str:
+    rows = [[k, f'{v["pallas_s"]*1e3:.1f}ms', f'{v["ref_s"]*1e3:.1f}ms',
+             f'{v.get("vmem_block_bytes", 0)/1024:.0f}KiB']
+            for k, v in out["kernels"].items()]
+    return common.table(rows, ["kernel", "pallas(interp)", "jnp ref",
+                               "VMEM/block"]) + \
+        "\n(interpret-mode times are correctness-path only; see docstring)"
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("kernels", o)
+    print(render(o))

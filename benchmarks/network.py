@@ -1,0 +1,45 @@
+"""Fig 8: storage<->compute network traffic per mode (Q12/Q14).
+
+Claims: no-pushdown and eager are flat across power; eager saves up to an
+order of magnitude; adaptive interpolates with power (it trades network
+for storage CPU at runtime).
+"""
+from __future__ import annotations
+
+from repro.core import engine
+from repro.core.simulator import MODE_ADAPTIVE, MODE_EAGER, MODE_NO_PUSHDOWN
+from repro.queryproc import queries as Q
+
+from benchmarks import common
+
+
+def run(qids=("Q12", "Q14"), powers=common.POWERS) -> dict:
+    cat = common.catalog()
+    out = {"powers": list(powers), "queries": {}}
+    for qid in qids:
+        q = Q.build_query(qid)
+        d = {}
+        for m in (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE):
+            d[m] = [engine.run_query(q, cat, common.engine_cfg(m, p)).net_bytes
+                    for p in powers]
+        d["eager_saving_x"] = d[MODE_NO_PUSHDOWN][0] / max(d[MODE_EAGER][0], 1)
+        out["queries"][qid] = d
+    return out
+
+
+def render(out: dict) -> str:
+    rows = []
+    for qid, d in out["queries"].items():
+        for m in (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE):
+            rows.append([qid, m] + [f"{b/2**20:.1f}" for b in d[m]])
+    hdr = ["query", "mode"] + [f"MiB@{p}" for p in out["powers"]]
+    foot = "\n" + "; ".join(
+        f'{qid}: eager saves {d["eager_saving_x"]:.1f}x'
+        for qid, d in out["queries"].items()) + " (paper: up to ~10x)"
+    return common.table(rows, hdr) + foot
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("fig8_network", o)
+    print(render(o))

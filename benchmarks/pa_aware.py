@@ -1,0 +1,74 @@
+"""Figs 10-12: PA-aware adaptive pushdown under concurrent queries.
+
+Q14 (high pushdown amenability) + Q12 (lower PA) submitted together.
+Claims: PA-aware improves both queries vs plain adaptive (paper: Q14 up to
+1.9x, Q12 up to 1.2x); Q14 gains admitted slots, Q12 loses them but does
+not slow down; CPU/network resource usage drops (paper: -15% CPU, -31%
+network).
+"""
+from __future__ import annotations
+
+from repro.core import engine
+from repro.core.simulator import (MODE_ADAPTIVE, MODE_ADAPTIVE_PA, MODE_EAGER,
+                                  MODE_NO_PUSHDOWN)
+from repro.queryproc import queries as Q
+
+from benchmarks import common
+
+
+def run(powers=common.POWERS) -> dict:
+    cat = common.catalog()
+    qs = [Q.build_query("Q12"), Q.build_query("Q14")]
+    out = {"powers": list(powers), "modes": {}}
+    for m in (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE, MODE_ADAPTIVE_PA):
+        per_q = {"Q12": [], "Q14": []}
+        res_usage = []
+        for p in powers:
+            cfg = common.engine_cfg(m, p)
+            runs = engine.run_concurrent(qs, cat, cfg)
+            for qid in per_q:
+                per_q[qid].append({
+                    "t_total": runs[qid].t_total,
+                    "admitted": runs[qid].n_admitted,
+                    "pushed_back": runs[qid].n_pushed_back})
+            sim = runs["Q12"].sim
+            res_usage.append({"cpu_s": sum(sim.cpu_busy_by_node.values()),
+                              "net_bytes": sim.net_bytes})
+        out["modes"][m] = {"queries": per_q, "resources": res_usage}
+    # headline numbers
+    ad, pa = out["modes"][MODE_ADAPTIVE], out["modes"][MODE_ADAPTIVE_PA]
+    out["speedup_q14"] = max(
+        a["t_total"] / b["t_total"] for a, b in
+        zip(ad["queries"]["Q14"], pa["queries"]["Q14"]))
+    out["speedup_q12"] = max(
+        a["t_total"] / b["t_total"] for a, b in
+        zip(ad["queries"]["Q12"], pa["queries"]["Q12"]))
+    out["cpu_reduction"] = max(
+        1 - b["cpu_s"] / max(a["cpu_s"], 1e-12) for a, b in
+        zip(ad["resources"], pa["resources"]))
+    out["net_reduction"] = max(
+        1 - b["net_bytes"] / max(a["net_bytes"], 1e-12) for a, b in
+        zip(ad["resources"], pa["resources"]))
+    return out
+
+
+def render(out: dict) -> str:
+    rows = []
+    for m, d in out["modes"].items():
+        for qid in ("Q12", "Q14"):
+            rows.append([m, qid]
+                        + [f'{e["t_total"]:.3f}' for e in d["queries"][qid]]
+                        + [" ".join(str(e["admitted"])
+                                    for e in d["queries"][qid])])
+    hdr = ["mode", "query"] + [f"t@{p}" for p in out["powers"]] + ["admitted"]
+    foot = (f'\nPA-aware vs adaptive: Q14 {out["speedup_q14"]:.2f}x, '
+            f'Q12 {out["speedup_q12"]:.2f}x  (paper: 1.9x / 1.2x); '
+            f'CPU -{out["cpu_reduction"]*100:.0f}%, '
+            f'net -{out["net_reduction"]*100:.0f}% (paper: -15% / -31%)')
+    return common.table(rows, hdr) + foot
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("fig10_12_pa_aware", o)
+    print(render(o))

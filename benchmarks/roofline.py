@@ -1,0 +1,67 @@
+"""§Roofline table: read the dry-run JSONs and render per (arch x shape):
+compute / memory / collective terms (seconds), dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS useful ratio, and roofline fraction (mfu).
+
+Two memory figures are shown (see EXPERIMENTS.md §Dry-run for why):
+- mem(raw): HLO 'bytes accessed' from the CPU-backend compile — an upper
+  bound (XLA:CPU barely fuses and upcasts bf16 dot operands to f32),
+- mem(adj): analytic TPU-fused lower bound — weight+state+cache traffic
+  plus boundary activations (computed in repro.launch.analysis).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks import common
+
+
+def load(mesh: str = "16x16", report_dir: str = "reports/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(f"{report_dir}/{mesh}/*.json")):
+        r = json.loads(Path(f).read_text())
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rows.append(r)
+    return rows
+
+
+def run(mesh: str = "16x16") -> dict:
+    rows = load(mesh)
+    out = {"mesh": mesh, "cells": []}
+    for r in rows:
+        rl = r["roofline"]
+        out["cells"].append({
+            "arch": r["arch"], "shape": r["shape"],
+            "variant": r.get("variant", "baseline"),
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"] + rl["dcn_s"],
+            "dominant": rl.get("dominant_adj", rl["dominant"]),
+            "mfu": rl["mfu"],
+            "useful_frac": rl["useful_frac"],
+            "mem_adj_s": rl.get("memory_adj_s"),
+            "mfu_adj": rl.get("mfu_adj"),
+        })
+    return out
+
+
+def render(out: dict) -> str:
+    rows = []
+    for c in out["cells"]:
+        rows.append([c["arch"], c["shape"], f'{c["compute_s"]:.4f}',
+                     f'{c["memory_s"]:.4f}',
+                     f'{c["mem_adj_s"]:.4f}' if c["mem_adj_s"] else "-",
+                     f'{c["collective_s"]:.4f}', c["dominant"],
+                     f'{c["mfu"]:.3f}',
+                     f'{c["mfu_adj"]:.3f}' if c["mfu_adj"] else "-",
+                     f'{c["useful_frac"]:.2f}'])
+    hdr = ["arch", "shape", "compute_s", "mem_raw_s", "mem_adj_s",
+           "coll_s", "dominant", "mfu_raw", "mfu_adj", "useful"]
+    return common.table(rows, hdr)
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("roofline", o)
+    print(render(o))

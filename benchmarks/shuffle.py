@@ -1,0 +1,78 @@
+"""Fig 15: distributed-data-shuffle pushdown on 4-node clusters.
+
+Baseline pushdown: storage executes filter/project, results land round-
+robin on the compute nodes, which hash-redistribute ((n-1)/n crosses the
+compute fabric). Shuffle pushdown: the storage nodes partition and route
+directly to the join's target node. Claims: avg 1.3x over baseline
+pushdown / 1.8x over no pushdown; >=1.7x on Q7/Q8/Q17 (non-selective base
+scans); little effect on Q6/Q15/Q19 (selective filters); compute-fabric
+traffic nearly eliminated for base-table redistribution.
+"""
+from __future__ import annotations
+
+from repro.core import engine
+from repro.core.shuffle import ShuffleConfig, run_shuffle
+from repro.core.simulator import MODE_NO_PUSHDOWN
+from repro.queryproc import queries as Q
+
+from benchmarks import common
+
+NODES = 4
+
+
+def run(qids=None) -> dict:
+    qids = qids or Q.QUERY_IDS
+    cat = common.catalog(num_nodes=NODES)
+    scfg = ShuffleConfig(num_compute_nodes=NODES)
+    out = {"queries": {}}
+    sp_base, sp_npd = [], []
+    for qid in qids:
+        q = Q.build_query(qid)
+        cfg = common.engine_cfg("eager", 1.0, num_compute_nodes=NODES)
+        npd = engine.run_query(q, cat, common.engine_cfg(
+            MODE_NO_PUSHDOWN, 1.0, num_compute_nodes=NODES))
+        base = run_shuffle(q, cat, cfg, scfg, pushdown=False)
+        push = run_shuffle(q, cat, cfg, scfg, pushdown=True)
+        # no-pushdown baseline also pays the compute-side redistribution
+        npd_total = npd.t_total + base.cross_compute_bytes / (
+            scfg.compute_net_bw * NODES)
+        d = {
+            "t_no_pushdown": npd_total,
+            "t_baseline_pushdown": base.t_total,
+            "t_shuffle_pushdown": push.t_total,
+            "cross_bytes_baseline": base.cross_compute_bytes,
+            "cross_bytes_pushdown": push.cross_compute_bytes,
+            "speedup_vs_baseline": base.t_total / push.t_total,
+            "speedup_vs_npd": npd_total / push.t_total,
+            "cross_traffic_saved": 1 - push.cross_compute_bytes
+            / max(base.cross_compute_bytes, 1),
+        }
+        sp_base.append(d["speedup_vs_baseline"])
+        sp_npd.append(d["speedup_vs_npd"])
+        out["queries"][qid] = d
+    out["avg_speedup_vs_baseline"] = sum(sp_base) / len(sp_base)
+    out["avg_speedup_vs_npd"] = sum(sp_npd) / len(sp_npd)
+    return out
+
+
+def render(out: dict) -> str:
+    rows = []
+    for qid, d in out["queries"].items():
+        rows.append([qid, f'{d["t_no_pushdown"]:.3f}',
+                     f'{d["t_baseline_pushdown"]:.3f}',
+                     f'{d["t_shuffle_pushdown"]:.3f}',
+                     f'{d["speedup_vs_baseline"]:.2f}x',
+                     f'{d["speedup_vs_npd"]:.2f}x',
+                     f'{d["cross_traffic_saved"]*100:.0f}%'])
+    hdr = ["query", "no-pd", "base-pd", "shuffle-pd", "vs base", "vs npd",
+           "xtraffic saved"]
+    return common.table(rows, hdr) + (
+        f'\navg {out["avg_speedup_vs_baseline"]:.2f}x vs baseline pushdown, '
+        f'{out["avg_speedup_vs_npd"]:.2f}x vs no pushdown '
+        f'(paper Fig 15: 1.3x / 1.8x)')
+
+
+if __name__ == "__main__":
+    o = run()
+    common.save_report("fig15_shuffle", o)
+    print(render(o))

@@ -1,0 +1,70 @@
+"""Quickstart: adaptive computation pushdown on TPC-H in ~30 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's three contributions end to end:
+1. Adaptive pushdown (Algorithm 1) vs No-pushdown / Eager across storage
+   load levels, on real query executions (results verified identical).
+2. Selection-bitmap pushdown: ship 1 bit/row instead of filtered columns.
+3. Distributed-data-shuffle pushdown: partition at the storage node,
+   route straight to the target compute node.
+"""
+import numpy as np
+
+from repro.core import engine
+from repro.core.bitmap import CacheState, rewrite_all
+from repro.core.cost import StorageResources
+from repro.core.shuffle import ShuffleConfig, run_shuffle
+from repro.core.simulator import MODE_ADAPTIVE, MODE_EAGER, MODE_NO_PUSHDOWN
+from repro.queryproc import queries, tpch
+
+print("building TPC-H catalog (sf=2, 2 storage nodes)...")
+cat = tpch.build_catalog(sf=2.0, num_nodes=2, rows_per_partition=2_000)
+
+# ---------------------------------------------------- 1. adaptive pushdown
+print("\n== Adaptive pushdown: Q14, t_total normalized to No-pushdown ==")
+q = queries.build_query("Q14")
+print(f"{'power':>6} {'eager':>7} {'adaptive':>9} {'admitted':>9}")
+for power in (1.0, 0.5, 0.25, 0.12, 0.06):
+    res = StorageResources(storage_power=power)
+    runs = {m: engine.run_query(q, cat, engine.EngineConfig(res=res, mode=m))
+            for m in (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE)}
+    npd = runs[MODE_NO_PUSHDOWN].t_total
+    a = runs[MODE_ADAPTIVE]
+    assert engine.results_equal(a.result, runs[MODE_NO_PUSHDOWN].result)
+    print(f"{power:>6} {runs[MODE_EAGER].t_total/npd:>7.2f} "
+          f"{a.t_total/npd:>9.2f} {a.n_admitted:>4}/{len(a.requests)}")
+print("(eager degrades when the storage layer is loaded; the arbitrator's "
+      "pushback\n mechanism keeps adaptive at or below both baselines)")
+
+# ------------------------------------------------ 2. selection bitmap
+print("\n== Selection-bitmap pushdown: Q14, output columns cached ==")
+cfg = engine.EngineConfig(mode=MODE_EAGER)
+for sel in (0.2, 0.5, 0.9):
+    qs = queries.build_query("Q14", fact_selectivity=sel)
+    reqs = engine.plan_requests(qs, cat)
+    base = engine.run_query(qs, cat, cfg, requests=reqs)
+    cache = CacheState()
+    cache.cache_columns("lineitem", {"l_partkey", "l_extendedprice",
+                                     "l_discount"})
+    rw, met = rewrite_all(reqs, cache)
+    bm = engine.run_query(qs, cat, cfg, requests=rw)
+    t_b = base.t_pushable + base.net_bytes / cfg.compute_bw
+    t_m = bm.t_pushable + bm.net_bytes / cfg.compute_bw
+    saved = 1 - met["net_bitmap"] / met["net_baseline"]
+    print(f"  selectivity {sel}: {t_b/t_m:.2f}x faster, "
+          f"{saved*100:.0f}% network saved (bitmaps are 1 bit/row)")
+
+# ---------------------------------------------- 3. shuffle pushdown
+print("\n== Distributed shuffle pushdown: 4 compute nodes ==")
+scfg = ShuffleConfig(num_compute_nodes=4)
+for qid in ("Q7", "Q14"):
+    qq = queries.build_query(qid)
+    c4 = engine.EngineConfig(mode=MODE_EAGER, num_compute_nodes=4)
+    basep = run_shuffle(qq, cat, c4, scfg, pushdown=False)
+    push = run_shuffle(qq, cat, c4, scfg, pushdown=True)
+    print(f"  {qid}: {basep.t_total/push.t_total:.2f}x vs baseline pushdown; "
+          f"compute-fabric traffic {basep.cross_compute_bytes/2**20:.1f} MiB "
+          f"-> {push.cross_compute_bytes/2**20:.1f} MiB")
+
+print("\ndone — see benchmarks/ for the full paper-figure suite.")

@@ -1,0 +1,32 @@
+"""qwen3-14b — dense, qk_norm, GQA [hf:Qwen/Qwen3 family].
+
+40L d_model=5120 40H (GQA kv=8) d_ff=17408 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab_size=256,
+    qk_norm=True,
+)

@@ -1,0 +1,13 @@
+"""The paper's contribution: adaptive computation pushdown.
+
+- cost.py       lightweight time-estimation model (Eq. 8-11)
+- optimum.py    theoretical bound (Eq. 1-7) + discrete oracle
+- arbitrator.py Adaptive Pushdown Arbitrator (Algorithm 1, §3.4 PA-aware)
+- simulator.py  deterministic fluid event simulator of the storage layer
+- plan.py       pushable sub-plans + per-partition requests (§4.1 principle)
+- engine.py     end-to-end query execution in all four modes
+- bitmap.py     selection-bitmap pushdown (§4.2)
+- shuffle.py    distributed-data-shuffle pushdown (§4.2)
+"""
+from repro.core import (arbitrator, bitmap, cost, engine, optimum,  # noqa: F401
+                        plan, shuffle, simulator)

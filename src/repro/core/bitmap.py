@@ -1,0 +1,168 @@
+"""Selection-bitmap pushdown (paper §4.2, Figs 3/4/13/14).
+
+Late materialization across the storage<->compute network boundary:
+
+- storage-side bitmap (Fig 3): output columns are cached at compute;
+  the storage node evaluates the fact predicate, ships the packed bitmap
+  (1 bit/row) instead of the filtered output columns — the compute layer
+  applies it to its cache (repro.kernels.bitmap_apply on device).
+- compute-side bitmap (Fig 4): predicate columns are cached at compute;
+  the compute node evaluates the predicate locally, ships the bitmap to
+  storage — the storage node skips scanning the predicate columns
+  entirely (disk bytes + columns-accessed both drop, Fig 14b).
+- fine-grained AND/OR split: sub-predicates are assigned to whichever
+  side caches their columns; both sides exchange bitmaps and combine with
+  cheap bitwise ops (the §4.2 design-space discussion).
+
+Bitmap pushdown is a *variant of filtering* — local and bounded — so its
+requests flow through the same Arbitrator/simulator as everything else;
+this module only rewrites the per-request byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.cost import RequestCost
+from repro.core.engine import PlannedRequest
+from repro.core.plan import PushPlan
+from repro.queryproc import expressions as ex
+from repro.queryproc import operators as ops
+
+
+@dataclasses.dataclass
+class CacheState:
+    """Which columns of which table the compute layer holds locally."""
+    cached: Dict[str, Set[str]] = dataclasses.field(default_factory=dict)
+
+    def has(self, table: str, col: str) -> bool:
+        return col in self.cached.get(table, set())
+
+    def cache_columns(self, table: str, cols) -> None:
+        self.cached.setdefault(table, set()).update(cols)
+
+
+def split_predicate(expr: ex.Expr, cached: Set[str]
+                    ) -> Tuple[Optional[ex.Expr], Optional[ex.Expr]]:
+    """(compute_side, storage_side) for a fine-grained AND split: a
+    conjunct goes to the compute layer iff all its columns are cached.
+    OR nodes are atomic (both branches must co-locate)."""
+    if isinstance(expr, ex.And):
+        lc, ls = split_predicate(expr.left, cached)
+        rc, rs = split_predicate(expr.right, cached)
+        comp = lc if rc is None else (rc if lc is None else ex.And(lc, rc))
+        stor = ls if rs is None else (rs if ls is None else ex.And(ls, rs))
+        return comp, stor
+    if ex.columns_of(expr) <= cached:
+        return expr, None
+    return None, expr
+
+
+@dataclasses.dataclass
+class BitmapRewrite:
+    """Byte-accounting deltas of bitmap pushdown for one request."""
+    cost: RequestCost
+    bitmap_bytes: int
+    disk_bytes_saved: int
+    columns_skipped: int
+    direction: str  # "storage" | "compute" | "mixed" | "none"
+
+
+def rewrite_request(req: PlannedRequest, cache: CacheState) -> BitmapRewrite:
+    """Recost one fact-table request under bitmap pushdown given the cache.
+
+    Baseline (no bitmaps): storage scans predicate+output columns, ships
+    filtered output columns (sel * raw bytes).
+    """
+    plan, part = req.plan, req.part
+    data = part.data
+    stats = data.stats()
+    rows = len(data)
+    if plan.predicate is None:
+        return BitmapRewrite(req.cost, 0, 0, 0, "none")
+    pred_cols = ex.columns_of(plan.predicate)
+    out_cols = [c for c in plan.columns if c in data.cols]
+    sel = ex.estimate_selectivity(plan.predicate, stats)
+    bitmap_bytes = -(-rows // 32) * 4
+
+    cached = cache.cached.get(req.table, set())
+    comp_pred, stor_pred = split_predicate(plan.predicate, cached)
+
+    cached_out = [c for c in out_cols if c in cached]
+    uncached_out = [c for c in out_cols if c not in cached]
+
+    if comp_pred is not None and stor_pred is None:
+        # Fig 4: compute side evaluates everything; storage just applies
+        s_in = data.nbytes(uncached_out, stored=True)  # pred cols unscanned
+        disk_saved = req.cost.s_in - s_in
+        s_out = int(data.nbytes(uncached_out, stored=False) * sel) + 64
+        cost = RequestCost(s_in=int(s_in), s_out=s_out,
+                           compute_in=int(data.nbytes(uncached_out, False)))
+        return BitmapRewrite(cost, bitmap_bytes, int(disk_saved),
+                             len(set(pred_cols) - set(uncached_out)),
+                             "compute")
+    if comp_pred is None and cached_out:
+        # Fig 3: storage builds the bitmap; cached outputs filtered locally
+        scan_cols = sorted(set(pred_cols) | set(uncached_out))
+        s_in = data.nbytes([c for c in scan_cols if c in data.cols], True)
+        s_out = (int(data.nbytes(uncached_out, False) * sel)
+                 + bitmap_bytes + 64)
+        cost = RequestCost(s_in=int(s_in), s_out=s_out,
+                           compute_in=int(data.nbytes(
+                               [c for c in scan_cols if c in data.cols], False)))
+        return BitmapRewrite(cost, bitmap_bytes, 0, 0, "storage")
+    if comp_pred is not None and stor_pred is not None:
+        # mixed: exchange bitmaps; storage scans only its sub-predicate's
+        # columns + uncached outputs
+        stor_cols = sorted((ex.columns_of(stor_pred) | set(uncached_out))
+                           & set(data.cols))
+        s_in = data.nbytes(stor_cols, True)
+        disk_saved = req.cost.s_in - s_in
+        s_out = (int(data.nbytes(uncached_out, False) * sel)
+                 + bitmap_bytes + 64)
+        cost = RequestCost(s_in=int(s_in), s_out=s_out + bitmap_bytes,
+                           compute_in=int(data.nbytes(stor_cols, False)))
+        return BitmapRewrite(cost, 2 * bitmap_bytes, int(disk_saved),
+                             len(set(pred_cols) - set(stor_cols)), "mixed")
+    return BitmapRewrite(req.cost, 0, 0, 0, "none")
+
+
+def rewrite_all(reqs: List[PlannedRequest], cache: CacheState,
+                table: str = "lineitem") -> Tuple[List[PlannedRequest], Dict]:
+    """Apply bitmap rewriting to every request of ``table``; other tables
+    pass through. Returns (new requests, metrics)."""
+    out: List[PlannedRequest] = []
+    metrics = {"bitmap_bytes": 0, "disk_saved": 0, "cols_skipped": 0,
+               "net_baseline": 0, "net_bitmap": 0}
+    for r in reqs:
+        if r.table != table:
+            out.append(r)
+            continue
+        rw = rewrite_request(r, cache)
+        metrics["bitmap_bytes"] += rw.bitmap_bytes
+        metrics["disk_saved"] += rw.disk_bytes_saved
+        metrics["cols_skipped"] += rw.columns_skipped
+        metrics["net_baseline"] += r.cost.s_out
+        metrics["net_bitmap"] += rw.cost.s_out
+        out.append(dataclasses.replace(r, cost=rw.cost))
+    return out, metrics
+
+
+# --------------------------------------------------- real bitmap execution
+def storage_side_bitmap(part_data, predicate, out_cols_uncached):
+    """Actually produce (packed bitmap, filtered uncached columns) at the
+    storage node — the numpy half; the device half is kernels.bitmap_apply."""
+    words = ops.selection_bitmap(part_data, predicate)
+    filtered = ops.apply_bitmap(part_data.select(
+        [c for c in out_cols_uncached if c in part_data.cols]), words)
+    return words, filtered
+
+
+def combine_bitmaps(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Cheap bitwise combine of exchanged bitmaps (§4.2)."""
+    n = max(len(a), len(b))
+    aa = np.zeros(n, np.uint32); aa[:len(a)] = a
+    bb = np.zeros(n, np.uint32); bb[:len(b)] = b
+    return aa & bb

@@ -1,0 +1,125 @@
+"""Theoretical optimum of adaptive pushdown (§3.1, Eq. 1-7).
+
+Closed form (uniform requests): with k = T_npd / T_pd,
+
+    n_opt  = k/(k+1) * N                                  (Eq. 6)
+    T_opt  = k/(k+1) * T_pd = 1/(k+1) * T_npd             (Eq. 7)
+
+plus the *discrete* optimum over integer admit counts for heterogeneous
+request sets (the oracle the paper compares its heuristic against in Fig. 7
+— "constructed with a global view of all requests ahead of execution").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.core.cost import RequestCost, StorageResources
+
+
+def n_opt_uniform(N: int, k: float) -> float:
+    """Eq. 6 (real-valued; the paper rounds to integers in practice)."""
+    return k / (k + 1.0) * N
+
+
+def t_opt_uniform(t_pd: float, k: float) -> float:
+    """Eq. 7."""
+    return k / (k + 1.0) * t_pd
+
+
+def k_of(t_npd: float, t_pd: float) -> float:
+    return t_npd / t_pd if t_pd > 0 else 0.0
+
+
+@dataclasses.dataclass
+class Split:
+    n_pushdown: int
+    time: float
+    t_pd_part: float
+    t_pb_part: float
+
+
+def _time_of_split(costs: Sequence[RequestCost], admit: Sequence[bool],
+                   res: StorageResources) -> Tuple[float, float, float]:
+    """Makespan of a given admit/pushback split under the §3.1 fluid model:
+    admitted work shares the pd slots; pushback work shares the net streams;
+    the two proceed in parallel (Eq. 1-3)."""
+    cpu_work = sum(c.compute_in for c, a in zip(costs, admit) if a)
+    pd_net = sum(c.s_out for c, a in zip(costs, admit) if a)
+    pb_net = sum(c.s_in for c, a in zip(costs, admit) if not a)
+    scan = sum(c.s_in for c in costs)
+    t_pd_part = cpu_work / (res.eff_core_bw * res.pd_slots)
+    # the storage<->compute pipe is shared by pushdown results and pushbacks
+    t_net = (pd_net + pb_net) / res.net_bw
+    t_scan = scan / res.disk_bw
+    t_pb_part = t_net
+    return max(t_pd_part, t_pb_part) + t_scan, t_pd_part, t_pb_part
+
+
+def discrete_optimum(costs: Sequence[RequestCost], res: StorageResources
+                     ) -> Split:
+    """Best integer split: admit the n most pushdown-amenable requests
+    (sorted by PA, §3.4 — exchange argument: any optimal split can be
+    reordered into a PA-prefix split without increasing either term)."""
+    order = sorted(range(len(costs)), key=lambda i: -costs[i].pa(res))
+    best = None
+    for n in range(len(costs) + 1):
+        admit = [False] * len(costs)
+        for i in order[:n]:
+            admit[i] = True
+        t, tpd, tpb = _time_of_split(costs, admit, res)
+        if best is None or t < best.time:
+            best = Split(n, t, tpd, tpb)
+    return best
+
+
+def simulated_optimum(sim_reqs, res: StorageResources,
+                      coarse: int = 16) -> Split:
+    """The paper's oracle evaluated apples-to-apples: with a global view,
+    pick the integer split (PA-ordered prefix admitted) that minimizes the
+    *simulated* makespan under the same slot/fluid dynamics the heuristic
+    runs in. Coarse grid then local refinement (makespan is ~unimodal in n)."""
+    from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+    from repro.core.simulator import simulate
+
+    N = len(sim_reqs)
+    order = sorted(range(N), key=lambda i: -sim_reqs[i].cost.pa(res))
+
+    def evaluate(n: int) -> float:
+        dec = {}
+        admit = set(order[:n])
+        for i, r in enumerate(sim_reqs):
+            dec[r.req_id] = PUSHDOWN if i in admit else PUSHBACK
+        return simulate(sim_reqs, res, decisions=dec).makespan
+
+    grid = sorted({0, N} | {round(i * N / coarse) for i in range(coarse + 1)})
+    times = {n: evaluate(n) for n in grid}
+    n0 = min(times, key=times.get)
+    lo = max(0, n0 - max(1, N // coarse))
+    hi = min(N, n0 + max(1, N // coarse))
+    for n in range(lo, hi + 1):
+        if n not in times:
+            times[n] = evaluate(n)
+    best = min(times, key=times.get)
+    return Split(best, times[best], 0.0, 0.0)
+
+
+def uniform_prediction(costs: Sequence[RequestCost], res: StorageResources
+                       ) -> Split:
+    """Closed-form Eq. 6-7 applied to the mean request (the paper's model)."""
+    N = len(costs)
+    if N == 0:
+        return Split(0, 0.0, 0.0, 0.0)
+    mean = RequestCost(
+        s_in=sum(c.s_in for c in costs) // N,
+        s_out=sum(c.s_out for c in costs) // N,
+        compute_in=sum(c.compute_in for c in costs) // N,
+    )
+    # T_pd / T_npd of the whole pushable portion (Eq. 4), scan excluded —
+    # it is common to both (the paper's k compares the differing parts).
+    t_pd = N * mean.compute_in / (res.eff_core_bw * res.pd_slots) \
+        + N * mean.s_out / res.net_bw
+    t_npd = N * mean.s_in / res.net_bw
+    k = k_of(t_npd, t_pd)
+    n = round(n_opt_uniform(N, k))
+    return Split(n, t_opt_uniform(t_pd, k), 0.0, 0.0)

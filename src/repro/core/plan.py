@@ -1,0 +1,138 @@
+"""Pushable sub-plans and per-partition pushdown requests.
+
+The planner (engine.py) walks a query plan from the scans upward and cuts
+at the first operator that is not *local + bounded* (§4.1) — everything
+below the cut ships to storage as a ``PushPlan``; everything above runs in
+the compute layer. One pushdown request is issued per fact-table partition
+(the paper sends requests per data partition, §4.2).
+
+A ``PushPlan`` is deliberately restricted to the paper's pushdown-amenable
+operator set: projection, selection (expression tree), selection *bitmap*
+(ship the bitmap instead of columns, §4.2), partial grouped/scalar
+aggregation, top-k, and the shuffle partition function (§4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import RequestCost
+from repro.queryproc import expressions as ex
+from repro.queryproc import operators as ops
+from repro.queryproc.table import ColumnTable
+from repro.storage.catalog import Partition
+
+
+@dataclasses.dataclass(frozen=True)
+class PushPlan:
+    """What a single pushdown request executes at the storage node."""
+    table: str
+    columns: Tuple[str, ...]                       # projection (output cols)
+    predicate: Optional[ex.Expr] = None            # selection
+    derive: Tuple = ()                             # ((name, (in_cols), fn), ...)
+    agg: Optional[Tuple[Tuple[str, ...], Tuple[Tuple[str, str, str], ...]]] = None
+    #     ^ partial grouped agg: (keys, ((out, fn, col), ...))
+    top_k: Optional[Tuple[str, int, bool]] = None  # (col, k, ascending)
+    shuffle: Optional[Tuple[str, int]] = None      # (partition key, n_targets)
+    bitmap_only: bool = False                      # return the selection bitmap
+    apply_bitmap: bool = False                     # storage filters with a
+    #                                                compute-layer bitmap
+
+    def accessed_columns(self) -> Tuple[str, ...]:
+        derived = {name for name, _, _ in self.derive}
+        cols = set(self.columns) - derived
+        if self.predicate is not None and not self.apply_bitmap:
+            cols |= ex.columns_of(self.predicate)
+        for _, incols, _ in self.derive:
+            cols |= set(incols)
+        if self.agg:
+            keys, aggs = self.agg
+            cols |= (set(keys) | {c for _, _, c in aggs if c}) - derived
+        if self.top_k:
+            cols.add(self.top_k[0])
+        if self.shuffle:
+            cols.add(self.shuffle[0])
+        return tuple(sorted(cols))
+
+
+def execute_push_plan(plan: PushPlan, data: ColumnTable,
+                      bitmap: Optional[np.ndarray] = None):
+    """Run the pushable sub-plan on one partition (storage-native numpy).
+    Returns (result, aux) where aux carries bitmap/shuffle by-products."""
+    t = data
+    aux: Dict[str, object] = {}
+    if plan.apply_bitmap:
+        assert bitmap is not None, "compute-layer bitmap required"
+        t = ops.apply_bitmap(t, bitmap)
+    elif plan.predicate is not None:
+        if plan.bitmap_only:
+            words = ops.selection_bitmap(t, plan.predicate)
+            aux["bitmap"] = words
+            t = ops.apply_bitmap(t, words)
+        else:
+            t = ops.filter_table(t, plan.predicate)
+    if plan.derive:
+        cols = dict(t.cols)
+        for name, incols, fn in plan.derive:
+            cols[name] = fn(*[cols[c] for c in incols])
+        t = ColumnTable(cols)
+    if plan.agg is not None:
+        keys, aggs = plan.agg
+        t = ops.grouped_agg(t, list(keys), {o: (f, c) for o, f, c in aggs})
+    elif plan.columns:
+        t = t.select([c for c in plan.columns if c in t.cols])
+    if plan.top_k is not None:
+        col, k, asc = plan.top_k
+        t = ops.top_k(t, col, k, asc)
+    if plan.shuffle is not None:
+        key, n = plan.shuffle
+        aux["shuffle_parts"] = ops.shuffle_partition(t, key, n)
+        aux["position_vector"] = ops.position_vector(t, key, n)
+    return t, aux
+
+
+# ------------------------------------------------------------- request cost
+_AGG_OUT_ROWS = 4096  # conservative group-count cap for partial aggs
+
+
+def estimate_cost(plan: PushPlan, part: Partition) -> RequestCost:
+    """Static byte estimates for the §3.3 cost model (cardinality estimation
+    via per-column stats — the paper's S_out source)."""
+    data = part.data
+    stats = data.stats()
+    acc_cols = [c for c in plan.accessed_columns() if c in data.cols]
+    s_in = data.nbytes(acc_cols, stored=True)
+    raw_in = data.nbytes(acc_cols, stored=False)
+    sel = 1.0
+    if plan.predicate is not None:
+        sel = ex.estimate_selectivity(plan.predicate, stats)
+    derived = {n for n, _, _ in plan.derive}
+    n_derived_out = len(derived & set(plan.columns))
+    if plan.bitmap_only:
+        out_cols = [c for c in plan.columns if c in data.cols]
+        s_out = ((data.nbytes(out_cols, stored=False)
+                  + 8 * n_derived_out * len(data)) * sel + len(data) / 8)
+    elif plan.agg is not None:
+        keys, aggs = plan.agg
+        groups = 1
+        for k in keys:
+            groups *= max(1, stats[k].ndv)
+        groups = min(groups, _AGG_OUT_ROWS, len(data))
+        s_out = groups * 8 * (len(keys) + len(aggs))
+    else:
+        out_cols = [c for c in plan.columns if c in data.cols]
+        s_out = (data.nbytes(out_cols, stored=False)
+                 + 8 * n_derived_out * len(data)) * sel
+    if plan.top_k is not None:
+        s_out = min(s_out, plan.top_k[1] * 8 * max(1, len(plan.columns)))
+    return RequestCost(s_in=int(s_in), s_out=int(max(64, s_out)),
+                       compute_in=int(raw_in))
+
+
+def actual_out_bytes(result: ColumnTable, aux: Dict) -> int:
+    b = result.nbytes(stored=False) if len(result) else 64
+    if "bitmap" in aux:
+        b += aux["bitmap"].nbytes
+    return int(b)

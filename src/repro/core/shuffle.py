@@ -1,0 +1,146 @@
+"""Distributed-data-shuffle pushdown (paper §4.2, Fig 5 / Fig 15).
+
+Baseline (shuffle at compute): storage executes filter/project pushdown,
+returns results round-robin to the n compute nodes, which then hash-
+redistribute on the join key — (n-1)/n of the bytes cross the compute
+interconnect.
+
+Shuffle pushdown: the storage node runs the partition function itself
+(repro.kernels.hash_partition is the device form; numpy here) and routes
+each partition's slice *directly* to its target compute node — the
+compute-side redistribution disappears. Parameters shipped with each
+request: partition fn, key, target identities (§4.2). Results are buffered
+at storage in a bounded pull buffer; when full, the shuffle throttles
+(modelled as a net-stage rate cap).
+
+Cached-data interop: a *position vector* (log2 n bits/row) lets the
+compute cluster shuffle its cached columns locally, saving ~1/n of the
+redistribution and keeping cache utility (§4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, PlannedRequest, plan_requests
+from repro.core.simulator import SimRequest, simulate
+from repro.queryproc import operators as ops
+from repro.queryproc.queries import Query
+from repro.queryproc.table import ColumnTable
+from repro.storage.catalog import Catalog
+
+
+@dataclasses.dataclass
+class ShuffleConfig:
+    num_compute_nodes: int = 4
+    compute_net_bw: float = 1.25e9  # 10 Gbps NICs (the paper's r5.4xlarge)
+    partition_bw: float = 2.4e9     # compute-node partition/serialize rate
+    buffer_bytes: int = 256 << 20   # bounded pull buffer at storage (§4.2)
+    position_vector: bool = True    # cached-column interop variant
+
+
+@dataclasses.dataclass
+class ShuffleRun:
+    qid: str
+    t_total: float
+    cross_compute_bytes: float      # redistribution traffic inside compute
+    storage_net_bytes: float        # storage -> compute traffic
+    position_vector_bytes: float
+
+
+def _exec_table_bytes(reqs: List[PlannedRequest]) -> Dict[str, List[Tuple[int, int]]]:
+    """Actually run each request's plan and record (node, out_bytes)."""
+    from repro.core.plan import execute_push_plan
+    by_table: Dict[str, List[Tuple[int, int]]] = {}
+    for r in reqs:
+        res, _ = execute_push_plan(r.plan, r.part.data)
+        b = res.nbytes(stored=False) if len(res) else 0
+        by_table.setdefault(r.table, []).append((r.part.node_id, b))
+    return by_table
+
+
+def run_shuffle(query: Query, catalog: Catalog, cfg: EngineConfig,
+                scfg: ShuffleConfig, pushdown: bool) -> ShuffleRun:
+    """End-to-end time of the pushable portion + redistribution under
+    baseline pushdown (shuffle at compute) vs shuffle pushdown."""
+    reqs = plan_requests(query, catalog)
+    # storage phase: same pushdown execution either way (the partition
+    # function is linear in the result size — folded into compute_in below)
+    sim_reqs = []
+    for r in reqs:
+        cost = r.cost
+        if pushdown and r.table in query.shuffle_keys:
+            cost = dataclasses.replace(
+                cost, compute_in=int(cost.compute_in * 1.05))  # hash+route
+        sim_reqs.append(SimRequest(r.req_id, r.part.node_id, query.qid, cost))
+    sim = simulate(sim_reqs, cfg.res, "eager")
+
+    out_bytes = _exec_table_bytes(reqs)
+    cross = 0.0
+    part_bytes = 0.0
+    pv_bytes = 0.0
+    storage_net = sim.net_bytes
+    n = scfg.num_compute_nodes
+    for table, parts in out_bytes.items():
+        total = float(sum(b for _, b in parts))
+        if table not in query.shuffle_keys:
+            continue
+        if pushdown:
+            # storage routes directly; optional position vector for the
+            # cached columns (log2 n bits per row — negligible but counted)
+            if scfg.position_vector:
+                rows = sum(len(r.part.data) for r in reqs if r.table == table)
+                pv_bytes += rows * max(1, int(np.ceil(np.log2(n)))) / 8
+        else:
+            # round-robin landing, then every landed byte is hashed +
+            # serialized by the compute partitioner; (n-1)/n crosses the wire
+            part_bytes += total
+            cross += total * (n - 1) / n
+    # redistribution phase: partitioning CPU + cross-compute wire time,
+    # all n nodes working in parallel
+    t_shuffle = (part_bytes / (scfg.partition_bw * n)
+                 + cross / (scfg.compute_net_bw * n))
+    # bounded-buffer throttle: storage can hold buffer_bytes of routed
+    # results; beyond that the net stage caps at the drain rate (modelled
+    # as an extra serial term for the overflow fraction)
+    if pushdown:
+        overflow = max(0.0, storage_net - scfg.buffer_bytes * len(
+            {r.part.node_id for r in reqs}))
+        t_shuffle += overflow / cfg.res.net_bw
+        storage_net += pv_bytes
+    t_np = sum(float(b) for parts in out_bytes.values()
+               for _, b in parts) / (cfg.compute_bw * n)
+    return ShuffleRun(query.qid, sim.makespan + t_shuffle + t_np,
+                      cross, storage_net, pv_bytes)
+
+
+# ---------------------------------------------------- real shuffle (numpy)
+def shuffle_at_storage(catalog: Catalog, table: str, key: str, n: int
+                       ) -> List[ColumnTable]:
+    """Actually partition every partition of ``table`` by ``key`` at its
+    storage node and concatenate per-target slices (what the target compute
+    nodes would receive)."""
+    targets: List[List[ColumnTable]] = [[] for _ in range(n)]
+    for part in catalog.partitions_of(table):
+        for t, piece in enumerate(ops.shuffle_partition(part.data, key, n)):
+            targets[t].append(piece)
+    return [ColumnTable.concat(ps) for ps in targets]
+
+
+def shuffle_at_compute(catalog: Catalog, table: str, key: str, n: int
+                       ) -> List[ColumnTable]:
+    """Baseline: round-robin landing then redistribution — same final
+    placement (tests assert equality with shuffle_at_storage)."""
+    landed: List[List[ColumnTable]] = [[] for _ in range(n)]
+    for i, part in enumerate(catalog.partitions_of(table)):
+        landed[i % n].append(part.data)
+    out: List[List[ColumnTable]] = [[] for _ in range(n)]
+    for node_tables in landed:
+        if not node_tables:
+            continue
+        merged = ColumnTable.concat(node_tables)
+        for t, piece in enumerate(ops.shuffle_partition(merged, key, n)):
+            out[t].append(piece)
+    return [ColumnTable.concat(ps) for ps in out]

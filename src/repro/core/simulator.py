@@ -1,0 +1,246 @@
+"""Deterministic fluid discrete-event simulator of the storage layer.
+
+This container has one CPU core and no real network, so the paper's
+wall-clock A/B (16-vCPU storage node, 10 Gbps pipe) is reproduced as a
+*fluid* simulation over the paper's own cost model (§3.3): every task is a
+sequence of (resource, bytes) stages; resources serve active tasks at
+deterministic rates; events fire when the earliest stage drains.
+
+Resource semantics per storage node:
+- disk:  shared scan bandwidth, equal fluid share across active scans
+- cpu:   one pushdown execution slot = one core at ``eff_core_bw``
+         (slot count = Arbitrator's S_exec-pd; queueing handled there)
+- net:   shared storage<->compute pipe, equal share capped at the fixed
+         per-stream bandwidth BW_net of §3.3
+
+Stage chains:
+    pushdown: scan(s_in) -> cpu(compute_in) -> net(s_out)  [slot held
+              through scan+compute; the result transfer frees the core]
+    pushback: scan(s_in) -> net(s_in)        [slot = the transfer stream,
+              held for the whole task]
+
+The same engine serves all four execution modes (the two baselines force a
+path; adaptive modes delegate to the Arbitrator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.arbitrator import PUSHBACK, PUSHDOWN, Arbitrator
+from repro.core.cost import RequestCost, StorageResources
+
+EPS = 1e-12
+
+MODE_NO_PUSHDOWN = "no_pushdown"
+MODE_EAGER = "eager"
+MODE_ADAPTIVE = "adaptive"
+MODE_ADAPTIVE_PA = "adaptive_pa"
+
+
+@dataclasses.dataclass
+class SimRequest:
+    req_id: int
+    node_id: int
+    query_id: str
+    cost: RequestCost
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class TaskState:
+    req: SimRequest
+    path: str
+    stages: List[Tuple[str, float]]   # (resource, remaining bytes)
+    slot_until: int = 10 ** 9         # slot frees once idx passes this stage
+    idx: int = 0
+    start: float = 0.0
+    finish: Optional[float] = None
+    slot_freed: bool = False
+
+    @property
+    def resource(self) -> str:
+        return self.stages[self.idx][0]
+
+
+@dataclasses.dataclass
+class SimResult:
+    per_request: Dict[int, Tuple[str, float, float]]  # id -> (path, start, finish)
+    finish_by_query: Dict[str, float]
+    admitted_by_query: Dict[str, int]
+    pushed_back_by_query: Dict[str, int]
+    net_bytes: float                 # storage->compute traffic
+    net_bytes_by_query: Dict[str, float]
+    cpu_busy_by_node: Dict[int, float]
+    makespan: float
+
+    def admitted(self, qid: Optional[str] = None) -> int:
+        if qid is None:
+            return sum(self.admitted_by_query.values())
+        return self.admitted_by_query.get(qid, 0)
+
+
+def _mk_task(req: SimRequest, path: str, now: float) -> TaskState:
+    c = req.cost
+    if path == PUSHDOWN:
+        # the execution slot (a core) is held through scan+compute; the
+        # result transfer does NOT hold it — Eq 3 charges pushdown to
+        # BW_cpu only, so a slot cycles at compute rate
+        stages = [("disk", float(c.s_in)), ("cpu", float(c.compute_in)),
+                  ("net", float(c.s_out))]
+        slot_until = 1
+    else:
+        # a pushback slot IS the transfer stream — held to completion
+        stages = [("disk", float(c.s_in)), ("net", float(c.s_in))]
+        slot_until = 10 ** 9
+    return TaskState(req, path, stages, slot_until, 0, now)
+
+
+class _ForcedArbitrator:
+    """Oracle mode: per-request decisions fixed up front (global view,
+    §3.1); two FIFO queues so a blocked path never blocks the other."""
+
+    def __init__(self, res: StorageResources, decisions):
+        self.res = res
+        self.decisions = decisions
+        self.q = {PUSHDOWN: [], PUSHBACK: []}
+        self.free = {PUSHDOWN: res.pd_slots, PUSHBACK: res.pb_slots}
+        self.admitted = 0
+        self.pushed_back = 0
+
+    def submit(self, req_id, cost):
+        self.q[self.decisions[req_id]].append(req_id)
+        return self.drain()
+
+    def release(self, path):
+        self.free[path] += 1
+        return self.drain()
+
+    def drain(self):
+        out = []
+        for path in (PUSHDOWN, PUSHBACK):
+            while self.q[path] and self.free[path] > 0:
+                self.free[path] -= 1
+                if path == PUSHDOWN:
+                    self.admitted += 1
+                else:
+                    self.pushed_back += 1
+                out.append((self.q[path].pop(0), path))
+        return out
+
+
+def simulate(requests: List[SimRequest],
+             res: StorageResources,
+             mode: str = MODE_ADAPTIVE,
+             num_nodes: Optional[int] = None,
+             decisions: Optional[Dict[int, str]] = None) -> SimResult:
+    nodes = sorted({r.node_id for r in requests}) if num_nodes is None \
+        else list(range(num_nodes))
+    forced = {MODE_NO_PUSHDOWN: PUSHBACK, MODE_EAGER: PUSHDOWN}.get(mode)
+    if decisions is not None:
+        arbs = {n: _ForcedArbitrator(res, decisions) for n in nodes}
+    else:
+        arbs = {n: Arbitrator(res, pa_aware=(mode == MODE_ADAPTIVE_PA),
+                              forced_path=forced) for n in nodes}
+    by_id = {r.req_id: r for r in requests}
+    pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    active: List[TaskState] = []
+    done: Dict[int, TaskState] = {}
+    cpu_busy = {n: 0.0 for n in nodes}
+    now = 0.0
+    i = 0
+
+    def start_assignments(assigns, n, t):
+        for req_id, path in assigns:
+            active.append(_mk_task(by_id[req_id], path, t))
+
+    while i < len(pending) or active:
+        # admit arrivals at `now`
+        while i < len(pending) and pending[i].arrival <= now + EPS:
+            r = pending[i]
+            start_assignments(arbs[r.node_id].submit(r.req_id, r.cost),
+                              r.node_id, now)
+            i += 1
+        if not active:
+            if i < len(pending):
+                now = pending[i].arrival
+                continue
+            break
+
+        # fluid rates for the current instant
+        disk_n = {n: 0 for n in nodes}
+        net_n = {n: 0 for n in nodes}
+        for t in active:
+            if t.resource == "disk":
+                disk_n[t.req.node_id] += 1
+            elif t.resource == "net":
+                net_n[t.req.node_id] += 1
+
+        def rate(t: TaskState) -> float:
+            n = t.req.node_id
+            if t.resource == "disk":
+                return res.disk_bw / max(1, disk_n[n])
+            if t.resource == "cpu":
+                return res.eff_core_bw
+            return min(res.stream_bw, res.net_bw / max(1, net_n[n]))
+
+        # next event: earliest stage completion or next arrival
+        dt = math.inf
+        for t in active:
+            rem = t.stages[t.idx][1]
+            dt = min(dt, rem / rate(t) if rem > 0 else 0.0)
+        if i < len(pending):
+            dt = min(dt, pending[i].arrival - now)
+        dt = max(dt, 0.0)
+
+        # advance
+        for t in active:
+            r = rate(t)
+            res_name, rem = t.stages[t.idx]
+            t.stages[t.idx] = (res_name, rem - r * dt)
+            if res_name == "cpu":
+                cpu_busy[t.req.node_id] += dt  # slot held through scan+compute
+        now += dt
+
+        # stage transitions / completions
+        still: List[TaskState] = []
+        freed: List[Tuple[int, str]] = []
+        for t in active:
+            while t.idx < len(t.stages) and t.stages[t.idx][1] <= EPS * max(
+                    1.0, t.req.cost.s_in):
+                t.idx += 1
+            if not t.slot_freed and t.idx > t.slot_until:
+                t.slot_freed = True
+                freed.append((t.req.node_id, t.path))
+            if t.idx >= len(t.stages):
+                t.finish = now
+                done[t.req.req_id] = t
+                if not t.slot_freed:
+                    t.slot_freed = True
+                    freed.append((t.req.node_id, t.path))
+            else:
+                still.append(t)
+        active = still
+        for n, path in freed:
+            start_assignments(arbs[n].release(path), n, now)
+
+    # ---- metrics
+    per_request = {rid: (t.path, t.start, t.finish) for rid, t in done.items()}
+    fin_q: Dict[str, float] = {}
+    adm_q: Dict[str, int] = {}
+    pb_q: Dict[str, int] = {}
+    net_q: Dict[str, float] = {}
+    net_total = 0.0
+    for t in done.values():
+        q = t.req.query_id
+        fin_q[q] = max(fin_q.get(q, 0.0), t.finish)
+        b = t.req.cost.s_out if t.path == PUSHDOWN else t.req.cost.s_in
+        net_total += b
+        net_q[q] = net_q.get(q, 0.0) + b
+        if t.path == PUSHDOWN:
+            adm_q[q] = adm_q.get(q, 0) + 1
+        else:
+            pb_q[q] = pb_q.get(q, 0) + 1
+    return SimResult(per_request, fin_q, adm_q, pb_q, net_total, net_q,
+                     cpu_busy, max(fin_q.values()) if fin_q else 0.0)

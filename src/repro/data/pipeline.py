@@ -1,0 +1,174 @@
+"""Training-data pipeline with adaptive computation pushdown.
+
+The paper's engine, pointed at an ML corpus instead of TPC-H: the training
+job declares a *corpus query* — quality/domain filters (selection), the
+token columns it needs (projection), sequence packing (selection bitmap
+over document slots), and shuffle-to-DP-rank (distributed data shuffle).
+Each corpus partition becomes one pushdown request; the same Arbitrator
+(Algorithm 1) decides per partition whether the storage host executes the
+query or pushes raw data back to the accelerator side, where the identical
+operators run as Pallas kernels (predicate_bitmap / bitmap_apply /
+hash_partition).
+
+Shuffle-to-rank is the ingest-side form of §4.2's shuffle pushdown: the
+storage host hash-partitions *documents* by destination DP rank before the
+feed, so the batch arrives microbatched as (accum, mb, S) with mb already
+rank-aligned — the in-mesh redistribution all-to-all is gone from the
+input path (see repro.launch.steps' batch layout).
+
+Everything is deterministic in (seed, step): a restart resumes the stream
+exactly (the checkpoint stores only the step counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import RequestCost, StorageResources
+from repro.core.simulator import (MODE_ADAPTIVE, SimRequest, SimResult,
+                                  simulate)
+from repro.queryproc import operators as ops
+from repro.queryproc.expressions import Col, Expr, evaluate
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusQuery:
+    """What the trainer asks of the corpus (the pushable plan)."""
+    min_quality: float = 0.3
+    domains: Optional[Tuple[int, ...]] = None
+    seq_len: int = 1024
+    global_batch: int = 8
+    accum: int = 1
+    dp_ranks: int = 1
+
+    def predicate(self) -> Expr:
+        p: Expr = Col("quality") >= self.min_quality
+        if self.domains is not None:
+            p = p & Col("domain").isin(self.domains)
+        return p
+
+
+@dataclasses.dataclass
+class CorpusPartition:
+    part_id: int
+    host: int
+    tokens: np.ndarray    # (docs, doc_len) int32
+    quality: np.ndarray   # (docs,) f32
+    domain: np.ndarray    # (docs,) int32
+    doc_id: np.ndarray    # (docs,) int64 (stable global ids)
+
+
+def synth_corpus(num_partitions: int = 8, docs_per_part: int = 256,
+                 doc_len: int = 512, vocab: int = 32000, hosts: int = 2,
+                 seed: int = 0) -> List[CorpusPartition]:
+    rng = np.random.default_rng(seed)
+    parts = []
+    for p in range(num_partitions):
+        parts.append(CorpusPartition(
+            part_id=p, host=p % hosts,
+            tokens=rng.integers(1, vocab, (docs_per_part, doc_len),
+                                dtype=np.int32),
+            quality=rng.random(docs_per_part).astype(np.float32),
+            domain=rng.integers(0, 8, docs_per_part, dtype=np.int32),
+            doc_id=(np.arange(docs_per_part, dtype=np.int64)
+                    + p * docs_per_part)))
+    return parts
+
+
+class PushdownDataPipeline:
+    """Iterator of rank-aligned microbatched token batches."""
+
+    def __init__(self, corpus: List[CorpusPartition], query: CorpusQuery,
+                 res: StorageResources = StorageResources(),
+                 mode: str = MODE_ADAPTIVE, seed: int = 0):
+        self.corpus = corpus
+        self.query = query
+        self.res = res
+        self.mode = mode
+        self.seed = seed
+        self.last_sim: Optional[SimResult] = None
+        self._stream = self._build_stream()
+
+    # ------------------------------------------------ the pushdown query
+    def _partition_cost(self, part: CorpusPartition) -> RequestCost:
+        raw = part.tokens.nbytes + part.quality.nbytes + part.domain.nbytes
+        sel = float(np.clip(1.0 - self.query.min_quality, 0.01, 1.0))
+        if self.query.domains is not None:
+            sel *= len(self.query.domains) / 8.0
+        return RequestCost(s_in=raw, s_out=int(raw * sel) + 64,
+                           compute_in=raw)
+
+    def _run_query(self, part: CorpusPartition
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Execute the corpus query on one partition (either side runs the
+        same operators -> identical batches regardless of the decision)."""
+        cols = {"quality": part.quality, "domain": part.domain}
+        mask = evaluate(self.query.predicate(),
+                        type("T", (), {"cols": cols})())
+        words = ops.pack_bitmap(mask)                      # selection bitmap
+        keep = ops.unpack_bitmap(words, len(mask))
+        toks = part.tokens[keep]
+        ranks = ops.hash_partition_ids(part.doc_id[keep].astype(np.int64),
+                                       self.query.dp_ranks)  # shuffle-to-rank
+        return toks, ranks
+
+    def _build_stream(self) -> Iterator[Dict[str, np.ndarray]]:
+        q = self.query
+        # arbitrate all partition requests once per epoch (they re-arrive
+        # every epoch; decisions adapt to storage_power)
+        reqs = [SimRequest(p.part_id, p.host, "corpus",
+                           self._partition_cost(p)) for p in self.corpus]
+        self.last_sim = simulate(reqs, self.res, self.mode)
+
+        per_rank: List[List[np.ndarray]] = [[] for _ in range(q.dp_ranks)]
+        rng = np.random.default_rng(self.seed)
+        epoch = 0
+        order = rng.permutation(len(self.corpus))
+        while True:
+            for pi in order:
+                toks, ranks = self._run_query(self.corpus[pi])
+                for r in range(q.dp_ranks):
+                    rt = toks[ranks == r]
+                    if len(rt):
+                        per_rank[r].append(rt.reshape(-1))
+                yield from self._drain(per_rank)
+            epoch += 1
+            order = rng.permutation(len(self.corpus))
+
+    def _drain(self, per_rank) -> Iterator[Dict[str, np.ndarray]]:
+        """Pack per-rank token streams into (accum, mb, S) batches."""
+        q = self.query
+        mb = q.global_batch // q.accum
+        rows_per_rank = max(1, mb // q.dp_ranks)
+        need = q.seq_len * rows_per_rank * q.accum
+        while all(sum(map(len, s)) >= need for s in per_rank):
+            rank_rows = []
+            for r in range(q.dp_ranks):
+                buf = np.concatenate(per_rank[r]) if len(per_rank[r]) > 1 \
+                    else per_rank[r][0]
+                take, rest = buf[:need], buf[need:]
+                per_rank[r] = [rest] if len(rest) else []
+                rank_rows.append(take.reshape(q.accum, rows_per_rank,
+                                              q.seq_len))
+            # (accum, mb, S): microbatch dim = concat over ranks — matches
+            # the DP-sharded batch layout of launch/steps
+            batch = np.concatenate(rank_rows, axis=1)
+            yield {"tokens": batch}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        return next(self._stream)
+
+    # ------------------------------------------------------------ metrics
+    def stats(self) -> Dict[str, float]:
+        sim = self.last_sim
+        if sim is None:
+            return {}
+        return {"admitted": float(sim.admitted()),
+                "pushed_back": float(sum(sim.pushed_back_by_query.values())),
+                "ingest_makespan_s": sim.makespan,
+                "ingest_net_bytes": sim.net_bytes}

@@ -1,0 +1,72 @@
+"""Logical activation-sharding constraints.
+
+Model code is mesh-agnostic: it annotates activations with *logical* axis
+names via ``cs(x, "batch", "act_seq", "heads", None)``. When a mesh+rules
+context is active (set by ``repro.launch.steps`` while tracing a step),
+the names resolve through the same rule table as the parameters and become
+``with_sharding_constraint``; otherwise ``cs`` is a no-op (smoke tests,
+single-device runs).
+
+Why this exists: FSDP shards the *contracting* dim of every weight, so
+without activation anchors GSPMD tends to resolve the batch-vs-contracting
+conflict by replicating attention heads / MLP hidden activations — measured
+~7x per-layer FLOP inflation on the 16x16 mesh (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+
+# NOTE: repro.distributed.sharding is imported lazily inside cs() —
+# model modules import this file, and sharding.py imports the model
+# param helpers (cycle otherwise).
+
+_ACTIVE = contextvars.ContextVar("repro_act_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules=None):
+    if rules is None:
+        from repro.distributed import sharding as shd
+        rules = shd.BASELINE_RULES
+    tok = _ACTIVE.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active() -> bool:
+    return _ACTIVE.get() is not None
+
+
+def cs(x: jax.Array, *names):
+    """Constrain ``x``'s dims to the mesh axes the logical ``names`` map to
+    (per-dim divisibility-checked; unmapped dims replicate)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    from repro.distributed import sharding as shd
+    mesh, rules = ctx
+    spec = shd.spec_to_pspec(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def cs_like(x: jax.Array, sharding):
+    """Constrain to an explicit NamedSharding (e.g. grads -> param layout)."""
+    if _ACTIVE.get() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the active context (1 when inactive/absent).
+    Lets model code make divisibility-dependent impl choices (§Perf)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    return mesh.shape.get(name, 1)

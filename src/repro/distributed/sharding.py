@@ -1,0 +1,168 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD via NamedSharding).
+
+Every ParamSpec in the model zoo carries *logical* axis names
+("embed", "heads", "mlp", "experts", "vocab", "batch", "kv_seq", ...).
+This module turns a spec tree into `NamedSharding`s for a concrete mesh.
+
+Baseline layout (paper-faithful "eager" distribution; the hillclimb in
+EXPERIMENTS.md §Perf iterates on these rules):
+
+- FSDP  : "embed" (the d_model dim present in every matmul weight) shards
+          over the `data` axis -> ZeRO-3-style weight/grad/opt-state sharding.
+- TP    : "heads"/"kv_heads"/"mlp"/"inner"/"experts"/"vocab" shard over
+          `model` (Megatron-style).
+- DP    : "batch" shards over (`pod`, `data`) — the pod axis is pure DP.
+- SP    : "kv_seq" (decode KV caches) shards over `model`; flash-decoding
+          style partial-softmax combines are left to GSPMD (an all-reduce of
+          (B, H, 1, hd) partials — tiny).
+
+A rule is applied *only if divisible* and only if the mesh axis is not
+already consumed by an earlier dim of the same tensor; otherwise the dim
+falls through to the next candidate axis (or replication). This is what
+lets one rule table serve kv_heads=1 (recurrentgemma) through kv_heads=20
+(qwen1.5) without per-arch special cases.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import params as Pm
+
+# logical axis -> ordered candidate mesh axes. Each candidate is either a
+# mesh-axis name or a tuple of names (sharded over their product).
+Rules = Dict[Optional[str], Tuple]
+
+BASELINE_RULES: Rules = {
+    "embed": ("data",),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "inner2": (),          # second dim of square recurrent mats: replicated
+    "layers": (),          # scanned dim: never sharded
+    "batch": (("pod", "data"), "data"),
+    "kv_seq": ("model",),
+    "kv_hd": (),           # kv head_dim: sharded only when kv_heads can't be
+    "act_seq": (),         # residual-stream sequence dim (SP rules enable)
+    "attn_seq": ("model",),  # context-parallel fallback inside attention when
+                             # the head count doesn't divide the model axis
+    None: (),
+}
+
+# Serving layout: NO FSDP — per-token weight all-gathers would dominate
+# decode (measured 16.8 GB/step on deepseek-67b decode_32k under the train
+# rules). Weights shard over `model` on heads/mlp/vocab, and over kv head_dim
+# when the kv-head count doesn't divide the axis; `data` carries the batch
+# and the KV-cache; `kv_seq` takes `model`.
+INFERENCE_RULES: Rules = dict(
+    BASELINE_RULES,
+    embed=(),
+    kv_hd=("model",),
+    # 2D expert sharding: experts take `model`, the ffn dim falls through to
+    # `data`. Contractions against the (E, C, d) dispatch buffer psum over
+    # `data` — no batch conflict, since expert compute has no batch dim.
+    mlp=("model", "data"),
+)
+
+# §Perf: sequence-parallel residual stream — activations stay sharded on
+# the seq dim over `model` between attention/MLP blocks, so backward's
+# dx reductions become reduce-scatters of bf16 shards instead of fp32
+# full-tensor all-reduces (Megatron-SP made rule-driven).
+SP_RULES: Rules = dict(BASELINE_RULES, act_seq=("model",))
+
+# Beyond-paper variant used by the §Perf hillclimb: fully-sharded states
+# (FSDP over data *and* pod) + sequence-parallel activations.
+ZERO3_POD_RULES: Rules = dict(
+    BASELINE_RULES,
+    embed=(("pod", "data"), "data"),
+    act_seq=("model",),
+)
+
+# assignment priority: TP-critical names first, then FSDP/batch, then
+# sequence fallbacks — so e.g. `attn_seq` only takes `model` when the head
+# dim couldn't (40 heads on a 16-wide axis).
+_PRIORITY = {
+    "vocab": 0, "experts": 0,
+    "heads": 1, "kv_heads": 1, "mlp": 1, "inner": 1,
+    "kv_hd": 2,
+    "embed": 3,
+    "batch": 4,
+    "kv_seq": 5, "attn_seq": 5, "act_seq": 5,
+}
+
+
+def _axis_size(mesh: Mesh, cand) -> int:
+    names = cand if isinstance(cand, tuple) else (cand,)
+    sz = 1
+    for n in names:
+        sz *= mesh.shape[n]
+    return sz
+
+
+def _cand_names(cand) -> Tuple[str, ...]:
+    return cand if isinstance(cand, tuple) else (cand,)
+
+
+def spec_to_pspec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                  mesh: Mesh, rules: Rules) -> P:
+    """Greedy assignment of mesh axes to tensor dims, in _PRIORITY order
+    (ties broken left-to-right), each mesh axis used at most once."""
+    used: set = set()
+    out = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: (_PRIORITY.get(axes[i], 9), i))
+    for i in order:
+        dim, name = shape[i], axes[i]
+        for cand in rules.get(name, ()):
+            names = _cand_names(cand)
+            if any(n not in mesh.shape for n in names):
+                continue
+            if any(n in used for n in names):
+                continue
+            if dim % _axis_size(mesh, cand) != 0 or dim == 0:
+                continue
+            out[i] = cand
+            used.update(names)
+            break
+    # trim trailing Nones (canonical PartitionSpec form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(spec_tree, mesh: Mesh, rules: Rules = BASELINE_RULES):
+    return Pm.tree_map_specs(
+        lambda s: spec_to_pspec(s.shape, s.axes, mesh, rules), spec_tree)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules = BASELINE_RULES):
+    return Pm.tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s.shape, s.axes, mesh, rules)),
+        spec_tree)
+
+
+def abstract(spec_tree, mesh: Mesh, rules: Rules = BASELINE_RULES):
+    """ShapeDtypeStruct tree with shardings attached (AOT dry-run input)."""
+    return Pm.tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, spec_to_pspec(s.shape, s.axes, mesh, rules))),
+        spec_tree)
+
+
+def batch_pspec(mesh: Mesh, rules: Rules = BASELINE_RULES) -> P:
+    """PartitionSpec entry for a batch dim under these rules."""
+    return spec_to_pspec((1 << 30,), ("batch",), mesh, rules)
+
+
+def batch_axes(mesh: Mesh, rules: Rules = BASELINE_RULES) -> Tuple[str, ...]:
+    ps = batch_pspec(mesh, rules)
+    if not ps:
+        return ()
+    e = ps[0]
+    return e if isinstance(e, tuple) else (e,)

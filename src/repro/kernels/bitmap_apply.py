@@ -1,0 +1,51 @@
+"""Apply a packed selection bitmap to a column (Pallas TPU).
+
+The compute-layer half of selection-bitmap pushdown (paper §4.2, Figs 3/4):
+a bitmap shipped across the network filters a *device-cached* column.
+
+TPU adaptation: late materialization — the output keeps the input's shape
+with dropped rows zeroed, plus a per-block popcount partial sum. Row
+compaction is a data-dependent scatter (a sort on TPU) and is deliberately
+NOT done here; downstream consumers either work on masked form directly
+(aggregations) or compact once on the host. Bits unpack with a broadcasted
+variable-shift against the lane index — branch-free VREG bit twiddling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192
+
+
+def _kernel(block: int, words_ref, col_ref, out_ref, cnt_ref):
+    words = words_ref[...]                                  # (block/32,) u32
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)       # (block/32, 32)
+    keep = bits.reshape(-1).astype(bool)                    # (block,)
+    col = col_ref[...]
+    out_ref[...] = jnp.where(keep, col, jnp.zeros((), col.dtype))
+    cnt_ref[...] = bits.sum(dtype=jnp.int32).reshape(1)
+
+
+def bitmap_apply(words: jax.Array, col: jax.Array,
+                 block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """words: (R/32,) uint32; col: (R,). R % block == 0.
+    Returns (masked column (R,), per-block counts (R/block,) int32)."""
+    R = col.shape[0]
+    assert R % block == 0 and words.shape[0] == R // 32
+    grid = (R // block,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block // 32,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((R,), col.dtype),
+                   jax.ShapeDtypeStruct((R // block,), jnp.int32)],
+        interpret=interpret,
+    )(words, col)

@@ -1,0 +1,97 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle the unglamorous edges: pad to block multiples (padding rows carry a
+poison group id / always-false predicate so results are exact), dtype
+guards, and un-padding. ``interpret=True`` everywhere on this CPU
+container; on a real TPU the same calls lower natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitmap_apply as _ba
+from repro.kernels import grouped_agg as _ga
+from repro.kernels import hash_partition as _hp
+from repro.kernels import predicate_bitmap as _pb
+from repro.kernels.predicate_bitmap import compile_predicate  # noqa: F401 re-export
+
+DEFAULT_BLOCK = 8192
+
+
+def _pad_to(x: jax.Array, mult: int, fill=0):
+    R = x.shape[0]
+    pad = (-R) % mult
+    if pad == 0:
+        return x, R
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)]), R
+
+
+def predicate_bitmap(cols: Dict[str, jax.Array], pred_fn: Callable,
+                     block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Packed (ceil(R/32),) uint32 bitmap of pred_fn over the columns.
+    Padding rows evaluate through pred_fn but are masked off the result."""
+    R = next(iter(cols.values())).shape[0]
+    padded = {}
+    for k, v in cols.items():
+        assert v.shape == (R,), (k, v.shape)
+        padded[k], _ = _pad_to(v.astype(jnp.float32) if v.dtype == jnp.float64
+                               else v, block)
+    words = _pb.predicate_bitmap(padded, pred_fn, block, interpret)
+    # mask bits beyond R (padding rows may satisfy the predicate)
+    n_words = -(-R // 32)
+    words = words[:max(n_words, 1)] if R else words[:0]
+    tail_bits = R - 32 * (n_words - 1)
+    if R and tail_bits < 32:
+        mask = jnp.uint32((1 << tail_bits) - 1)
+        words = words.at[-1].set(words[-1] & mask)
+    return words
+
+
+def bitmap_apply(words: jax.Array, col: jax.Array,
+                 block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """(masked col (R,), total selected count). Accepts any R."""
+    col_p, R = _pad_to(col, block)
+    words_p, _ = _pad_to(words, col_p.shape[0] // 32)
+    masked, counts = _ba.bitmap_apply(words_p, col_p, block, interpret)
+    return masked[:R], counts.sum()
+
+
+def grouped_agg(ids: jax.Array, values: jax.Array, num_groups: int,
+                block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """(sums (G,) f32, counts (G,) int32); padding rows get id == G and an
+    extra scratch group that is dropped."""
+    ids_p, R = _pad_to(ids.astype(jnp.int32), block, fill=num_groups)
+    vals_p, _ = _pad_to(values.astype(jnp.float32), block)
+    sums, counts = _ga.grouped_agg(ids_p, vals_p, num_groups + 1, block,
+                                   interpret)
+    return sums[:num_groups], counts[:num_groups]
+
+
+def hash_partition(keys: jax.Array, num_parts: int,
+                   block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """(pids (R,) int32, hist (P,) int32). Padding keys hash somewhere but
+    are excluded from the histogram by subtraction."""
+    keys_p, R = _pad_to(keys, block)
+    pids, hist = _hp.hash_partition(keys_p, num_parts, block, interpret)
+    hist = hist.sum(axis=0)
+    pad = keys_p.shape[0] - R
+    if pad:
+        pad_pids = pids[R:]
+        pad_hist = (pad_pids[:, None] == jnp.arange(num_parts)[None, :]
+                    ).sum(axis=0, dtype=jnp.int32)
+        hist = hist - pad_hist
+    return pids[:R], hist
+
+
+# ------------------------------------------------------- numpy conveniences
+def predicate_bitmap_np(cols: Dict[str, np.ndarray], expr) -> np.ndarray:
+    """Expr tree + numpy columns -> packed bitmap as numpy (storage interop)."""
+    fn = compile_predicate(expr)
+    jcols = {k: jnp.asarray(v.astype(np.float32) if v.dtype == np.float64
+                            else v) for k, v in cols.items()}
+    return np.asarray(predicate_bitmap(jcols, fn))

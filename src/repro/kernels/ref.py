@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the storage layer's numpy operators (repro.queryproc.operators)
+1:1 — tests cross-check kernel == ref == numpy so the pushed-back on-device
+operators provably compute the same thing the storage layer would have.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KNUTH = jnp.uint32(2654435761)
+
+
+def pack_bitmap(mask: jnp.ndarray) -> jnp.ndarray:
+    """(R,) bool -> (R/32,) uint32, little-endian bit order. R % 32 == 0."""
+    m = mask.reshape(-1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (m * weights).sum(axis=1, dtype=jnp.uint32)
+
+
+def unpack_bitmap(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    bits = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+def predicate_bitmap(cols: dict, pred_fn) -> jnp.ndarray:
+    """Evaluate pred_fn over full columns, emit a packed bitmap."""
+    return pack_bitmap(pred_fn(cols))
+
+
+def bitmap_apply(words: jnp.ndarray, col: jnp.ndarray, block: int = 8192):
+    """Late materialization: masked column (zeros at dropped rows) plus a
+    per-block selected-row count. col: (R,), R % block == 0."""
+    keep = unpack_bitmap(words, col.shape[0])
+    masked = jnp.where(keep, col, jnp.zeros((), col.dtype))
+    counts = keep.reshape(-1, block).sum(axis=1, dtype=jnp.int32)
+    return masked, counts
+
+
+def grouped_agg(ids: jnp.ndarray, values: jnp.ndarray, num_groups: int):
+    """(R,) int32 ids in [0, G), (R,) f32 values -> (sums (G,), counts (G,))."""
+    onehot = (ids[:, None] == jnp.arange(num_groups)[None, :])
+    sums = (onehot * values[:, None].astype(jnp.float32)).sum(axis=0)
+    counts = onehot.sum(axis=0, dtype=jnp.int32)
+    return sums, counts
+
+
+def hash_partition(keys: jnp.ndarray, num_parts: int, block: int = 8192):
+    """Knuth multiplicative hash -> (pids (R,) int32, hist (R/block, P))."""
+    h = keys.astype(jnp.uint32) * KNUTH
+    pid = ((h >> jnp.uint32(16)) % jnp.uint32(num_parts)).astype(jnp.int32)
+    onehot = (pid.reshape(-1, block)[:, :, None]
+              == jnp.arange(num_parts)[None, None, :])
+    hist = onehot.sum(axis=1, dtype=jnp.int32)
+    return pid, hist

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPE_ORDER, get_config, get_shape,  # noqa: E402
+                           shape_applicable)
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import analysis, steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_tag  # noqa: E402
+from repro.models import api, flags  # noqa: E402
+
+"""Multi-pod AOT dry-run.
+
+For every (arch x shape x mesh) cell:
+
+1. FULL-depth compile (scans rolled): proves the sharding config is coherent
+   and that it fits — ``memory_analysis()`` per device; collective schedule
+   recorded from the post-SPMD HLO.
+2. Shallow COST pass (scans unrolled, U in {1,2}; train cells also sweep
+   grad-accum A in {1,2}): ``cost_analysis()`` FLOPs/bytes and collective
+   bytes, extrapolated (bi)linearly to full depth/accum — exact for
+   depth-homogeneous stacks; see repro.launch.analysis.
+
+Results land in reports/dryrun/<mesh>/<arch>__<shape>.json (resumable).
+"""
+
+RULES = {"baseline": None,  # kind-appropriate default (see steps.default_rules)
+         "zero3": shd.ZERO3_POD_RULES}
+
+
+def _lower_compile(cfg, shape, mesh, rules, *, accum=None,
+                   variant="baseline"):
+    if accum is not None:
+        steps.ACCUM_OVERRIDES[(cfg.name, shape.name)] = accum
+        if variant != "baseline":
+            steps.VARIANTS[variant].setdefault("accum", {})[
+                (cfg.name, shape.name)] = accum
+    try:
+        bundle = steps.build(cfg, shape, mesh, rules, variant=variant)
+        with mesh:
+            lowered = bundle.lower()
+            compiled = lowered.compile()
+        return compiled
+    finally:
+        if accum is not None:
+            steps.ACCUM_OVERRIDES.pop((cfg.name, shape.name), None)
+
+
+def run_cell(arch: str, shape_id: str, mesh, rules_name: str,
+             *, cost_pass: bool = True, full_pass: bool = True,
+             variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_id)
+    rules = RULES[rules_name]
+    if rules is not None and shape.kind == "decode":
+        rules = dict(rules, embed=shd.INFERENCE_RULES["embed"],
+                     kv_hd=shd.INFERENCE_RULES["kv_hd"])
+    chips = mesh_chips(mesh)
+    cpp = 256 if "pod" in mesh.shape else chips  # chips per pod
+    rec: dict = {
+        "arch": arch, "shape": shape_id, "mesh": mesh_tag(mesh),
+        "rules": rules_name, "variant": variant, "chips": chips,
+        "params_total": api.count_params(cfg),
+        "params_active": api.count_params(cfg, active_only=True),
+    }
+    t0 = time.time()
+
+    if full_pass:
+        compiled = _lower_compile(cfg, shape, mesh, rules, variant=variant)
+        rec["memory"] = analysis.memory_summary(compiled)
+        hlo = compiled.as_text()
+        rec["memory"]["cpu_upcast_bytes"] = analysis.cpu_upcast_bytes(hlo)
+        ops = analysis.parse_collectives(hlo)
+        rec["collectives_rolled"] = [dataclasses.asdict(o) for o in ops]
+        rec["t_full_compile_s"] = round(time.time() - t0, 1)
+        del compiled, hlo
+
+    if cost_pass:
+        U = api.scan_units(cfg)
+        accums = (1, 2) if shape.kind == "train" else (None,)
+        samples = {}
+        with flags.unroll_scans():
+            for u in (1, 2):
+                for a in accums:
+                    c = _lower_compile(api.with_depth(cfg, u), shape, mesh,
+                                       rules, accum=a, variant=variant)
+                    cs = analysis.cost_summary(c)
+                    coll = analysis.collective_bytes(
+                        analysis.parse_collectives(c.as_text()), cpp)
+                    samples[(u, a)] = {**cs, "ici": coll["ici"],
+                                       "dcn": coll["dcn"],
+                                       "ici_eq": coll["ici_bf16eq"],
+                                       "dcn_eq": coll["dcn_bf16eq"]}
+                    del c
+
+        def extrap_u(key, a):
+            """Linear in scan depth at fixed accumulation."""
+            return analysis.extrapolate(samples[(1, a)][key],
+                                        samples[(2, a)][key], U)
+
+        def extrap(key, bilinear=False):
+            if accums == (None,):
+                return extrap_u(key, None)
+            if not bilinear:
+                # total FLOPs/bytes are accum-invariant (the global batch is
+                # fixed; only its slicing changes) — extrapolate over depth
+                # at A=2 and keep. Bilinear blows up noise by (U-1)(A-1).
+                return extrap_u(key, 2)
+            # collectives DO scale with accum (per-microbatch FSDP gathers):
+            # bilinear with non-negative increments
+            A = steps.accum_for(cfg, shape)
+            f11, f12 = samples[(1, 1)][key], samples[(2, 1)][key]
+            f21, f22 = samples[(1, 2)][key], samples[(2, 2)][key]
+            du = max(0.0, f12 - f11)
+            da = max(0.0, f21 - f11)
+            dau = max(0.0, f22 - f21 - f12 + f11)
+            return f11 + (U - 1) * du + (A - 1) * da + (U - 1) * (A - 1) * dau
+
+        flops_dev = extrap("flops")
+        bytes_dev = extrap("bytes")
+        coll = {"ici": max(0.0, extrap("ici", bilinear=True)),
+                "dcn": max(0.0, extrap("dcn", bilinear=True))}
+        coll["total"] = coll["ici"] + coll["dcn"]
+        coll_eq = {"ici": max(0.0, extrap("ici_eq", bilinear=True)),
+                   "dcn": max(0.0, extrap("dcn_eq", bilinear=True))}
+
+        n_active = api.count_matmul_params(cfg, active_only=True)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        factor = 6 if shape.kind == "train" else 2
+        model_flops = factor * n_active * tokens
+
+        rl = analysis.roofline(flops_dev, bytes_dev, coll, model_flops, chips)
+        rec["roofline"] = {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dcn_s": rl.dcn_s,
+            "dominant": rl.dominant, "step_time_s": rl.step_time_s,
+            "mfu": rl.mfu, "useful_frac": rl.useful_frac,
+            "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+            "coll_ici_bytes": coll["ici"], "coll_dcn_bytes": coll["dcn"],
+            "coll_ici_bf16eq": coll_eq["ici"], "coll_dcn_bf16eq": coll_eq["dcn"],
+            "collective_bf16eq_s": coll_eq["ici"] / 50e9 + coll_eq["dcn"] / 25e9,
+            "model_flops": model_flops, "scan_units": U,
+        }
+        attach_adjusted_roofline(rec, cfg, shape, mesh, variant=variant)
+    rec["t_total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def attach_adjusted_roofline(rec: dict, cfg, shape, mesh=None,
+                             mesh_shape=None, variant="baseline"):
+    """Add the analytic-TPU-memory roofline terms (memory_adj_s, mfu_adj,
+    dominant_adj) to a cell record. Pure post-processing — no compile."""
+    from repro.launch.mesh import V5E
+    from repro.models import params as Pm
+
+    rl = rec.get("roofline")
+    if not rl:
+        return
+    ms = mesh_shape or dict(mesh.shape)
+    chips = rec["chips"]
+    params_bytes = Pm.bytes_of(api.init_specs(cfg))
+    cache_dev = 0.0
+    if shape.kind == "decode":
+        cache_dev = Pm.bytes_of(
+            api.cache_specs(cfg, shape.global_batch, shape.seq_len)) / chips
+    mem_adj = analysis.analytic_memory_bytes(
+        cfg, shape, ms, steps.accum_for(cfg, shape, variant), shape.kind,
+        params_bytes, cache_dev,
+        remat=steps.VARIANTS.get(variant, {}).get("remat", True) is True)
+    mem_adj_s = mem_adj / V5E.hbm_bw
+    coll_total = rl.get("collective_bf16eq_s",
+                        rl["collective_s"] + rl["dcn_s"])
+    step_adj = max(rl["compute_s"], mem_adj_s, coll_total)
+    rl["memory_adj_bytes"] = mem_adj
+    rl["memory_adj_s"] = mem_adj_s
+    rl["step_time_adj_s"] = step_adj
+    rl["mfu_adj"] = rl["model_flops"] / (
+        chips * V5E.peak_flops_bf16 * max(step_adj, 1e-12))
+    terms = {"compute": rl["compute_s"], "memory": mem_adj_s,
+             "collective": coll_total}
+    rl["dominant_adj"] = max(terms, key=terms.get)
+
+
+def cells(archs, shapes):
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            ok, why = shape_applicable(cfg, get_shape(s))
+            yield a, s, ok, why
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="baseline", choices=list(RULES))
+    ap.add_argument("--variant", default="baseline",
+                    choices=list(steps.VARIANTS))
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the shallow cost pass (multi-pod prove-out)")
+    ap.add_argument("--no-full", action="store_true",
+                    help="skip the full-depth compile (cost pass only)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = SHAPE_ORDER if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = mesh_tag(mesh)
+        suffix = "" if args.rules == "baseline" else f"__{args.rules}"
+        if args.variant != "baseline":
+            suffix += f"__{args.variant}"
+        outdir = Path(args.out) / (tag + suffix)
+        outdir.mkdir(parents=True, exist_ok=True)
+        for arch, shape_id, ok, why in cells(archs, shapes):
+            path = outdir / f"{arch}__{shape_id}.json"
+            if path.exists() and not args.force:
+                print(f"[skip cached] {tag} {arch} {shape_id}")
+                continue
+            if not ok:
+                path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape_id, "mesh": tag,
+                     "status": "skipped", "reason": why}, indent=1))
+                print(f"[skip n/a]    {tag} {arch} {shape_id}: {why}")
+                continue
+            print(f"[cell] {tag} {arch} {shape_id} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape_id, mesh, args.rules,
+                               cost_pass=not args.no_cost,
+                               full_pass=not args.no_full,
+                               variant=args.variant)
+                rec["status"] = "ok"
+            except Exception as e:  # noqa: BLE001 — record, keep sweeping
+                rec = {"arch": arch, "shape": shape_id, "mesh": tag,
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                failures.append((tag, arch, shape_id, repr(e)))
+                print(f"  ERROR: {e!r}", flush=True)
+            path.write_text(json.dumps(rec, indent=1))
+            if rec.get("roofline"):
+                r = rec["roofline"]
+                print(f"  dominant={r['dominant']} step={r['step_time_s']:.4f}s "
+                      f"mfu={r['mfu']:.3f} useful={r['useful_frac']:.2f}", flush=True)
+            if rec.get("memory"):
+                m = rec["memory"]
+                hbm = (m["argument_bytes"] + m["output_bytes"] + m["temp_bytes"]
+                       - m["alias_bytes"])
+                # upcast parse can over-count (fusion aliases): clamp to temps
+                adj = hbm - min(m.get("cpu_upcast_bytes", 0), m["temp_bytes"])
+                print(f"  mem/device ~{hbm/2**30:.2f} GiB raw "
+                      f"(args {m['argument_bytes']/2**30:.2f} + out "
+                      f"{m['output_bytes']/2**30:.2f} + temp "
+                      f"{m['temp_bytes']/2**30:.2f} - alias "
+                      f"{m['alias_bytes']/2**30:.2f}); "
+                      f"~{adj/2**30:.2f} GiB excl. CPU bf16->f32 copies",
+                      flush=True)
+
+    print(f"\n{len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", *f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

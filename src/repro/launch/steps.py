@@ -1,0 +1,311 @@
+"""Step builders: one jit-able function per (arch x shape) cell.
+
+- train_4k    -> ``train_step(params, opt, batch)``  (grad-accum scan + AdamW)
+- prefill_32k -> ``prefill_step(params, batch)``     (forward + KV collection)
+- decode_*    -> ``serve_step(params, cache, pos, token)`` (one token)
+
+Each builder also produces the *abstract* argument tree (ShapeDtypeStruct +
+NamedSharding) so the dry-run can ``jit(fn).lower(*abstract).compile()``
+without allocating anything.
+
+Batch layout: train batches arrive microbatched as ``(accum, mb, S)`` with
+``mb`` sharded over the DP axes — every microbatch spans the full mesh, so
+the grad-accumulation scan is local (no per-step resharding). The host data
+pipeline (repro.data) delivers exactly this layout; that is the shuffle-
+pushdown integration point (partitions are routed to their DP rank at the
+storage layer, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.distributed.constraints import activation_sharding, cs_like
+from repro.models import api, flags
+from repro.models import params as Pm
+from repro.train import optimizer as opt_lib
+
+# per-(arch, shape) grad-accumulation overrides (memory control; see
+# EXPERIMENTS.md §Dry-run for the per-cell HBM numbers these were tuned on)
+ACCUM_OVERRIDES: Dict[Tuple[str, str], int] = {
+    ("deepseek-67b", "train_4k"): 16,
+    ("llama4-scout-17b-a16e", "train_4k"): 16,
+    ("qwen3-14b", "train_4k"): 8,
+}
+
+# ---------------------------------------------------------------- variants
+# "baseline": the paper-faithful eager distribution.
+# "opt": the §Perf hillclimb — lower grad-accum (FSDP weight gathers scale
+#        with accum; HBM headroom allows it), selective remat (skip the
+#        full-forward replay in backward), shard_map EP MoE (the in-mesh
+#        shuffle-pushdown dispatch), expert-dim padding to the TP axis.
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "opt": {
+        "accum": {("deepseek-67b", "train_4k"): 2,
+                  ("llama4-scout-17b-a16e", "train_4k"): 4,
+                  ("qwen2-moe-a2.7b", "train_4k"): 4,
+                  ("qwen3-14b", "train_4k"): 4,
+                  ("qwen1.5-4b", "train_4k"): 4},
+        "remat": "dots",
+        "moe": "ep",
+        "attn": "flat",
+        # SP pays off only when the head count doesn't divide the TP axis
+        # (otherwise `heads` wins `model` and the seq-sharded residual is
+        # re-gathered every sublayer -- measured 4x collective blowup on
+        # deepseek-67b, §Perf iter 2)
+        "sp_archs": ("llama4-scout-17b-a16e",),
+        "expert_pad": {"qwen2-moe-a2.7b": 4},
+    },
+}
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    import dataclasses as _dc
+    pad = VARIANTS.get(variant, {}).get("expert_pad", {}).get(cfg.name, 0)
+    return _dc.replace(cfg, expert_pad=pad) if pad else cfg
+
+
+def accum_for(cfg: ModelConfig, shape: ShapeSpec,
+              variant: str = "baseline") -> int:
+    v = VARIANTS.get(variant, {}).get("accum", {})
+    if (cfg.name, shape.name) in v:
+        return v[(cfg.name, shape.name)]
+    return ACCUM_OVERRIDES.get((cfg.name, shape.name), shape.accum)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run / driver needs for one cell."""
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+    def lower(self):
+        return jax.jit(self.fn, donate_argnums=self.donate_argnums,
+                       out_shardings=self.out_shardings).lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------- helpers
+def _named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_abstract(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, rules,
+                    microbatched: bool, variant: str = "baseline"
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract input batch with DP sharding (+ optional accum leading dim)."""
+    specs = api.input_specs(cfg, shape)
+    bax = shd.batch_pspec(mesh, rules)
+    dp = bax[0] if bax else None
+    acc = accum_for(cfg, shape, variant)
+    dp_n = _dp_size(mesh, rules)
+    B = shape.global_batch
+    # every microbatch must span the full DP axis (mb % dp == 0); larger DP
+    # meshes proportionally lower the accumulation depth
+    while acc > 1 and (B % acc or (B // acc) % dp_n):
+        acc //= 2
+
+    def mk(s: jax.ShapeDtypeStruct):
+        if s.ndim == 0:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=_named(mesh))
+        shp, spec = s.shape, [dp] + [None] * (s.ndim - 1)
+        if microbatched:
+            assert shp[0] % acc == 0, (cfg.name, shape.name, shp, acc)
+            shp = (acc, shp[0] // acc) + shp[1:]
+            spec = [None] + spec
+        return jax.ShapeDtypeStruct(shp, s.dtype, sharding=_named(mesh, *spec))
+
+    return {k: mk(v) for k, v in specs.items()}
+
+
+def _state_abstract(cfg: ModelConfig, mesh: Mesh, rules):
+    pspecs = api.init_specs(cfg)
+    params = shd.abstract(pspecs, mesh, rules)
+    opt = jax.tree_util.tree_map(
+        lambda x: x, opt_lib.init_specs(pspecs))  # OptState of ParamSpec
+    opt_abs = opt_lib.OptState(
+        m=shd.abstract(opt.m, mesh, rules),
+        v=shd.abstract(opt.v, mesh, rules),
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=_named(mesh)))
+    return params, opt_abs
+
+
+def _shardings_of(tree):
+    return jax.tree.map(lambda x: x.sharding, tree)
+
+
+# ---------------------------------------------------------------- train
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+                    remat=True, param_shardings=None, variant: str = "baseline"):
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    v = VARIANTS.get(variant, {})
+    remat = v.get("remat", remat)
+    moe = v.get("moe", "dense")
+    attn = v.get("attn", "grouped")
+
+    def train_step(params, opt, batch):
+        acc = next(iter(batch.values())).shape[0]
+
+        def mb_loss(p, mb):
+            with flags.moe_impl(moe), flags.attn_impl(attn):
+                return api.loss_fn(p, cfg, mb, remat=remat)
+
+        def pin(tree):  # keep grad accumulators in the params' layout
+            if param_shardings is None:
+                return tree
+            return jax.tree.map(cs_like, tree, param_shardings)
+
+        def body(gsum, mb):
+            loss, g = jax.value_and_grad(mb_loss)(params, mb)
+            gsum = pin(jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g))
+            return gsum, loss
+
+        zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        gsum, losses = flags.maybe_scan(body, zeros, batch)
+        grads = jax.tree.map(lambda g: g / acc, gsum)
+        params, opt, stats = opt_lib.apply(opt_cfg, params, opt, grads)
+        metrics = {"loss": losses.mean(), **stats}
+        return params, opt, metrics
+
+    return train_step
+
+
+def _with_act_ctx(fn, mesh, rules):
+    def wrapped(*args):
+        with activation_sharding(mesh, rules):
+            return fn(*args)
+    return wrapped
+
+
+def build_train(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                rules=shd.BASELINE_RULES,
+                opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+                variant: str = "baseline") -> StepBundle:
+    cfg = apply_variant(cfg, variant)
+    if cfg.name in VARIANTS.get(variant, {}).get("sp_archs", ()):
+        rules = shd.SP_RULES
+    params, opt = _state_abstract(cfg, mesh, rules)
+    batch = _batch_abstract(cfg, shape, mesh, rules, microbatched=True,
+                            variant=variant)
+    fn = _with_act_ctx(
+        make_train_step(cfg, opt_cfg, param_shardings=_shardings_of(params),
+                        variant=variant),
+        mesh, rules)
+    out_sh = (_shardings_of(params), _shardings_of(opt),
+              {"loss": _named(mesh), "grad_norm": _named(mesh), "lr": _named(mesh)})
+    return StepBundle(fn, (params, opt, batch), donate_argnums=(0, 1),
+                      out_shardings=out_sh,
+                      meta={"kind": "train", "variant": variant,
+                            "accum": accum_for(cfg, shape, variant)})
+
+
+# ---------------------------------------------------------------- prefill
+def _infer_out_shardings(out_shapes, mesh: Mesh, rules, B: int, S: int):
+    """Heuristic shardings for the raw prefill outputs: the first dim equal
+    to the global batch -> DP axes; the first long sequence dim -> `model`
+    (SP). Applied leaf-wise over whatever cache layout the family emits."""
+    bax = shd.batch_pspec(mesh, rules)
+    dp = bax[0] if bax else None
+    dp_n = _dp_size(mesh, rules)
+    mdl_n = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        used_b = used_s = False
+        for i, d in enumerate(leaf.shape):
+            if not used_b and d == B and dp is not None and d % dp_n == 0:
+                spec[i] = dp
+                used_b = True
+            elif (not used_s and d == S and d >= 4096 and "model" in mesh.shape
+                  and d % mdl_n == 0):
+                spec[i] = "model"
+                used_s = True
+        return _named(mesh, *spec)
+
+    return jax.tree.map(one, out_shapes)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  rules=shd.BASELINE_RULES) -> StepBundle:
+    pspecs = api.init_specs(cfg)
+    params = shd.abstract(pspecs, mesh, rules)
+    batch = _batch_abstract(cfg, shape, mesh, rules, microbatched=False)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch, blockwise=True)
+
+    prefill_step = _with_act_ctx(prefill_step, mesh, rules)
+    out_shapes = jax.eval_shape(prefill_step, params, batch)
+    out_sh = _infer_out_shardings(out_shapes, mesh, rules,
+                                  shape.global_batch, shape.seq_len)
+    return StepBundle(prefill_step, (params, batch), donate_argnums=(),
+                      out_shardings=out_sh, meta={"kind": "prefill"})
+
+
+# ---------------------------------------------------------------- decode
+def build_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 rules=shd.BASELINE_RULES) -> StepBundle:
+    pspecs = api.init_specs(cfg)
+    params = shd.abstract(pspecs, mesh, rules)
+    cache = shd.abstract(
+        api.cache_specs(cfg, shape.global_batch, shape.seq_len), mesh, rules)
+    bax = shd.batch_pspec(mesh, rules)
+    dp = bax[0] if bax else None
+    B = shape.global_batch
+    token = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=_named(mesh, dp if B % max(1, _dp_size(mesh, rules)) == 0 else None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=_named(mesh))
+
+    def serve_step(params, cache, pos, token):
+        return api.decode_step(params, cfg, cache, pos, token)
+
+    serve_step = _with_act_ctx(serve_step, mesh, rules)
+    cache_sh = _shardings_of(cache)
+    bdp = dp if B % max(1, _dp_size(mesh, rules)) == 0 else None
+    lg = jax.eval_shape(serve_step, params, cache, pos, token)[0]
+    vmdl = ("model" if "model" in mesh.shape
+            and lg.shape[-1] % mesh.shape["model"] == 0 else None)
+    logits_sh = _named(mesh, *([bdp] + [None] * (lg.ndim - 2) + [vmdl]))
+    return StepBundle(serve_step, (params, cache, pos, token),
+                      donate_argnums=(1,),
+                      out_shardings=(logits_sh, cache_sh),
+                      meta={"kind": "decode"})
+
+
+def _dp_size(mesh: Mesh, rules) -> int:
+    ax = shd.batch_axes(mesh, rules)
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------- dispatch
+def default_rules(shape: ShapeSpec):
+    """Training uses FSDP x TP; serving must not FSDP-gather weights per
+    token, so decode defaults to the TP-only INFERENCE layout."""
+    return shd.INFERENCE_RULES if shape.kind == "decode" else shd.BASELINE_RULES
+
+
+def build(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+          rules=None, variant: str = "baseline") -> StepBundle:
+    rules = rules if rules is not None else default_rules(shape)
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, rules, variant=variant)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, rules)
+    if shape.kind == "decode":
+        return build_decode(cfg, shape, mesh, rules)
+    raise ValueError(shape.kind)

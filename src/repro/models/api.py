@@ -1,0 +1,198 @@
+"""Unified model API: one entry point per step kind, dispatched by family.
+
+- ``init_specs(cfg)``                     parameter ParamSpec tree
+- ``forward(params, cfg, batch, ...)``    -> (logits, aux, loss_mask, cache?)
+- ``loss_fn(params, cfg, batch, ...)``    next-token CE (+ MoE aux)
+- ``cache_specs / prefill / decode_step`` serving path
+- ``input_specs(cfg, shape)``             ShapeDtypeStruct stand-ins per cell
+- ``with_depth / scan_units``             depth scaling for the dry-run cost
+                                          extrapolation (see launch/dryrun.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import hybrid, mamba_model, transformer, whisper
+from repro.models import params as P
+
+_GENERIC = ("dense", "moe", "vlm")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return mamba_model
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "audio":
+        return whisper
+    return transformer
+
+
+def init_specs(cfg: ModelConfig):
+    return _mod(cfg).init_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, rng):
+    return P.materialize(init_specs(cfg), rng)
+
+
+def forward(params, cfg: ModelConfig, batch, **kw):
+    return _mod(cfg).forward(params, cfg, batch, **kw)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            aux_weight: float = 0.01, blockwise: bool = False):
+    logits, aux, mask, _ = forward(params, cfg, batch, remat=remat, blockwise=blockwise)
+    labels = batch["tokens"]
+    # VLM: logits cover patch prefix + tokens; score text positions only
+    logits_t = logits[:, logits.shape[1] - labels.shape[1]:]
+    lf = logits_t[:, :-1].astype(jnp.float32)
+    tgt = labels[:, 1:]
+    # Cross-entropy in a vocab-sharded-friendly form: every reduction is over
+    # the (TP-sharded) vocab axis, so GSPMD keeps logits sharded and emits
+    # tiny (B, S) all-reduces instead of gathering full logits per device
+    # (take_along_axis over a sharded axis replicates the lm_head matmul).
+    lmax = jax.lax.stop_gradient(lf.max(axis=-1))
+    lse = jnp.log(jnp.exp(lf - lmax[..., None]).sum(-1)) + lmax
+    onehot = jax.nn.one_hot(tgt, lf.shape[-1], dtype=lf.dtype)
+    label_logit = (lf * onehot).sum(-1)
+    nll = lse - label_logit
+    m = mask[:, mask.shape[1] - labels.shape[1] + 1:]
+    loss = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return loss + aux_weight * aux
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    return _mod(cfg).cache_specs(cfg, batch, seq_len)
+
+
+def prefill(params, cfg: ModelConfig, batch, *, blockwise: bool = True):
+    """Run the full prompt, return (last_logits, cache)."""
+    logits, _, _, cache = forward(params, cfg, batch, blockwise=blockwise,
+                                  collect_cache=True)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, pos, token):
+    return _mod(cfg).decode_step(params, cfg, cache, pos, token)
+
+
+def _pad_dim(x, dim, target):
+    if x.shape[dim] == target:
+        return x
+    if x.shape[dim] > target:  # keep the most recent positions (ring layout)
+        assert x.shape[dim] % target == 0, (x.shape, dim, target)
+        return jax.lax.slice_in_dim(x, x.shape[dim] - target, x.shape[dim], axis=dim)
+    pad = [(0, 0)] * x.ndim
+    pad[dim] = (0, target - x.shape[dim])
+    return jnp.pad(x, pad)
+
+
+def build_decode_cache(params, cfg: ModelConfig, batch, max_len: int,
+                       *, blockwise: bool = True):
+    """Prefill the prompt and lay the collected KV out as a decode cache of
+    capacity ``max_len`` (linear caches padded; ring caches ring-ified)."""
+    last_logits, cache = prefill(params, cfg, batch, blockwise=blockwise)
+    fam = cfg.family
+    if fam == "ssm":
+        return last_logits, cache
+    if fam == "audio":
+        cache = dict(cache)
+        cache["k"] = _pad_dim(cache["k"], 2, max_len)
+        cache["v"] = _pad_dim(cache["v"], 2, max_len)
+        return last_logits, cache
+    if fam == "hybrid":
+        w = min(cfg.local_window, max_len)
+        def fix(tree):
+            out = {}
+            for name, c in tree.items():
+                out[name] = ({"k": _pad_dim(c["k"], 2, w), "v": _pad_dim(c["v"], 2, w)}
+                             if "k" in c else c)
+            return out
+        return last_logits, {"units": fix(cache["units"]), "tail": fix(cache["tail"])}
+    if cfg.attn_unit:  # llama4-style: (k, v) each (U, ul, B, S, KV, hd)
+        k, v = cache
+        loc = [j for j, t in enumerate(cfg.attn_unit) if t == "local"]
+        glo = [j for j, t in enumerate(cfg.attn_unit) if t != "local"]
+        return last_logits, {
+            "k_local": _pad_dim(k[:, loc], 3, cfg.attn_chunk),
+            "v_local": _pad_dim(v[:, loc], 3, cfg.attn_chunk),
+            "k_global": _pad_dim(k[:, glo], 3, max_len),
+            "v_global": _pad_dim(v[:, glo], 3, max_len),
+        }
+    k, v = cache  # (L, B, S, KV, hd)
+    return last_logits, {"k": _pad_dim(k, 2, max_len), "v": _pad_dim(v, 2, max_len)}
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one shape cell (no allocation).
+
+    train/prefill: full (B, S) token batch (+ modality stubs).
+    decode: one new token (B, 1) + scalar position; the KV cache itself is
+    part of the state signature (see launch/steps.py)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, cfg.num_audio_frames, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "vlm":
+            return {"tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), tok),
+                    "patches": jax.ShapeDtypeStruct(
+                        (B, cfg.num_patches, cfg.patch_dim), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+    return {"token": jax.ShapeDtypeStruct((B, 1), tok),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ------------------------------------------------------------- param counts
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    specs = init_specs(cfg)
+    total = P.count(specs)
+    if active_only and cfg.num_experts > 0:
+        layers = specs["layers"]
+        ep = sum(P.count(layers["ffn"][k]) for k in ("w_gate", "w_up", "w_out"))
+        total = total - ep + int(ep * cfg.num_experts_per_tok / cfg.num_experts)
+    return total
+
+
+def count_matmul_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Params participating in per-token matmuls, for MODEL_FLOPS = 6*N*D.
+
+    The embedding *gather* does no matmul FLOPs; the lm_head projection does.
+    Tied models reuse the table as the lm_head weight, so the (V, d) count is
+    kept either way — untied models already count lm_head separately, so the
+    gather table is simply removed."""
+    total = count_params(cfg, active_only)
+    specs = init_specs(cfg)
+    if "lm_head" in specs["embed"]:
+        total -= cfg.vocab_size * cfg.d_model  # drop the gather-only table
+    return total
+
+
+# ------------------------------------------------------------- depth scaling
+def scan_units(cfg: ModelConfig) -> int:
+    """Number of scanned units (the linear-extrapolation variable)."""
+    if cfg.family == "hybrid":
+        return hybrid.structure(cfg)[0]
+    if cfg.family == "audio":
+        return cfg.num_layers  # enc and dec scale together
+    return transformer.num_units(cfg) if cfg.family in _GENERIC else cfg.num_layers
+
+
+def with_depth(cfg: ModelConfig, units: int) -> ModelConfig:
+    """Config with ``units`` scanned units (tails/ratios preserved)."""
+    if cfg.family == "hybrid":
+        u = len(cfg.block_unit)
+        tail = cfg.num_layers % u
+        return dataclasses.replace(cfg, num_layers=units * u + tail)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, num_layers=units, num_encoder_layers=units)
+    ul = len(cfg.attn_unit) if cfg.attn_unit else 1
+    return dataclasses.replace(cfg, num_layers=units * ul)

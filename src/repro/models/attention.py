@@ -1,0 +1,289 @@
+"""Attention: GQA projections + three execution regimes.
+
+- ``attention``           train-time (scores materialized; fine at 4k with
+                          gradient-accumulation microbatching)
+- ``blockwise_attention`` prefill-time memory-bounded online-softmax over KV
+                          blocks (pure JAX flash-attention formulation; the
+                          baseline scans all KV blocks with masking — the
+                          causal-skip variant is a §Perf hillclimb)
+- ``decode_attention``    one query token vs a KV cache
+
+GQA is computed with grouped einsums (no head replication). All softmax math
+is fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import cs
+from repro.models import flags
+from repro.models.layers import apply_rope, rms_norm_1d
+from repro.models.params import p
+
+NEG_INF = -2.0e38
+
+
+def attn_specs(cfg: ModelConfig, stack: tuple = ()):
+    axes = tuple([("layers" if i == 0 else None) for i in range(len(stack))])
+    hd, H, KV, d = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    out = {
+        "wq": p(stack + (d, H, hd), axes + ("embed", "heads", None)),
+        "wk": p(stack + (d, KV, hd), axes + ("embed", "kv_heads", "kv_hd")),
+        "wv": p(stack + (d, KV, hd), axes + ("embed", "kv_heads", "kv_hd")),
+        "wo": p(stack + (H, hd, d), axes + ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = p(stack + (H, hd), axes + ("heads", None), init="zeros")
+        out["bk"] = p(stack + (KV, hd), axes + ("kv_heads", None), init="zeros")
+        out["bv"] = p(stack + (KV, hd), axes + ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = p(stack + (hd,), axes + (None,), init="ones")
+        out["k_norm"] = p(stack + (hd,), axes + (None,), init="ones")
+    return out
+
+
+def qkv_proj(x, prm, cfg: ModelConfig, positions, rope: bool = True):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd).
+
+    q: heads -> TP axis; when the head count doesn't divide it, the
+    `attn_seq` fallback context-parallelizes the query sequence instead
+    (k/v stay full-sequence — each shard attends its own q rows).
+    """
+    q = cs(jnp.einsum("bsd,dhk->bshk", x, prm["wq"]),
+           "batch", "attn_seq", "heads", None)
+    k = cs(jnp.einsum("bsd,dhk->bshk", x, prm["wk"]),
+           "batch", None, "kv_heads", "kv_hd")
+    v = cs(jnp.einsum("bsd,dhk->bshk", x, prm["wv"]),
+           "batch", None, "kv_heads", "kv_hd")
+    if cfg.qkv_bias:
+        q, k, v = q + prm["bq"], k + prm["bk"], v + prm["bv"]
+    if cfg.qk_norm:
+        q = rms_norm_1d(q, prm["q_norm"])
+        k = rms_norm_1d(k, prm["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(y, prm):
+    return cs(jnp.einsum("bshk,hkd->bsd", y, prm["wo"]),
+              "batch", "act_seq", None)
+
+
+def _group(q, num_kv):
+    """(B,S,H,hd) -> (B,S,KV,G,hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, num_kv, H // num_kv, hd)
+
+
+def _mask(q_pos, kv_pos, kind: str, width: int) -> jax.Array:
+    """Boolean keep-mask (..., Sq, Sk)."""
+    qp, kp = q_pos[..., :, None], kv_pos[..., None, :]
+    if kind == "bidir":
+        return jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    keep = (kp <= qp) & (kp >= 0)  # kp < 0 marks never-written ring-cache slots
+    if kind == "local_window":
+        keep &= kp > qp - width
+    elif kind == "local_chunk":
+        keep &= (kp // width) == (qp // width)
+    return keep
+
+
+def attention(q, k, v, cfg: ModelConfig, kind: str = "causal", width: int = 0,
+              q_pos: Optional[jax.Array] = None, kv_pos: Optional[jax.Array] = None):
+    """Materialized-score attention. q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if kv_pos is None:
+        kv_pos = jnp.arange(Sk)
+    keep = _mask(q_pos, kv_pos, kind, width)
+    from repro.distributed.constraints import mesh_axis_size
+    flat_ok = H % max(1, mesh_axis_size("model")) == 0  # else the repeated
+    # K/V can't shard on heads and replicates (B,Sk,H,hd) per layer
+    if flags.current_attn_impl() == "flat" and H != KV and flat_ok:
+        # §Perf: the grouped form reshapes H -> (KV, G); when H is TP-
+        # sharded (e.g. 64@16) neither factor divides the axis, so GSPMD
+        # re-shards the fp32 score tensor (measured 512 MiB all-reduces
+        # per layer on deepseek-67b). Repeating K/V to the head dim keeps
+        # everything sharded on H — each shard repeats only its local
+        # heads, so the "blowup" is (B, Sk, H/shards, hd), i.e. tiny.
+        kf = cs(jnp.repeat(k, H // KV, axis=2), "batch", None, "heads", None)
+        vf = cs(jnp.repeat(v, H // KV, axis=2), "batch", None, "heads", None)
+        s = jnp.einsum("bshd,bthd->bhst", q, kf,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(keep, s / jnp.sqrt(hd).astype(jnp.float32), NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhst,bthd->bshd", w, vf)
+    qg = _group(q, KV)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(keep, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    y = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return y.reshape(B, Sq, H, hd)
+
+
+def blockwise_attention(q, k, v, cfg: ModelConfig, kind: str = "causal", width: int = 0,
+                        q_block: int = 1024, kv_block: int = 1024,
+                        causal_skip: bool = False):
+    """Memory-bounded online-softmax attention for long prefill.
+
+    q: (B,S,H,hd); k/v: (B,S,KV,hd). S must divide by the block sizes.
+
+    causal_skip=False (paper-faithful baseline): every (q-block, kv-block)
+    pair is computed and masked — ~2x FLOP waste on causal.
+    causal_skip=True (§Perf): scan only the lower-triangular pairs via a
+    flattened (i, j<=i) schedule with dynamic slices.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if S < 2 * q_block or S % q_block or S % kv_block:
+        # short/ragged prompts: the blocked schedule degenerates — use the
+        # materialized form (S^2 is small here by construction)
+        return attention(q, k, v, cfg, kind=kind, width=width)
+    nq, nk = S // q_block, S // kv_block
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qg = _group(q, KV).reshape(B, nq, q_block, KV, G, hd)
+
+    def block(qi, kj, vj, qpos, kpos):
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qi, kj, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_mask(qpos, kpos, kind, width), s, NEG_INF)
+        m = s.max(-1)
+        e = jnp.exp(s - m[..., None])
+        l = e.sum(-1)
+        o = jnp.einsum("bkgqt,btkh->bkgqh", e.astype(v.dtype), vj)
+        return m, l, o  # (B,KV,G,qb), (B,KV,G,qb), (B,KV,G,qb,hd)
+
+    if not causal_skip:
+        # scan over kv blocks; all q blocks in parallel (vmapped over nq)
+        def body(carry, j):
+            m, l, o = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            kpos = j * kv_block + jnp.arange(kv_block)
+            qpos = jnp.arange(S).reshape(nq, q_block)
+            bm, bl, bo = jax.vmap(
+                lambda qi, qp: block(qi, kj, vj, qp, kpos),
+                in_axes=(1, 0), out_axes=1,
+            )(qg, qpos)  # (B,nq,KV,G,qb[,hd])
+            mn = jnp.maximum(m, bm)
+            a1, a2 = jnp.exp(m - mn), jnp.exp(bm - mn)
+            return (mn, l * a1 + bl * a2,
+                    o * a1[..., None].astype(o.dtype) + bo * a2[..., None].astype(o.dtype)), None
+
+        m0 = jnp.full((B, nq, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nq, KV, G, q_block), jnp.float32)
+        o0 = jnp.zeros((B, nq, KV, G, q_block, hd), jnp.float32)
+        (m, l, o), _ = flags.maybe_scan(body, (m0, l0, o0), jnp.arange(nk))
+    else:
+        # lower-triangular schedule: one (i, j) pair per step, j <= i
+        pairs = [(i, j) for i in range(nq) for j in range(nk) if j * kv_block < (i + 1) * q_block]
+        idx = jnp.asarray(pairs, jnp.int32)
+
+        def body(carry, ij):
+            m, l, o = carry
+            i, j = ij[0], ij[1]
+            qi = jax.lax.dynamic_slice_in_dim(qg, i, 1, 1)[:, 0]
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            qpos = i * q_block + jnp.arange(q_block)
+            kpos = j * kv_block + jnp.arange(kv_block)
+            bm, bl, bo = block(qi, kj, vj, qpos, kpos)
+            mi = jax.lax.dynamic_slice_in_dim(m, i, 1, 1)[:, 0]
+            li = jax.lax.dynamic_slice_in_dim(l, i, 1, 1)[:, 0]
+            oi = jax.lax.dynamic_slice_in_dim(o, i, 1, 1)[:, 0]
+            mn = jnp.maximum(mi, bm)
+            a1, a2 = jnp.exp(mi - mn), jnp.exp(bm - mn)
+            ln = li * a1 + bl * a2
+            on = oi * a1[..., None] + bo.astype(jnp.float32) * a2[..., None]
+            upd = lambda full, blk: jax.lax.dynamic_update_slice_in_dim(full, blk[:, None], i, 1)
+            return (upd(m, mn), upd(l, ln), upd(o, on)), None
+
+        m0 = jnp.full((B, nq, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nq, KV, G, q_block), jnp.float32)
+        o0 = jnp.zeros((B, nq, KV, G, q_block, hd), jnp.float32)
+        (m, l, o), _ = flags.maybe_scan(body, (m0, l0, o0), idx)
+
+    y = o / jnp.maximum(l[..., None], 1e-30)
+    # (B,nq,KV,G,qb,hd) -> (B,S,H,hd)
+    y = y.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return y.astype(q.dtype)
+
+
+def local_chunk_attention(q, k, v, cfg: ModelConfig, chunk: int,
+                          blockwise: bool = True):
+    """Block-diagonal causal attention (llama4 local layers). S % chunk == 0.
+
+    Chunks fold into the batch dim (sharded over DP); within a chunk the
+    blockwise online-softmax keeps scores memory bounded (an 8192-wide chunk
+    would otherwise materialize 86 GiB/device of fp32 scores at prefill)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    nc = S // chunk
+    fold = lambda t: cs(t.reshape(B * nc, chunk, *t.shape[2:]),
+                        "batch", "attn_seq", None, None)
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    if blockwise and chunk % 1024 == 0 and chunk > 1024:
+        y = blockwise_attention(qf, kf, vf, cfg, kind="causal")
+    else:
+        y = attention(qf, kf, vf, cfg, kind="causal")
+    return y.reshape(B, S, H, hd)
+
+
+def local_window_attention(q, k, v, cfg: ModelConfig, window: int):
+    """Banded sliding-window attention via (prev, self) block pairs.
+
+    S % window == 0; each query attends to positions (p - window, p].
+    Only the 2w band is materialized — no S x S scores.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    w = window
+    nb = S // w
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qb = cs(q.reshape(B, nb, w, KV, G, hd),
+            "batch", "attn_seq", None, "kv_heads", None, None)
+    blk = lambda t: cs(t.reshape(B, nb, w, KV, hd),
+                       "batch", "attn_seq", None, "kv_heads", None)
+    kb, vb = blk(k), blk(v)
+    pair = lambda t: jnp.concatenate(
+        [jnp.concatenate([jnp.zeros_like(t[:, :1]), t[:, :-1]], 1), t], axis=2)
+    kp_, vp_ = pair(kb), pair(vb)  # (B, nb, 2w, KV, hd)
+    s = jnp.einsum("bnqkgh,bntkh->bnkgqt", qb, kp_,
+                   preferred_element_type=jnp.float32) * scale
+    qpos, kpos = w + jnp.arange(w), jnp.arange(2 * w)
+    keep = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - w)  # (w, 2w)
+    valid = jnp.ones((nb, 2 * w), bool).at[0, :w].set(False)  # block 0 has no prev
+    keep = keep[None, :, :] & valid[:, None, :]  # (nb, w, 2w)
+    s = jnp.where(keep[None, :, None, None], s, NEG_INF)
+    wts = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    y = jnp.einsum("bnkgqt,bntkh->bnqkgh", wts, vp_)
+    return y.reshape(B, S, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, kind: str = "causal", width: int = 0,
+                     kv_pos: Optional[jax.Array] = None):
+    """q: (B,1,H,hd); caches: (B,S,KV,hd); pos: scalar current position.
+
+    kv_pos: positions of cache slots (for ring-buffer local caches)."""
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    if kv_pos is None:
+        kv_pos = jnp.arange(S)
+    qg = _group(q, KV)[:, 0]  # (B,KV,G,hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    keep = _mask(jnp.asarray(pos)[None], kv_pos, kind, width)[0]  # (S,)
+    s = jnp.where(keep, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    y = jnp.einsum("bkgt,btkh->bkgh", w, v_cache)
+    return y.reshape(B, 1, H, hd)

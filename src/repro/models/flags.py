@@ -1,0 +1,69 @@
+"""Global tracing flags for the model zoo.
+
+``unroll_scans`` — when True, every ``maybe_scan`` in the model code fully
+unrolls. Used by the dry-run *cost* pass: XLA's HloCostAnalysis counts a
+while-loop body exactly once, so rolled scans undercount FLOPs/bytes by the
+trip count. The cost pass lowers shallow (1- and 2-unit) configs with all
+scans unrolled and extrapolates linearly over depth; the full-depth compile
+(memory analysis + collective schedule) keeps scans rolled for compile speed.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable
+
+import jax
+
+_UNROLL = contextvars.ContextVar("repro_unroll_scans", default=False)
+_MOE_IMPL = contextvars.ContextVar("repro_moe_impl", default="dense")
+_ATTN_IMPL = contextvars.ContextVar("repro_attn_impl", default="grouped")
+
+
+@contextlib.contextmanager
+def unroll_scans(enable: bool = True):
+    tok = _UNROLL.set(enable)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+@contextlib.contextmanager
+def moe_impl(kind: str):
+    """"dense" (baseline GSPMD dispatch) | "ep" (shard_map expert
+    parallelism -- the in-mesh shuffle-pushdown variant, see §Perf)."""
+    tok = _MOE_IMPL.set(kind)
+    try:
+        yield
+    finally:
+        _MOE_IMPL.reset(tok)
+
+
+def current_moe_impl() -> str:
+    return _MOE_IMPL.get()
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL.get()
+
+
+def maybe_scan(body: Callable, init: Any, xs: Any, length: int | None = None):
+    """``lax.scan`` honouring the unroll flag (see module docstring)."""
+    return jax.lax.scan(body, init, xs, length=length, unroll=True if _UNROLL.get() else 1)
+
+
+@contextlib.contextmanager
+def attn_impl(kind: str):
+    """"grouped" (GQA einsums over (KV, G) split — baseline) | "flat"
+    (repeat K/V to the head dim: under head-TP each shard repeats only its
+    local heads, keeping every attention einsum collective-free — §Perf)."""
+    tok = _ATTN_IMPL.set(kind)
+    try:
+        yield
+    finally:
+        _ATTN_IMPL.reset(tok)
+
+
+def current_attn_impl() -> str:
+    return _ATTN_IMPL.get()

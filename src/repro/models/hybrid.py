@@ -1,0 +1,152 @@
+"""RecurrentGemma-style hybrid: repeating (rec, rec, attn) units + tail.
+
+26 layers = 8 scanned units of 3 + an unrolled 2-layer (rec, rec) tail. Every
+block: x += temporal(norm1(x)); x += mlp(norm2(x)). Attention blocks use
+sliding-window (local) attention with a ring cache at decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.attention import (attention, attn_out, attn_specs, decode_attention,
+                                    local_window_attention, qkv_proj)
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs, embed_tokens,
+                                 lm_logits, mlp_specs, norm_specs)
+from repro.models.params import p
+from repro.models.rglru import (rglru_cache_specs, rglru_decode_step, rglru_forward,
+                                rglru_specs)
+from repro.models.transformer import _cache_positions, cache_update
+
+
+def structure(cfg: ModelConfig):
+    u = len(cfg.block_unit)
+    full = cfg.num_layers // u
+    tail = cfg.num_layers % u
+    return full, tuple(cfg.block_unit[:tail])
+
+
+def _block_specs(cfg: ModelConfig, kind: str, stack: tuple):
+    t = rglru_specs(cfg, stack) if kind == "rec" else attn_specs(cfg, stack)
+    return {"norm1": norm_specs(cfg, stack), "temporal": t,
+            "norm2": norm_specs(cfg, stack), "mlp": mlp_specs(cfg, stack)}
+
+
+def init_specs(cfg: ModelConfig):
+    U, tail = structure(cfg)
+    units = {f"b{i}": _block_specs(cfg, k, (U,)) for i, k in enumerate(cfg.block_unit)}
+    tails = {f"b{i}": _block_specs(cfg, k, ()) for i, k in enumerate(tail)}
+    return {"embed": embed_specs(cfg), "final_norm": norm_specs(cfg),
+            "units": units, "tail": tails}
+
+
+def _block_fwd(x, bp, cfg, kind, positions, collect_cache):
+    h = apply_norm(x, bp["norm1"], cfg)
+    cache = None
+    if kind == "rec":
+        y, state = rglru_forward(h, bp["temporal"], cfg)
+        if collect_cache:
+            W = cfg.conv_width
+            u_pre = jnp.einsum("btd,dw->btw", h, bp["temporal"]["w_in"])
+            cache = {"h": state, "conv": u_pre[:, u_pre.shape[1] - (W - 1):]}
+    else:
+        q, k, v = qkv_proj(h, bp["temporal"], cfg, positions, rope=True)
+        S, w = q.shape[1], cfg.local_window
+        if S > w and S % w == 0:
+            y = local_window_attention(q, k, v, cfg, w)
+        else:
+            y = attention(q, k, v, cfg, kind="local_window", width=w,
+                          q_pos=positions, kv_pos=positions)
+        y = attn_out(y, bp["temporal"])
+        if collect_cache:
+            w_eff = min(w, S)
+            cache = {"k": k[:, S - w_eff:], "v": v[:, S - w_eff:]}
+    x = x + y
+    x = x + apply_mlp(apply_norm(x, bp["norm2"], cfg), bp["mlp"], cfg)
+    return x, cache
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            collect_cache: bool = False, **_):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+    positions = jnp.arange(x.shape[1])
+    _, tail = structure(cfg)
+
+    def unit_body(x, up):
+        caches = {}
+        for i, kind in enumerate(cfg.block_unit):
+            x, c = _block_fwd(x, up[f"b{i}"], cfg, kind, positions, collect_cache)
+            caches[f"b{i}"] = c
+        return x, (caches if collect_cache else None)
+
+    body = jax.checkpoint(unit_body) if remat else unit_body
+    x, unit_caches = flags.maybe_scan(body, x, params["units"])
+    tail_caches = {}
+    for i, kind in enumerate(tail):
+        x, c = _block_fwd(x, params["tail"][f"b{i}"], cfg, kind, positions, collect_cache)
+        tail_caches[f"b{i}"] = c
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params["embed"], x)
+    cache = {"units": unit_caches, "tail": tail_caches} if collect_cache else None
+    return logits, 0.0, mask, cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    U, tail = structure(cfg)
+    w = min(cfg.local_window, seq_len)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def one(kind, stack):
+        if kind == "rec":
+            return rglru_cache_specs(cfg, batch, stack)
+        ax = tuple(["layers"] * len(stack)) + ("batch", "kv_seq", "kv_heads", None)
+        shp = stack + (batch, w, KV, hd)
+        return {"k": p(shp, ax, init="zeros"), "v": p(shp, ax, init="zeros")}
+
+    return {"units": {f"b{i}": one(k, (U,)) for i, k in enumerate(cfg.block_unit)},
+            "tail": {f"b{i}": one(k, ()) for i, k in enumerate(tail)}}
+
+
+def _block_decode(x, bp, cfg, kind, pos, bc):
+    h = apply_norm(x, bp["norm1"], cfg)
+    if kind == "rec":
+        y, nc = rglru_decode_step(h, bp["temporal"], cfg, bc)
+    else:
+        q, k, v = qkv_proj(h, bp["temporal"], cfg, jnp.asarray(pos)[None], rope=True)
+        size = bc["k"].shape[1]
+        slot = pos % size
+        kc = cache_update(bc["k"], k, slot)
+        vc = cache_update(bc["v"], v, slot)
+        cpos = _cache_positions(cfg, pos, size, "local_window", cfg.local_window)
+        y = decode_attention(q, kc, vc, pos, kind="local_window",
+                             width=cfg.local_window, kv_pos=cpos)
+        y = attn_out(y, bp["temporal"])
+        nc = {"k": kc, "v": vc}
+    x = x + y
+    x = x + apply_mlp(apply_norm(x, bp["norm2"], cfg), bp["mlp"], cfg)
+    return x, nc
+
+
+def decode_step(params, cfg: ModelConfig, cache, pos, token):
+    x = embed_tokens(params["embed"], token)
+    _, tail = structure(cfg)
+
+    def unit_body(x, xs):
+        up, uc = xs
+        ncs = {}
+        for i, kind in enumerate(cfg.block_unit):
+            x, nc = _block_decode(x, up[f"b{i}"], cfg, kind, pos, uc[f"b{i}"])
+            ncs[f"b{i}"] = nc
+        return x, ncs
+
+    x, new_units = flags.maybe_scan(unit_body, x, (params["units"], cache["units"]))
+    new_tail = {}
+    for i, kind in enumerate(tail):
+        x, nc = _block_decode(x, params["tail"][f"b{i}"], cfg, kind, pos,
+                              cache["tail"][f"b{i}"])
+        new_tail[f"b{i}"] = nc
+    x = apply_norm(x, params["final_norm"], cfg)
+    return lm_logits(params["embed"], x), {"units": new_units, "tail": new_tail}

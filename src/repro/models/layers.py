@@ -1,0 +1,113 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings.
+
+All norms compute in fp32 and cast back; params live in bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import cs
+from repro.models.params import p
+
+
+# ----------------------------------------------------------------- norms
+def norm_specs(cfg: ModelConfig, stack: tuple = ()):
+    """Spec for one norm layer (possibly layer-stacked with leading dims)."""
+    axes = tuple([("layers" if i == 0 else None) for i in range(len(stack))])
+    if cfg.norm_type == "layernorm_nonparam":
+        return {}  # OLMo: no learned scale/bias
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": p(stack + (cfg.d_model,), axes + (None,), init="ones"),
+            "bias": p(stack + (cfg.d_model,), axes + (None,), init="zeros"),
+        }
+    return {"scale": p(stack + (cfg.d_model,), axes + (None,), init="ones")}
+
+
+def apply_norm(x: jax.Array, prm: dict, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type in ("layernorm", "layernorm_nonparam"):
+        mean = xf.mean(-1, keepdims=True)
+        var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+        if prm:
+            y = y * prm["scale"].astype(jnp.float32) + prm["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6)
+        if prm:
+            y = y * prm["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last dim with optional scale (used by qk_norm, SSD gated norm)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- mlp
+def mlp_specs(cfg: ModelConfig, stack: tuple = (), d_ff: int | None = None):
+    d_ff = d_ff if d_ff is not None else cfg.d_ff
+    axes = tuple([("layers" if i == 0 else None) for i in range(len(stack))])
+    if cfg.mlp_act == "gelu":
+        return {
+            "w_in": p(stack + (cfg.d_model, d_ff), axes + ("embed", "mlp")),
+            "w_out": p(stack + (d_ff, cfg.d_model), axes + ("mlp", "embed")),
+        }
+    return {
+        "w_gate": p(stack + (cfg.d_model, d_ff), axes + ("embed", "mlp")),
+        "w_up": p(stack + (cfg.d_model, d_ff), axes + ("embed", "mlp")),
+        "w_out": p(stack + (d_ff, cfg.d_model), axes + ("mlp", "embed")),
+    }
+
+
+def apply_mlp(x: jax.Array, prm: dict, cfg: ModelConfig) -> jax.Array:
+    nb = x.ndim - 1  # leading dims before the feature dim ((B,S,d) or (T,d))
+    hid = ("batch",) + ("act_seq",) * (nb - 1) + ("mlp",)
+    res = ("batch",) + ("act_seq",) * (nb - 1) + (None,)
+    if "w_in" in prm:  # gelu
+        h = cs(jax.nn.gelu(x @ prm["w_in"]), *hid)
+        return cs(h @ prm["w_out"], *res)
+    g = cs(jax.nn.silu(x @ prm["w_gate"]), *hid)
+    return cs((g * cs(x @ prm["w_up"], *hid)) @ prm["w_out"], *res)
+
+
+# ----------------------------------------------------------------- embeddings
+def embed_specs(cfg: ModelConfig):
+    out = {"embedding": p((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = p((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(prm: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(prm["embedding"], tokens, axis=0)
+    return cs(x, *(("batch",) + ("act_seq",) * (tokens.ndim - 1) + (None,)))
+
+
+def lm_logits(prm: dict, x: jax.Array) -> jax.Array:
+    w = prm["lm_head"] if "lm_head" in prm else prm["embedding"].T
+    logits = jnp.einsum("...d,dv->...v", x, w, preferred_element_type=jnp.float32)
+    return cs(logits, *(("batch",) + ("act_seq",) * (x.ndim - 2) + ("vocab",)))

@@ -1,0 +1,55 @@
+"""Mamba2 LM assembly: embed -> [norm -> SSD -> residual] x L -> norm -> logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.layers import apply_norm, embed_specs, embed_tokens, lm_logits, norm_specs
+from repro.models.ssm import ssd_decode_step, ssd_forward, ssm_cache_specs, ssm_specs
+
+
+def init_specs(cfg: ModelConfig):
+    L = cfg.num_layers
+    return {
+        "embed": embed_specs(cfg),
+        "final_norm": norm_specs(cfg),
+        "layers": {"norm": norm_specs(cfg, (L,)), "ssm": ssm_specs(cfg, (L,))},
+    }
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            collect_cache: bool = False, **_):
+    x = embed_tokens(params["embed"], batch["tokens"])
+    mask = jnp.ones(batch["tokens"].shape, jnp.float32)
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm"], cfg)
+        y, cache = ssd_forward(h, lp["ssm"], cfg, return_cache=collect_cache)
+        return x + y, (cache if collect_cache else None)
+
+    body = jax.checkpoint(body) if remat else body
+    x, caches = flags.maybe_scan(body, x, params["layers"])
+    x = apply_norm(x, params["final_norm"], cfg)
+    return lm_logits(params["embed"], x), 0.0, mask, caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    del seq_len  # O(1) state regardless of context
+    return ssm_cache_specs(cfg, batch, (cfg.num_layers,))
+
+
+def decode_step(params, cfg: ModelConfig, cache, pos, token):
+    del pos  # stateful recurrence: position-free
+    x = embed_tokens(params["embed"], token)
+
+    def body(x, xs):
+        lp, lc = xs
+        h = apply_norm(x, lp["norm"], cfg)
+        y, nc = ssd_decode_step(h, lp["ssm"], cfg, lc)
+        return x + y, nc
+
+    x, new_cache = flags.maybe_scan(body, x, (params["layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg)
+    return lm_logits(params["embed"], x), new_cache

@@ -1,0 +1,78 @@
+"""Parameter-spec trees.
+
+Model ``init_specs`` functions return nested dicts of ``ParamSpec`` — shape,
+dtype, *logical axis names* (one per dim), and an initializer. The same tree:
+
+- ``materialize(specs, rng)``      -> real arrays (smoke tests / real training)
+- ``abstract(specs, mesh, rules)`` -> ShapeDtypeStruct with NamedSharding
+                                      (AOT dry-run: no allocation)
+- logical axes drive the sharding rules in ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = never sharded)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | ssm_a | conv
+    scale: float = 0.02
+
+
+def p(shape, axes, dtype=jnp.bfloat16, init="normal", scale=0.02) -> ParamSpec:
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamSpec(shape, axes, dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "ssm_a":  # A_log in [log 1, log 16] as in mamba2
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    # fan-in scaled normal for >=2D, plain normal otherwise
+    shape = spec.shape
+    std = spec.scale
+    if len(shape) >= 2:
+        fan_in = shape[-2]
+        std = min(spec.scale, 1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def materialize(specs, rng) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def as_shape_dtype(specs) -> Any:
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def bytes_of(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves))

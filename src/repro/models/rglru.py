@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrent block = [linear -> causal conv1d -> RG-LRU] * [linear -> GeLU]
+-> linear out. The RG-LRU diagonal recurrence is computed with
+``lax.associative_scan`` (log-depth, fp32) — no while-loop, so HLO cost
+analysis counts it exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import cs
+from repro.models.params import p
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+def rglru_specs(cfg: ModelConfig, stack: tuple = ()):
+    axes = tuple([("layers" if i == 0 else None) for i in range(len(stack))])
+    d, w, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    return {
+        "w_in": p(stack + (d, w), axes + ("embed", "inner")),
+        "w_gate_in": p(stack + (d, w), axes + ("embed", "inner")),
+        "conv": p(stack + (W, w), axes + (None, "inner"), scale=0.5),
+        "w_a": p(stack + (w, w), axes + ("inner", "inner2")),
+        "b_a": p(stack + (w,), axes + ("inner",), init="zeros"),
+        "w_i": p(stack + (w, w), axes + ("inner", "inner2")),
+        "b_i": p(stack + (w,), axes + ("inner",), init="zeros"),
+        "lam": p(stack + (w,), axes + ("inner",), dtype=jnp.float32, init="ones"),
+        "w_out": p(stack + (w, d), axes + ("inner", "embed")),
+    }
+
+
+def _conv(x, w):
+    W = w.shape[0]
+    y = x * w[W - 1]
+    for i in range(W - 1):
+        shift = W - 1 - i
+        y = y + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] * w[i]
+    return y
+
+
+def _gates(u, prm):
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, prm["w_a"]).astype(jnp.float32)
+                       + prm["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, prm["w_i"]).astype(jnp.float32)
+                       + prm["b_i"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-prm["lam"])  # (B,T,w) fp32, <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_forward(x: jax.Array, prm: dict, cfg: ModelConfig,
+                  init_state: jax.Array | None = None):
+    """x: (B, T, d_model) -> (y, final_state (B, w) fp32)."""
+    u = cs(jnp.einsum("btd,dw->btw", x, prm["w_in"]), "batch", "act_seq", "inner")
+    u = _conv(u, prm["conv"])
+    a, b = _gates(u, prm)
+    if init_state is not None:
+        # fold carried state in as a virtual step 0: b_0' = b_0 + a_0 * h_in
+        b = b.at[:, 0].add(a[:, 0] * init_state.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, prm["w_gate_in"]))
+    y = (h.astype(x.dtype) * gate)
+    return jnp.einsum("btw,wd->btd", y, prm["w_out"]), h[:, -1]
+
+
+def rglru_decode_step(x: jax.Array, prm: dict, cfg: ModelConfig, cache: dict):
+    """x: (B,1,d); cache: {h:(B,w)f32, conv:(B,W-1,w)}."""
+    u = jnp.einsum("btd,dw->btw", x, prm["w_in"])  # (B,1,w)
+    window = jnp.concatenate([cache["conv"], u], axis=1)
+    uc = jnp.einsum("bwc,wc->bc", window, prm["conv"])[:, None]  # (B,1,w)
+    a, b = _gates(uc, prm)
+    h = a[:, 0] * cache["h"] + b[:, 0]  # (B,w)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, prm["w_gate_in"]))
+    y = (h[:, None].astype(x.dtype) * gate)
+    out = jnp.einsum("btw,wd->btd", y, prm["w_out"])
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int, stack: tuple = ()):
+    ax = tuple(["layers"] * len(stack))
+    w, W = cfg.lru_width, cfg.conv_width
+    return {
+        "h": p(stack + (batch, w), ax + ("batch", "inner"), dtype=jnp.float32, init="zeros"),
+        "conv": p(stack + (batch, W - 1, w), ax + ("batch", None, "inner"), init="zeros"),
+    }

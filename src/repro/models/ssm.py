@@ -1,0 +1,173 @@
+"""Mamba2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Train/prefill use the chunked dual form: quadratic *within* a chunk (MXU
+matmuls) + a linear inter-chunk state recurrence (lax.scan over chunks).
+Decode is the O(1)/token recurrence on the (B, H, P, N) state.
+
+ngroups = 1 (B/C shared across heads), scalar A per head — the mamba2-2.7b
+configuration. Projections are kept un-fused (separate wz/wx/wB/wC/wdt) so
+each gets a clean sharding; mathematically identical to the fused in_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import cs
+from repro.models import flags
+from repro.models.layers import rms_norm_1d
+from repro.models.params import p
+
+
+def ssm_specs(cfg: ModelConfig, stack: tuple = ()):
+    axes = tuple([("layers" if i == 0 else None) for i in range(len(stack))])
+    d, di, N, H, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    return {
+        "wz": p(stack + (d, di), axes + ("embed", "inner")),
+        "wx": p(stack + (d, di), axes + ("embed", "inner")),
+        "wB": p(stack + (d, N), axes + ("embed", None)),
+        "wC": p(stack + (d, N), axes + ("embed", None)),
+        "wdt": p(stack + (d, H), axes + ("embed", "inner")),
+        "conv_x": p(stack + (W, di), axes + (None, "inner"), scale=0.5),
+        "conv_B": p(stack + (W, N), axes + (None, None), scale=0.5),
+        "conv_C": p(stack + (W, N), axes + (None, None), scale=0.5),
+        "A_log": p(stack + (H,), axes + ("inner",), dtype=jnp.float32, init="ssm_a"),
+        "D": p(stack + (H,), axes + ("inner",), dtype=jnp.float32, init="ones"),
+        "dt_bias": p(stack + (H,), axes + ("inner",), dtype=jnp.float32, init="zeros"),
+        "norm": p(stack + (di,), axes + ("inner",), init="ones"),
+        "out": p(stack + (di, d), axes + ("inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: (B, T, C), w: (W, C); manual shift-sum (W small)."""
+    W = w.shape[0]
+    y = x * w[W - 1]
+    for i in range(W - 1):
+        shift = W - 1 - i
+        y = y + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] * w[i]
+    return jax.nn.silu(y)
+
+
+def _project(x, prm, cfg: ModelConfig):
+    z = cs(jnp.einsum("btd,de->bte", x, prm["wz"]), "batch", "act_seq", "inner")
+    xc = cs(jnp.einsum("btd,de->bte", x, prm["wx"]), "batch", "act_seq", "inner")
+    Bc = jnp.einsum("btd,dn->btn", x, prm["wB"])
+    Cc = jnp.einsum("btd,dn->btn", x, prm["wC"])
+    dt = jnp.einsum("btd,dh->bth", x, prm["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + prm["dt_bias"])
+    return z, xc, Bc, Cc, dt
+
+
+def ssd_forward(x: jax.Array, prm: dict, cfg: ModelConfig,
+                init_state: jax.Array | None = None, return_cache: bool = False):
+    """x: (B, T, d_model) -> (y, final_state | decode_cache). Chunked SSD.
+
+    T must divide by cfg.ssm_chunk."""
+    Bsz, T, _ = x.shape
+    H, P, N, Q = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    W = cfg.conv_width
+    z, xc, Bc, Cc, dt = _project(x, prm, cfg)
+    conv_tails = (xc[:, T - (W - 1):], Bc[:, T - (W - 1):], Cc[:, T - (W - 1):])
+    T_pad = -(-T // Q) * Q
+    if T_pad != T:
+        # pad to a chunk multiple; dt=0 on padded steps => decay 1, zero input:
+        # state and valid outputs are exactly unchanged
+        padt = ((0, 0), (0, T_pad - T), (0, 0))
+        z, xc, Bc, Cc, dt = (jnp.pad(a, padt) for a in (z, xc, Bc, Cc, dt))
+    nc = T_pad // Q
+    xc = _causal_conv(xc, prm["conv_x"])
+    Bc = _causal_conv(Bc, prm["conv_B"])
+    Cc = _causal_conv(Cc, prm["conv_C"])
+
+    A = -jnp.exp(prm["A_log"])  # (H,) negative
+    xh = cs(xc.reshape(Bsz, nc, Q, H, P), "batch", None, None, "inner", None)
+    Bh = Bc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Ch = Cc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dth = dt.reshape(Bsz, nc, Q, H)  # fp32
+
+    a = dth * A  # (B,nc,Q,H) log-decay per step
+    cum_a = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+    seg_end = cum_a[:, :, -1]  # (B,nc,H) total chunk decay
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # L[s,t] = exp(cum_a[s] - cum_a[t]) for t <= s
+    diff = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]  # (B,nc,s,t,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask the *exponent*: exp(+large) for future entries would be inf, and
+    # inf * 0 in the VJP poisons gradients with NaNs
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    cb = jnp.einsum("bcsn,bctn->bcst", Ch, Bh)  # (B,nc,s,t)
+    xdt = xh.astype(jnp.float32) * dth[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcst,bcsth,bcthp->bcshp", cb, L, xdt)
+
+    # ---- chunk states ----
+    w_state = jnp.exp(seg_end[:, :, None, :] - cum_a)  # (B,nc,t,H): decay t -> chunk end
+    S_chunk = jnp.einsum("bctn,bcthp->bchpn", Bh, xdt * w_state[..., None])
+
+    # ---- inter-chunk recurrence ----
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(h, inp):
+        Cq, cum_q, seg_q, Sq = inp  # (B,Q,N), (B,Q,H), (B,H), (B,H,P,N)
+        y_in = jnp.einsum("bqn,bhpn->bqhp", Cq, h) * jnp.exp(cum_q)[..., None]
+        h_next = h * jnp.exp(seg_q)[..., None, None] + Sq
+        return h_next, y_in
+
+    xs = (Ch.transpose(1, 0, 2, 3), cum_a.transpose(1, 0, 2, 3),
+          seg_end.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4))
+    h_final, y_inter = flags.maybe_scan(body, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B,nc,Q,H,P)
+
+    y = y_intra + y_inter + xh.astype(jnp.float32) * prm["D"][:, None]
+    y = y.reshape(Bsz, T_pad, H * P)[:, :T].astype(x.dtype)
+    y = rms_norm_1d(y * jax.nn.silu(z[:, :T]), prm["norm"])
+    out = jnp.einsum("bte,ed->btd", y, prm["out"])
+    if return_cache:
+        cx, cB, cC = conv_tails
+        return out, {"h": h_final, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out, h_final
+
+
+def ssd_decode_step(x: jax.Array, prm: dict, cfg: ModelConfig, cache: dict):
+    """x: (B, 1, d_model); cache: {h:(B,H,P,N)f32, conv_x:(B,W-1,di), conv_B/C:(B,W-1,N)}."""
+    H, P, N, W = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width
+    z, xc, Bc, Cc, dt = _project(x, prm, cfg)
+
+    def conv_step(val, hist, w):  # val (B,1,C), hist (B,W-1,C)
+        window = jnp.concatenate([hist, val], axis=1)  # (B,W,C)
+        out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))
+        return out, window[:, 1:]
+
+    xcs, conv_x = conv_step(xc, cache["conv_x"], prm["conv_x"])
+    Bcs, conv_B = conv_step(Bc, cache["conv_B"], prm["conv_B"])
+    Ccs, conv_C = conv_step(Cc, cache["conv_C"], prm["conv_C"])
+
+    A = -jnp.exp(prm["A_log"])
+    dt1 = dt[:, 0]  # (B,H)
+    decay = jnp.exp(dt1 * A)  # (B,H)
+    xhp = xcs.reshape(-1, H, P).astype(jnp.float32) * dt1[..., None]
+    h = cache["h"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", Bcs.astype(jnp.float32), xhp)
+    y = jnp.einsum("bn,bhpn->bhp", Ccs.astype(jnp.float32), h)
+    y = y + xcs.reshape(-1, H, P).astype(jnp.float32) * prm["D"][:, None]
+    y = y.reshape(-1, 1, H * P).astype(x.dtype)
+    y = rms_norm_1d(y * jax.nn.silu(z), prm["norm"])
+    out = jnp.einsum("bte,ed->btd", y, prm["out"])
+    return out, {"h": h, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int, stack: tuple = ()):
+    """Abstract decode-cache layout (per layer-stack)."""
+    H, Pd, N, W, di = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width, cfg.d_inner
+    ax = tuple(["layers"] * len(stack))
+    return {
+        "h": p(stack + (batch, H, Pd, N), ax + ("batch", "inner", None, None),
+               dtype=jnp.float32, init="zeros"),
+        "conv_x": p(stack + (batch, W - 1, di), ax + ("batch", None, "inner"), init="zeros"),
+        "conv_B": p(stack + (batch, W - 1, N), ax + ("batch", None, None), init="zeros"),
+        "conv_C": p(stack + (batch, W - 1, N), ax + ("batch", None, None), init="zeros"),
+    }

@@ -1,0 +1,264 @@
+"""Generic decoder LM assembly: dense / MoE / llama4-interleaved / VLM.
+
+Layer stacks are ``lax.scan``-ed (HLO size depth-independent; see
+``repro.models.flags`` for the cost-pass unroll). llama4-style configs scan
+over *units* of ``len(cfg.attn_unit)`` layers with static per-position
+local/global attention kinds.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import cs
+from repro.models import flags
+from repro.models.attention import (attention, attn_out, attn_specs,
+                                    blockwise_attention, decode_attention,
+                                    local_chunk_attention, local_window_attention,
+                                    qkv_proj)
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs, embed_tokens,
+                                 lm_logits, mlp_specs, norm_specs)
+from repro.models.moe import apply_moe, moe_specs
+from repro.models.params import p
+
+
+# --------------------------------------------------------------- structure
+def unit_len(cfg: ModelConfig) -> int:
+    return len(cfg.attn_unit) if cfg.attn_unit else 1
+
+
+def num_units(cfg: ModelConfig) -> int:
+    u = unit_len(cfg)
+    assert cfg.num_layers % u == 0, (cfg.num_layers, u)
+    return cfg.num_layers // u
+
+
+def _layer_specs(cfg: ModelConfig, stack: tuple):
+    out = {
+        "norm1": norm_specs(cfg, stack),
+        "attn": attn_specs(cfg, stack),
+        "norm2": norm_specs(cfg, stack),
+    }
+    if cfg.num_experts > 0:
+        out["ffn"] = moe_specs(cfg, stack)
+    else:
+        out["ffn"] = mlp_specs(cfg, stack)
+    return out
+
+
+def init_specs(cfg: ModelConfig):
+    U = num_units(cfg)
+    stack = (U,) if unit_len(cfg) == 1 else (U, unit_len(cfg))
+    specs = {"embed": embed_specs(cfg), "final_norm": norm_specs(cfg),
+             "layers": _layer_specs(cfg, stack)}
+    if cfg.family == "vlm":
+        specs["projector"] = {
+            "w1": p((cfg.patch_dim, cfg.d_model), (None, "embed")),
+            "w2": p((cfg.d_model, cfg.d_model), ("embed", "embed")),
+        }
+    return specs
+
+
+def _attn_kind(cfg: ModelConfig, pos_in_unit: int):
+    if cfg.attn_unit:
+        k = cfg.attn_unit[pos_in_unit]
+        if k == "local":
+            return "local_chunk", cfg.attn_chunk, True
+        return "causal", 0, False  # llama4 global layers: NoPE (iRoPE)
+    if cfg.local_window:
+        return "local_window", cfg.local_window, True
+    return "causal", 0, True
+
+
+def _sublayer(x, lp, cfg: ModelConfig, positions, kind, width, rope, blockwise, causal_skip):
+    h = apply_norm(x, lp["norm1"], cfg)
+    q, k, v = qkv_proj(h, lp["attn"], cfg, positions, rope=rope)
+    S = q.shape[1]
+    if kind == "local_chunk" and S > width and S % width == 0:
+        y = local_chunk_attention(q, k, v, cfg, width)
+    elif kind == "local_window" and S > width and S % width == 0:
+        y = local_window_attention(q, k, v, cfg, width)
+    elif blockwise and kind == "causal":
+        y = blockwise_attention(q, k, v, cfg, kind=kind, width=width, causal_skip=causal_skip)
+    else:
+        if kind == "local_chunk" and S <= width:
+            kind = "causal"  # whole sequence fits in one chunk
+        y = attention(q, k, v, cfg, kind=kind, width=width, q_pos=positions, kv_pos=positions)
+    x = x + attn_out(y, lp["attn"])
+    h = apply_norm(x, lp["norm2"], cfg)
+    if cfg.num_experts > 0:
+        f, aux = apply_moe(h, lp["ffn"], cfg)
+    else:
+        f, aux = apply_mlp(h, lp["ffn"], cfg), 0.0
+    return x + f, aux, (k, v)
+
+
+def _prefix_embed(params, cfg: ModelConfig, batch):
+    """Token (+ patch-prefix) embedding. Returns (x, loss_mask)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.family == "vlm" and "patches" in batch:
+        pj = params["projector"]
+        pe = jax.nn.gelu(batch["patches"] @ pj["w1"]) @ pj["w2"]
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        mask = jnp.concatenate([jnp.zeros(pe.shape[:2], jnp.float32), mask], axis=1)
+    return x, mask
+
+
+def forward(params, cfg: ModelConfig, batch, *, blockwise: bool = False,
+            remat: bool = False, causal_skip: bool = False, collect_cache: bool = False):
+    """-> (logits, aux_loss, loss_mask, cache_kv or None)."""
+    x, mask = _prefix_embed(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    ul = unit_len(cfg)
+
+    def unit_body(carry, lp):
+        x, aux = carry
+        kvs = []
+        if ul == 1:
+            kind, width, rope = _attn_kind(cfg, 0)
+            x, a, kv = _sublayer(x, lp, cfg, positions, kind, width, rope,
+                                 blockwise, causal_skip)
+            aux = aux + a
+            kvs = kv
+        else:
+            for j in range(ul):
+                kind, width, rope = _attn_kind(cfg, j)
+                lpj = jax.tree_util.tree_map(lambda t: t[j], lp)
+                x, a, kv = _sublayer(x, lpj, cfg, positions, kind, width, rope,
+                                     blockwise, causal_skip)
+                aux = aux + a
+                kvs.append(kv)
+            kvs = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *kvs)
+        return (x, aux), (kvs if collect_cache else None)
+
+    if remat == "dots":
+        # selective remat (§Perf): keep matmul outputs, recompute only the
+        # cheap elementwise chains — backward skips the full fwd replay
+        body = jax.checkpoint(
+            unit_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        body = jax.checkpoint(unit_body)
+    else:
+        body = unit_body
+    (x, aux), caches = flags.maybe_scan(body, (x, 0.0), params["layers"])
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params["embed"], x)
+    return logits, aux, mask, caches
+
+
+# --------------------------------------------------------------- decode
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """Abstract KV-cache layout for serve_step."""
+    U, ul = num_units(cfg), unit_len(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if not cfg.attn_unit:
+        S = min(seq_len, cfg.local_window) if cfg.local_window else seq_len
+        shp, ax = (U, batch, S, KV, hd), ("layers", "batch", "kv_seq", "kv_heads", None)
+        return {"k": p(shp, ax, init="zeros"), "v": p(shp, ax, init="zeros")}
+    n_local = sum(1 for k in cfg.attn_unit if k == "local")
+    n_glob = ul - n_local
+    lshp = (U, n_local, batch, cfg.attn_chunk, KV, hd)
+    gshp = (U, n_glob, batch, seq_len, KV, hd)
+    ax = ("layers", None, "batch", "kv_seq", "kv_heads", None)
+    return {"k_local": p(lshp, ax, init="zeros"), "v_local": p(lshp, ax, init="zeros"),
+            "k_global": p(gshp, ax, init="zeros"), "v_global": p(gshp, ax, init="zeros")}
+
+
+def _ring_slot(pos, size):
+    return pos % size
+
+
+def cache_update(c, new, slot):
+    """Write one (B,1,KV,hd) entry at ``slot`` of a (B,S,KV,hd) cache as a
+    masked elementwise select. A dynamic_update_slice at a *traced* position
+    on the SP-sharded seq dim makes GSPMD materialize the cache unsharded
+    (measured: +16 GiB temps on deepseek-67b decode_32k); the masked form
+    stays sharded at the cost of a full cache rewrite — which the decode
+    step's HBM roofline already pays for the attention read anyway."""
+    mask = (jnp.arange(c.shape[1]) == slot)[None, :, None, None]
+    c = jnp.where(mask, new.astype(c.dtype), c)
+    return cs(c, "batch", "kv_seq", "kv_heads", None)
+
+
+def _decode_sublayer(x, lp, cfg, pos, kc, vc, kind, width, rope, cache_pos):
+    """One token through one attention sublayer; returns (x, new_k, new_v)."""
+    h = apply_norm(x, lp["norm1"], cfg)
+    q, k, v = qkv_proj(h, lp["attn"], cfg, jnp.asarray(pos)[None], rope=rope)
+    slot = _ring_slot(pos, kc.shape[1])
+    kc = cache_update(kc, k, slot)
+    vc = cache_update(vc, v, slot)
+    y = decode_attention(q, kc, vc, pos, kind=kind, width=width, kv_pos=cache_pos)
+    x = x + attn_out(y, lp["attn"])
+    h = apply_norm(x, lp["norm2"], cfg)
+    if cfg.num_experts > 0:
+        f, _ = apply_moe(h, lp["ffn"], cfg)
+    else:
+        f = apply_mlp(h, lp["ffn"], cfg)
+    return x + f, kc, vc
+
+
+def _cache_positions(cfg, pos, size, kind, width):
+    """Logical positions held by each cache slot (invalid slots -> negative)."""
+    s = jnp.arange(size)
+    if kind == "causal" and width == 0 and size > 0:
+        return s  # linear cache
+    if kind == "local_chunk":
+        base = (pos // width) * width
+        return base + s  # slots beyond pos%width are future -> masked by causal rule
+    # sliding window ring: most recent position congruent to s (mod size)
+    return pos - ((pos - s) % size)
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, pos, token):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits, new_cache)."""
+    x = embed_tokens(params["embed"], token)
+    ul = unit_len(cfg)
+
+    if not cfg.attn_unit:
+        kind, width, rope = _attn_kind(cfg, 0)
+        size = cache["k"].shape[2]
+        cpos = _cache_positions(cfg, pos, size, kind, width)
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            x, kc, vc = _decode_sublayer(x, lp, cfg, pos, kc, vc, kind, width, rope, cpos)
+            return x, (kc, vc)
+
+        x, (ks, vs) = flags.maybe_scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    else:
+        def body(x, xs):
+            lp, kl, vl, kg, vg = xs
+            il = ig = 0
+            nk, nv, ngk, ngv = [], [], [], []
+            for j in range(ul):
+                kind, width, rope = _attn_kind(cfg, j)
+                lpj = jax.tree_util.tree_map(lambda t: t[j], lp)
+                if kind == "local_chunk":
+                    cpos = _cache_positions(cfg, pos, kl.shape[2], kind, width)
+                    x, kc, vc = _decode_sublayer(x, lpj, cfg, pos, kl[il], vl[il],
+                                                 kind, width, rope, cpos)
+                    nk.append(kc), nv.append(vc)
+                    il += 1
+                else:
+                    cpos = _cache_positions(cfg, pos, kg.shape[2], "causal", 0)
+                    x, kc, vc = _decode_sublayer(x, lpj, cfg, pos, kg[ig], vg[ig],
+                                                 kind, width, rope, cpos)
+                    ngk.append(kc), ngv.append(vc)
+                    ig += 1
+            return x, (jnp.stack(nk), jnp.stack(nv), jnp.stack(ngk), jnp.stack(ngv))
+
+        x, (kl, vl, kg, vg) = flags.maybe_scan(
+            body, x, (params["layers"], cache["k_local"], cache["v_local"],
+                      cache["k_global"], cache["v_global"]))
+        new_cache = {"k_local": kl, "v_local": vl, "k_global": kg, "v_global": vg}
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    return lm_logits(params["embed"], x), new_cache

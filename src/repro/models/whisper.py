@@ -1,0 +1,122 @@
+"""Whisper-style encoder-decoder. Conv/mel frontend is a STUB: the model
+consumes precomputed frame embeddings (B, n_frames, d_model). Learned absolute
+positions are replaced by RoPE (decoder self-attn) / position-free encoder
+self-attn — documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.attention import (attention, attn_out, attn_specs,
+                                    blockwise_attention, decode_attention, qkv_proj)
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs, embed_tokens,
+                                 lm_logits, mlp_specs, norm_specs)
+from repro.models.params import p
+from repro.models.transformer import _cache_positions, cache_update
+
+
+def init_specs(cfg: ModelConfig):
+    E, L = cfg.num_encoder_layers, cfg.num_layers
+    enc = {"norm1": norm_specs(cfg, (E,)), "attn": attn_specs(cfg, (E,)),
+           "norm2": norm_specs(cfg, (E,)), "mlp": mlp_specs(cfg, (E,))}
+    dec = {"norm1": norm_specs(cfg, (L,)), "attn": attn_specs(cfg, (L,)),
+           "norm_x": norm_specs(cfg, (L,)), "xattn": attn_specs(cfg, (L,)),
+           "norm2": norm_specs(cfg, (L,)), "mlp": mlp_specs(cfg, (L,))}
+    return {"embed": embed_specs(cfg), "enc_layers": enc, "enc_norm": norm_specs(cfg),
+            "dec_layers": dec, "final_norm": norm_specs(cfg)}
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, F, d_model) precomputed embeddings -> encoder states."""
+    x = frames
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        q, k, v = qkv_proj(h, lp["attn"], cfg, positions, rope=False)
+        x = x + attn_out(attention(q, k, v, cfg, kind="bidir"), lp["attn"])
+        x = x + apply_mlp(apply_norm(x, lp["norm2"], cfg), lp["mlp"], cfg)
+        return x, None
+
+    x, _ = flags.maybe_scan(body, x, params["enc_layers"])
+    return apply_norm(x, params["enc_norm"], cfg)
+
+
+def _cross_kv(lp, cfg, enc):
+    k = jnp.einsum("bsd,dhk->bshk", enc, lp["xattn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, lp["xattn"]["wv"])
+    return k, v
+
+
+def forward(params, cfg: ModelConfig, batch, *, blockwise: bool = False,
+            remat: bool = False, collect_cache: bool = False, **_):
+    enc = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        h = apply_norm(x, lp["norm1"], cfg)
+        q, k, v = qkv_proj(h, lp["attn"], cfg, positions, rope=True)
+        if blockwise:
+            y = blockwise_attention(q, k, v, cfg, kind="causal")
+        else:
+            y = attention(q, k, v, cfg, kind="causal", q_pos=positions, kv_pos=positions)
+        x = x + attn_out(y, lp["attn"])
+        h = apply_norm(x, lp["norm_x"], cfg)
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn"]["wq"])
+        kx, vx = _cross_kv(lp, cfg, enc)
+        x = x + attn_out(attention(qx, kx, vx, cfg, kind="bidir"), lp["xattn"])
+        x = x + apply_mlp(apply_norm(x, lp["norm2"], cfg), lp["mlp"], cfg)
+        cache = (k, v, kx, vx) if collect_cache else None
+        return x, cache
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, caches = flags.maybe_scan(body_fn, x, params["dec_layers"])
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(params["embed"], x)
+    cache = None
+    if collect_cache:
+        k, v, kx, vx = caches
+        cache = {"k": k, "v": v, "xk": kx, "xv": vx}
+    return logits, 0.0, mask, cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    L, KV, hd, F = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim, cfg.num_audio_frames
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": p((L, batch, seq_len, KV, hd), ax, init="zeros"),
+        "v": p((L, batch, seq_len, KV, hd), ax, init="zeros"),
+        "xk": p((L, batch, F, KV, hd), ax, init="zeros"),
+        "xv": p((L, batch, F, KV, hd), ax, init="zeros"),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, pos, token):
+    x = embed_tokens(params["embed"], token)
+
+    def body(x, xs):
+        lp, kc, vc, kx, vx = xs
+        h = apply_norm(x, lp["norm1"], cfg)
+        q, k, v = qkv_proj(h, lp["attn"], cfg, jnp.asarray(pos)[None], rope=True)
+        kc = cache_update(kc, k, pos % kc.shape[1])
+        vc = cache_update(vc, v, pos % vc.shape[1])
+        y = decode_attention(q, kc, vc, pos)
+        x = x + attn_out(y, lp["attn"])
+        h = apply_norm(x, lp["norm_x"], cfg)
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn"]["wq"])
+        y = decode_attention(qx, kx, vx, pos, kind="bidir")
+        x = x + attn_out(y, lp["xattn"])
+        x = x + apply_mlp(apply_norm(x, lp["norm2"], cfg), lp["mlp"], cfg)
+        return x, (kc, vc)
+
+    x, (ks, vs) = flags.maybe_scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = apply_norm(x, params["final_norm"], cfg)
+    return lm_logits(params["embed"], x), {"k": ks, "v": vs,
+                                           "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,1 @@
+from repro.queryproc import expressions, operators, table  # noqa: F401

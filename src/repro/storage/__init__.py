@@ -1,0 +1,1 @@
+from repro.storage.catalog import Catalog, Partition, StorageNode  # noqa: F401

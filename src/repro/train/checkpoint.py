@@ -1,0 +1,168 @@
+"""Checkpointing: atomic, keep-k, async, elastic.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+         <dir>/step_<N>.tmp.<pid>/ ... -> os.replace() on completion
+
+- Atomic: writes land in a tmp dir; a single ``os.replace`` publishes the
+  step — a crash mid-save never corrupts the latest checkpoint.
+- Keep-k: older steps are pruned after a successful publish.
+- Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes on a worker thread, overlapping the next train steps.
+- Elastic restore: arrays are stored *unsharded* (this is the single-
+  process form; the multi-host design — one shard file per host + a merge
+  manifest — is documented in DESIGN.md §5). ``restore`` takes the target
+  sharding tree and lays the arrays onto whatever mesh the restarted job
+  has: a 256-chip checkpoint restores onto 512 chips (or 8) unchanged.
+- Preemption: ``PreemptionGuard`` installs a SIGTERM hook that saves and
+  exits cleanly (the cloud eviction path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ----------------------------------------------------------- writing
+    def save(self, step: int, state, extra: Optional[Dict] = None) -> Path:
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, state, extra: Optional[Dict] = None):
+        """Snapshot now, write on a worker thread."""
+        self.wait()  # one in-flight save at a time
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                self._write(step, host, extra or {})
+            except BaseException as e:  # noqa: BLE001 — surfaced in wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _write(self, step: int, host_state, extra: Dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".step_{step:08d}.tmp.{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_state)
+        # npz has no bfloat16: store as a uint16 view, record which keys
+        bf16_keys = [k for k, v in flat.items() if v.dtype == _BF16]
+        disk = {k: (v.view(np.uint16) if k in set(bf16_keys) else v)
+                for k, v in flat.items()}
+        np.savez(tmp / "arrays.npz", **disk)
+        manifest = {"step": step, "time": time.time(),
+                    "keys": sorted(flat), "bf16_keys": bf16_keys,
+                    "extra": extra}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._prune()
+        return final
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------------------------------------------------- reading
+    def all_steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if p.is_dir())
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_template, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the template's structure. ``shardings`` (optional
+        tree of NamedSharding) lays arrays onto a *different* mesh than the
+        one that saved them — the elastic-scaling path."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoints under {self.dir}"
+        final = self.dir / f"step_{step:08d}"
+        raw = np.load(final / "arrays.npz")
+        bf16 = set(self.manifest(step).get("bf16_keys", []))
+        data = {k: (raw[k].view(_BF16) if k in bf16 else raw[k])
+                for k in raw.files}
+        keys = list(_flatten(state_template))
+        leaves_t, treedef = jax.tree_util.tree_flatten(state_template)
+        assert len(keys) == len(leaves_t)
+        sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                     if shardings is not None else [None] * len(leaves_t))
+        out = []
+        for key, tmpl, sh in zip(keys, leaves_t, sh_leaves):
+            arr = data[key]
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=tmpl.dtype)
+                           if hasattr(tmpl, "dtype") else arr)
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    def manifest(self, step: int) -> Dict:
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+
+
+class PreemptionGuard:
+    """SIGTERM -> save + clean exit (cloud eviction). Use as context mgr."""
+
+    def __init__(self, save_fn: Callable[[], None]):
+        self.save_fn = save_fn
+        self.fired = False
+        self._prev = None
+
+    def __enter__(self):
+        def handler(signum, frame):
+            self.fired = True
+            self.save_fn()
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def __exit__(self, *exc):
+        signal.signal(signal.SIGTERM, self._prev)
+        return False

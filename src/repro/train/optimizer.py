@@ -1,0 +1,106 @@
+"""AdamW with ZeRO-sharded state.
+
+Optimizer moments inherit each parameter's sharding (FSDP over `data`,
+TP over `model` — see repro.distributed.sharding), so the optimizer is
+ZeRO-3 by construction: every chip owns 1/(data*model) of m and v.
+
+Moments are fp32; parameters stay in their storage dtype (bf16 master-less
+training — the fp32 moment pair plus fp32 update math recovers most of the
+precision; recorded as a deliberate memory/quality trade in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as Pm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def init_specs(param_specs) -> OptState:
+    """ParamSpec tree for the optimizer state (same logical axes as params,
+    fp32) — lets the dry-run build abstract opt state with real shardings."""
+    f32 = Pm.tree_map_specs(
+        lambda s: Pm.ParamSpec(s.shape, s.axes, jnp.float32, "zeros", 0.0),
+        param_specs)
+    step = Pm.ParamSpec((), (), jnp.int32, "zeros", 0.0)
+    return OptState(m=f32, v=f32, step=step)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def _decayed(path) -> bool:
+    """Weight decay on matmul weights only (skip norms/biases/scalars)."""
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    leafname = str(names[-1]) if names else ""
+    return not any(s in leafname for s in ("norm", "bias", "scale", "b_", "lam",
+                                           "A_log", "dt_bias", "D"))
+
+
+def apply(cfg: AdamWConfig, params, opt: OptState, grads):
+    """One AdamW step. Returns (new_params, new_opt, stats)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-6))
+    step = opt.step + 1
+    lr = schedule(cfg, opt.step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if _decayed(path) and p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    gl = jax.tree.leaves(grads)
+    ml = jax.tree.leaves(opt.m)
+    vl = jax.tree.leaves(opt.v)
+    out = [upd(path, p, g, m, v) for (path, p), g, m, v in zip(flat, gl, ml, vl)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,128 @@
+"""The two new pushdown operators (§4.2): selection bitmap and distributed
+shuffle — real-execution equivalence + accounting invariants."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.bitmap import (CacheState, combine_bitmaps, rewrite_all,
+                               split_predicate, storage_side_bitmap)
+from repro.core.shuffle import shuffle_at_compute, shuffle_at_storage
+from repro.kernels import ops as kops
+from repro.queryproc import expressions as ex
+from repro.queryproc import operators as np_ops
+from repro.queryproc import queries as Q
+from repro.queryproc import tpch
+from repro.queryproc.expressions import Col
+
+CAT = tpch.build_catalog(sf=1.0, num_nodes=4, rows_per_partition=4_000)
+
+
+# ------------------------------------------------------ selection bitmap
+def test_storage_bitmap_plus_device_apply_equals_filter():
+    """Fig 3 path: storage builds bitmap, device filters the cached column
+    with the Pallas kernel -> same rows as a direct filter."""
+    part = CAT.partitions_of("lineitem")[0].data
+    pred = (Col("l_quantity") <= 25) & (Col("l_shipmode").isin((0, 1)))
+    words, filtered_uncached = storage_side_bitmap(part, pred, ["l_orderkey"])
+    # device side: apply the shipped bitmap to the "cached" column
+    cached = jnp.asarray(part.cols["l_extendedprice"].astype(np.float32))
+    masked, cnt = kops.bitmap_apply(jnp.asarray(words), cached)
+    direct = np_ops.filter_table(part, pred)
+    assert int(cnt) == len(direct)
+    got = np.asarray(masked)
+    np.testing.assert_allclose(np.sort(got[got != 0]),
+                               np.sort(direct.cols["l_extendedprice"]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(filtered_uncached.cols["l_orderkey"],
+                                  direct.cols["l_orderkey"])
+
+
+def test_split_predicate_and_combine():
+    """Fine-grained AND split: compute-side + storage-side bitmaps AND
+    together to the full predicate (§4.2 design-space)."""
+    part = CAT.partitions_of("lineitem")[0].data
+    pred = (Col("l_quantity") <= 30) & (Col("l_discount") > 0.02) \
+        & (Col("l_shipmode").isin((0, 1, 2)))
+    cached = {"l_quantity", "l_discount"}
+    comp, stor = split_predicate(pred, cached)
+    assert comp is not None and stor is not None
+    assert ex.columns_of(comp) <= cached
+    w1 = np_ops.selection_bitmap(part, comp)
+    w2 = np_ops.selection_bitmap(part, stor)
+    full = np_ops.selection_bitmap(part, pred)
+    np.testing.assert_array_equal(combine_bitmaps(w1, w2), full)
+
+
+def test_bitmap_rewrite_accounting():
+    q = Q.build_query("Q14", fact_selectivity=0.5)
+    reqs = engine.plan_requests(q, CAT)
+    # storage-side: outputs cached
+    cache = CacheState()
+    cache.cache_columns("lineitem", {"l_partkey", "l_extendedprice",
+                                     "l_discount"})
+    rw, met = rewrite_all(reqs, cache)
+    assert met["net_bitmap"] < met["net_baseline"]
+    assert all(r.cost.s_out <= b.cost.s_out for r, b in zip(rw, reqs)
+               if r.table == "lineitem")
+    # compute-side: predicates cached -> storage scans fewer bytes
+    cache2 = CacheState()
+    cache2.cache_columns("lineitem", {"l_quantity"})
+    rw2, met2 = rewrite_all(reqs, cache2)
+    assert met2["disk_saved"] > 0
+    assert all(r.cost.s_in <= b.cost.s_in for r, b in zip(rw2, reqs)
+               if r.table == "lineitem")
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_split_predicate_semantics(seed):
+    """Random cache sets: split conjuncts re-AND to the original."""
+    part = CAT.partitions_of("lineitem")[0].data
+    rng = np.random.default_rng(seed)
+    cols = ["l_quantity", "l_discount", "l_tax", "l_shipmode"]
+    cached = {c for c in cols if rng.random() < 0.5}
+    pred = (Col("l_quantity") <= 30) & (Col("l_discount") > 0.02) \
+        & (Col("l_tax") < 0.05) & (Col("l_shipmode").isin((0, 1)))
+    comp, stor = split_predicate(pred, cached)
+    want = ex.evaluate(pred, part)
+    got = np.ones(len(part), bool)
+    if comp is not None:
+        got &= ex.evaluate(comp, part)
+    if stor is not None:
+        got &= ex.evaluate(stor, part)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------- distributed shuffle
+@pytest.mark.parametrize("table,key", [("lineitem", "l_orderkey"),
+                                       ("orders", "o_custkey")])
+def test_shuffle_placement_equivalence(table, key):
+    """Storage-side shuffle == compute-side shuffle, per target node."""
+    n = 4
+    at_storage = shuffle_at_storage(CAT, table, key, n)
+    at_compute = shuffle_at_compute(CAT, table, key, n)
+    total = 0
+    for s, c in zip(at_storage, at_compute):
+        assert engine.results_equal(s, c)
+        pid = np_ops.hash_partition_ids(s.cols[key], n)
+        assert len(set(pid.tolist())) <= 1  # all rows belong to this target
+        total += len(s)
+    assert total == len(CAT.scan_table(table))
+
+
+def test_shuffle_kernel_matches_engine():
+    keys = CAT.partitions_of("lineitem")[0].data.cols["l_orderkey"]
+    pids, hist = kops.hash_partition(jnp.asarray(keys), 4)
+    np.testing.assert_array_equal(np.asarray(pids),
+                                  np_ops.hash_partition_ids(keys, 4))
+    assert int(np.asarray(hist).sum()) == len(keys)
+
+
+def test_position_vector_bits():
+    pv = np_ops.position_vector(CAT.partitions_of("lineitem")[0].data,
+                                "l_orderkey", 4)
+    assert pv.max() < 4 and pv.min() >= 0  # log2(4)=2 bits/row suffice

@@ -1,0 +1,93 @@
+"""Multi-device behavior (shard_map collectives, step lowering on a real
+mesh). jax locks the device count at first init, so these run in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str):
+    prog = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n"
+            + textwrap.dedent(code))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_expert_all_to_all_roundtrip():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.collectives import (expert_all_to_all_dispatch,
+                                               expert_all_to_all_combine)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    E, C, d = 8, 16, 32
+    x = jnp.arange(E * C * d, dtype=jnp.float32).reshape(E, C, d)
+    disp = expert_all_to_all_dispatch(x, mesh, "model")
+    back = expert_all_to_all_combine(disp, mesh, "model")
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+    print("roundtrip ok", disp.shape)
+    """)
+    assert "roundtrip ok" in out
+
+
+def test_compressed_psum_error_feedback():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.collectives import compressed_psum
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    g = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    e = jnp.zeros_like(g)
+    approx, err = compressed_psum(g, e, mesh, "pod")
+    # int8 all-reduce approximates the true psum within quantization error
+    true = np.asarray(g).reshape(2, 8, 64).sum(0)  # psum over pod axis
+    got = np.asarray(approx).reshape(2, 8, 64)[0]
+    rel = np.abs(got - true).max() / (np.abs(true).max() + 1e-9)
+    assert rel < 0.05, rel
+    # error feedback carries the residual
+    assert float(jnp.abs(err).max()) > 0
+    print("compressed psum ok", rel)
+    """)
+    assert "compressed psum ok" in out
+
+
+@pytest.mark.parametrize("arch,shape", [("olmo-1b", "train_4k"),
+                                        ("qwen2-moe-a2.7b", "decode_32k"),
+                                        ("mamba2-2.7b", "long_500k")])
+def test_steps_lower_on_small_mesh(arch, shape):
+    """The production step builders lower+compile on a small (4,2) mesh
+    with REDUCED configs (full configs are the dry-run's job)."""
+    out = _run(f"""
+    import jax
+    import dataclasses
+    from repro.configs import get_config, get_shape
+    from repro.launch import steps
+    cfg = get_config("{arch}", reduced=True)
+    shape = dataclasses.replace(get_shape("{shape}"), global_batch=8,
+                                seq_len=256, accum=2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    b = steps.build(cfg, shape, mesh)
+    with mesh:
+        c = b.lower().compile()
+    print("compiled", c.cost_analysis()["flops"] > 0)
+    """)
+    assert "compiled True" in out
+
+
+def test_dryrun_cell_subprocess():
+    """One REAL dry-run cell (full config, 512 devices) exercises the
+    actual deliverable path end to end."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "decode_32k", "--mesh", "single", "--force",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 failures" in r.stdout

@@ -1,0 +1,130 @@
+"""Per-kernel correctness: Pallas (interpret) == ref.py oracle == numpy
+storage engine, swept over shapes/dtypes + hypothesis property tests."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ops, ref
+from repro.queryproc import operators as np_ops
+from repro.queryproc.expressions import Col
+
+RNG = np.random.default_rng(42)
+SHAPES = [32, 1000, 8192, 8192 * 2 + 517]
+BLOCKS = [1024, 8192]
+
+
+def _col(n, dtype):
+    if np.dtype(dtype).kind == "f":
+        return RNG.uniform(0, 50, n).astype(dtype)
+    return RNG.integers(0, 50, n).astype(dtype)
+
+
+# ------------------------------------------------------- predicate_bitmap
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_predicate_bitmap_matches_numpy(n, dtype):
+    q, d = _col(n, dtype), _col(n, dtype)
+    expr = (Col("q") <= 24) & ((Col("d") > 5) | Col("q").eq(7))
+    words = ops.predicate_bitmap(
+        {"q": jnp.asarray(q), "d": jnp.asarray(d)},
+        ops.compile_predicate(expr))
+    mask = ((q <= 24) & ((d > 5) | (q == 7)))
+    np.testing.assert_array_equal(np.asarray(words), np_ops.pack_bitmap(mask))
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+def test_predicate_bitmap_blocks(block):
+    n = 4 * block
+    q = _col(n, np.float32)
+    expr = Col("q") < 10
+    words = ops.predicate_bitmap({"q": jnp.asarray(q)},
+                                 ops.compile_predicate(expr), block=block)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np_ops.pack_bitmap(q < 10))
+
+
+# ----------------------------------------------------------- bitmap_apply
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_bitmap_apply(n, dtype):
+    col = _col(n, dtype)
+    mask = RNG.random(n) < 0.3
+    words = jnp.asarray(np_ops.pack_bitmap(mask))
+    masked, cnt = ops.bitmap_apply(words, jnp.asarray(col))
+    np.testing.assert_allclose(np.asarray(masked), np.where(mask, col, 0))
+    assert int(cnt) == int(mask.sum())
+
+
+# ------------------------------------------------------------ grouped_agg
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("groups", [1, 37, 256])
+def test_grouped_agg(n, groups):
+    ids = RNG.integers(0, groups, n).astype(np.int32)
+    vals = RNG.normal(size=n).astype(np.float32)
+    sums, counts = ops.grouped_agg(jnp.asarray(ids), jnp.asarray(vals), groups)
+    want = np.zeros(groups)
+    np.add.at(want, ids, vals.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(sums), want, atol=5e-2)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.bincount(ids, minlength=groups))
+
+
+def test_grouped_agg_vs_storage_engine():
+    """Kernel == the numpy grouped_agg the storage layer runs (pushback
+    equivalence: either side of the network computes the same partials)."""
+    from repro.queryproc.table import ColumnTable
+    n = 10_000
+    ids = RNG.integers(0, 16, n).astype(np.int32)
+    vals = RNG.uniform(0, 10, n)
+    t = ColumnTable({"g": ids, "v": vals})
+    want = np_ops.grouped_agg(t, ["g"], {"s": ("sum", "v")})
+    sums, _ = ops.grouped_agg(jnp.asarray(ids),
+                              jnp.asarray(vals.astype(np.float32)), 16)
+    np.testing.assert_allclose(np.asarray(sums)[want.cols["g"]],
+                               want.cols["s"], rtol=1e-3)
+
+
+# --------------------------------------------------------- hash_partition
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("parts", [2, 4, 16])
+def test_hash_partition(n, parts):
+    keys = RNG.integers(0, 1 << 31, n).astype(np.int32)
+    pids, hist = ops.hash_partition(jnp.asarray(keys), parts)
+    want = np_ops.hash_partition_ids(keys, parts)
+    np.testing.assert_array_equal(np.asarray(pids), want)
+    np.testing.assert_array_equal(np.asarray(hist),
+                                  np.bincount(want, minlength=parts))
+
+
+# -------------------------------------------------------------- property
+@given(mask=hnp.arrays(np.bool_, st.integers(1, 2000)))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(mask):
+    words = np_ops.pack_bitmap(mask)
+    np.testing.assert_array_equal(np_ops.unpack_bitmap(words, len(mask)), mask)
+    rwords = ref.pack_bitmap(jnp.asarray(np.resize(mask, -(-len(mask) // 32) * 32)))
+    got = np.asarray(rwords)
+    assert np.array_equal(got[: len(words)] & _tailmask(len(mask)), words)
+
+
+def _tailmask(n):
+    full = -(-n // 32)
+    m = np.full(full, 0xFFFFFFFF, np.uint64)
+    tail = n - 32 * (full - 1)
+    if tail < 32:
+        m[-1] = (1 << tail) - 1
+    return m.astype(np.uint32)
+
+
+@given(st.integers(1, 64), st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_hash_partition_range(seed, parts):
+    keys = np.random.default_rng(seed).integers(0, 1 << 31, 500).astype(np.int32)
+    pids = np_ops.hash_partition_ids(keys, parts)
+    assert pids.min() >= 0 and pids.max() < parts
+    # permutation-invariance: same key -> same partition
+    assert np.array_equal(np_ops.hash_partition_ids(keys[::-1], parts),
+                          pids[::-1])
