@@ -1,0 +1,78 @@
+"""Compiler suite: per-query plan-compile time and compiled-vs-hand-built
+makespan deltas (JSON), so future PRs get a trajectory.
+
+For every TPC-H query: compile through ``repro.compiler.compile_query``
+(IR -> amenability split -> PushPlans + residual), run both the compiled
+and the seed's hand-built plans through the engine, and report
+
+- ``compile_ms``      median wall-clock of IR construction + split,
+- ``frontier_*``      pushed-stage counts (compiled vs hand-built; the
+                      compiled frontier is never smaller),
+- ``makespan_*``      simulated pushable-phase makespan both ways and the
+                      delta fraction (negative = compiled plans faster,
+                      e.g. pushed dimension filters shrink S_out),
+- ``equal``           result equality, asserted.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks import common
+from repro.compiler import compile_query_detailed
+from repro.compiler.splitter import frontier_size
+from repro.core import engine
+from repro.queryproc import queries as Q
+
+
+def run(qids=None, repeats: int = 5) -> Dict:
+    qids = qids or Q.QUERY_IDS
+    cat = common.catalog(num_nodes=2)
+    cfg = common.engine_cfg("adaptive")
+    queries: Dict[str, Dict] = {}
+    for qid in qids:
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            cq = compile_query_detailed(qid)
+            times.append(time.perf_counter() - t0)
+        legacy = Q.build_query_legacy(qid)
+        rc = engine.run_query(cq.query, cat, cfg)
+        rl = engine.run_query(legacy, cat, cfg)
+        equal = engine.results_equal(rc.result, rl.result)
+        assert equal, f"{qid}: compiled result diverges from hand-built"
+        delta = (rc.t_pushable - rl.t_pushable) / max(rl.t_pushable, 1e-12)
+        queries[qid] = {
+            "compile_ms": 1e3 * sorted(times)[len(times) // 2],
+            "frontier_compiled": frontier_size(cq.query.plans),
+            "frontier_hand_built": frontier_size(legacy.plans),
+            "makespan_compiled": rc.t_pushable,
+            "makespan_hand_built": rl.t_pushable,
+            "makespan_delta_frac": delta,
+            "net_bytes_compiled": rc.net_bytes,
+            "net_bytes_hand_built": rl.net_bytes,
+            "equal": equal,
+        }
+    vals = list(queries.values())
+    return {
+        "queries": queries,
+        "all_equal": all(v["equal"] for v in vals),
+        "compile_ms_max": max(v["compile_ms"] for v in vals),
+        "n_larger_frontier": sum(
+            v["frontier_compiled"] > v["frontier_hand_built"] for v in vals),
+        "avg_makespan_delta_frac": (
+            sum(v["makespan_delta_frac"] for v in vals) / len(vals)),
+    }
+
+
+def render(out: Dict) -> str:
+    rows = [[qid, f"{v['compile_ms']:.2f}",
+             f"{v['frontier_compiled']} vs {v['frontier_hand_built']}",
+             f"{v['makespan_delta_frac']*100:+.1f}%",
+             f"{(v['net_bytes_compiled']/max(v['net_bytes_hand_built'],1)-1)*100:+.1f}%"]
+            for qid, v in out["queries"].items()]
+    tbl = common.table(rows, ["query", "compile ms", "frontier (c vs h)",
+                              "makespan delta", "net delta"])
+    return (f"{tbl}\n{out['n_larger_frontier']} queries with strictly "
+            f"larger compiled frontier; all results equal="
+            f"{out['all_equal']}")

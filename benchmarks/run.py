@@ -13,8 +13,8 @@ import time
 import traceback
 
 from benchmarks import (adaptive, bitmap_compute, bitmap_storage, breakdown,
-                        common, kernels_bench, network, optimal_gap, pa_aware,
-                        roofline, shuffle)
+                        common, compiler_bench, kernels_bench, network,
+                        optimal_gap, pa_aware, roofline, shuffle)
 
 SUITES = {
     "fig6_adaptive": adaptive,
@@ -27,6 +27,7 @@ SUITES = {
     "fig15_shuffle": shuffle,
     "kernels": kernels_bench,
     "roofline": roofline,
+    "compiler": compiler_bench,
 }
 
 
@@ -73,6 +74,14 @@ def check_claims(results: dict) -> list:
               r["avg_speedup_vs_baseline"] >= 1.2)
         claim("Fig15: shuffle pushdown avg >= 1.5x vs no-pd (paper 1.8x)",
               r["avg_speedup_vs_npd"] >= 1.5)
+    r = results.get("compiler")
+    if r:
+        claim("Compiler: every compiled query equals the hand-built plan",
+              r["all_equal"])
+        claim("Compiler: >= 1 query with strictly larger pushed frontier",
+              r["n_larger_frontier"] >= 1)
+        claim("Compiler: plan compilation under 50 ms per query",
+              r["compile_ms_max"] < 50.0)
     return warns
 
 

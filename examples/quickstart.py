@@ -8,22 +8,27 @@ Walks the paper's three contributions end to end:
 2. Selection-bitmap pushdown: ship 1 bit/row instead of filtered columns.
 3. Distributed-data-shuffle pushdown: partition at the storage node,
    route straight to the target compute node.
+
+Queries come from ``repro.compiler.compile_query``: each is a logical-plan
+IR that the compiler splits into a storage frontier + compute residual by
+the paper's §4.1 amenability principle (docs/compiler.md).
 """
 import numpy as np
 
+from repro.compiler import compile_query
 from repro.core import engine
 from repro.core.bitmap import CacheState, rewrite_all
 from repro.core.cost import StorageResources
 from repro.core.shuffle import ShuffleConfig, run_shuffle
 from repro.core.simulator import MODE_ADAPTIVE, MODE_EAGER, MODE_NO_PUSHDOWN
-from repro.queryproc import queries, tpch
+from repro.queryproc import tpch
 
 print("building TPC-H catalog (sf=2, 2 storage nodes)...")
 cat = tpch.build_catalog(sf=2.0, num_nodes=2, rows_per_partition=2_000)
 
 # ---------------------------------------------------- 1. adaptive pushdown
 print("\n== Adaptive pushdown: Q14, t_total normalized to No-pushdown ==")
-q = queries.build_query("Q14")
+q = compile_query("Q14")
 print(f"{'power':>6} {'eager':>7} {'adaptive':>9} {'admitted':>9}")
 for power in (1.0, 0.5, 0.25, 0.12, 0.06):
     res = StorageResources(storage_power=power)
@@ -41,7 +46,7 @@ print("(eager degrades when the storage layer is loaded; the arbitrator's "
 print("\n== Selection-bitmap pushdown: Q14, output columns cached ==")
 cfg = engine.EngineConfig(mode=MODE_EAGER)
 for sel in (0.2, 0.5, 0.9):
-    qs = queries.build_query("Q14", fact_selectivity=sel)
+    qs = compile_query("Q14", fact_selectivity=sel)
     reqs = engine.plan_requests(qs, cat)
     base = engine.run_query(qs, cat, cfg, requests=reqs)
     cache = CacheState()
@@ -59,7 +64,7 @@ for sel in (0.2, 0.5, 0.9):
 print("\n== Distributed shuffle pushdown: 4 compute nodes ==")
 scfg = ShuffleConfig(num_compute_nodes=4)
 for qid in ("Q7", "Q14"):
-    qq = queries.build_query(qid)
+    qq = compile_query(qid)
     c4 = engine.EngineConfig(mode=MODE_EAGER, num_compute_nodes=4)
     basep = run_shuffle(qq, cat, c4, scfg, pushdown=False)
     push = run_shuffle(qq, cat, c4, scfg, pushdown=True)

@@ -1,0 +1,27 @@
+"""Logical-plan compiler with pushdown-amenability analysis.
+
+Turns the paper's §4.1 amenability principle — *partition-parallel,
+output-reducing operator prefixes are pushdown-amenable; cross-partition
+joins and sorts are not* — from prose into executable code:
+
+- ``ir.py``          relational IR (Scan/Filter/Project/Map/Aggregate/
+                     Join/SemiJoin/Shuffle/TopK/Sort/PyOp) over the
+                     existing ``Expr`` predicates
+- ``analyzer.py``    per-operator amenability classification
+- ``splitter.py``    maximal storage frontier (lowered to ``PushPlan``)
+                     + compute-side residual
+- ``interpreter.py`` generic residual evaluator over
+                     ``queryproc/operators.py`` (replaces the seed's
+                     per-query compute closures)
+- ``tpch_ir.py``     the 15 TPC-H queries as IR constructions
+- ``compile.py``     ``compile_query(qid)`` -> engine-ready ``Query``
+
+New workloads are IR construction, not new closures — see docs/compiler.md.
+"""
+from repro.compiler import analyzer, interpreter, ir, splitter  # noqa: F401
+from repro.compiler.compile import (CompiledQuery, QUERY_IDS,  # noqa: F401
+                                    compile_ir, compile_query,
+                                    compile_query_detailed,
+                                    substitute_fact_predicate)
+from repro.compiler.splitter import (CompileError,  # noqa: F401
+                                     frontier_signature, frontier_size)

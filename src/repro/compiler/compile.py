@@ -1,0 +1,145 @@
+"""Compiler entry points: IR -> amenability split -> engine-ready Query.
+
+``compile_query(qid)`` is the drop-in replacement for the seed's hand-built
+``queries.build_query``: it builds the query's logical-plan IR, runs the
+splitter, and packages the storage frontier (``PushPlan`` per table) plus a
+generic residual interpreter as the ``Query`` the engine executes.
+
+``fact_selectivity`` reproduces the seed's evaluation knob (Figs 13/14) at
+the IR level: the fact table's pushable filters are replaced by
+``l_quantity <= 50*sel`` before splitting, leaving derives/aggregates and
+the residual untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.compiler import analyzer, interpreter, ir, splitter, tpch_ir
+from repro.queryproc import expressions as ex
+from repro.queryproc.expressions import Col
+from repro.queryproc.queries import Query
+
+QUERY_IDS: List[str] = list(tpch_ir.QUERY_IDS)
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """A compiled query plus everything the compilation derived."""
+    qid: str
+    root: ir.Node                       # logical plan as authored
+    residual: ir.Node                   # compute-side remainder
+    query: Query                        # engine-ready (plans + compute)
+    amenability: List                   # [(node, Amenability)] for root
+
+    @property
+    def plans(self):
+        return self.query.plans
+
+    def frontier_signature(self) -> Dict[str, str]:
+        return splitter.frontier_signature(self.query.plans)
+
+    def frontier_size(self) -> int:
+        return splitter.frontier_size(self.query.plans)
+
+
+def compile_ir(root: ir.Node, qid: str = "Q?") -> CompiledQuery:
+    """Compile an arbitrary logical plan (not just the TPC-H registry)."""
+    sp = splitter.split(root)
+    residual = sp.residual
+    q = Query(qid=qid.upper(), plans=sp.plans,
+              compute=lambda merged: interpreter.run(residual, merged),
+              shuffle_keys=sp.shuffle_keys)
+    return CompiledQuery(qid.upper(), root, residual, q, analyzer.analyze(root))
+
+
+def compile_query_detailed(qid: str,
+                           fact_selectivity: Optional[float] = None
+                           ) -> CompiledQuery:
+    root = tpch_ir.build_ir(qid)
+    if fact_selectivity is not None and "lineitem" in ir.base_tables(root):
+        thresh = float(np.ceil(50 * fact_selectivity))
+        root = substitute_fact_predicate(
+            root, Col("l_quantity") <= thresh)
+    return compile_ir(root, qid)
+
+
+def compile_query(qid: str, fact_selectivity: Optional[float] = None) -> Query:
+    """IR -> split -> engine-ready Query (the main entry point)."""
+    return compile_query_detailed(qid, fact_selectivity).query
+
+
+# ----------------------------------------------- fact-selectivity rewrite
+def substitute_fact_predicate(root: ir.Node, pred: ex.Expr,
+                              table: str = "lineitem") -> ir.Node:
+    """Replace the fact table's *pushable* filters (base-column predicates
+    on the unary chain above its Scan) with ``pred``; residual filters on
+    derived columns (Q4's _late, Q12's _ontime) are preserved."""
+
+    def rec(node: ir.Node, memo: Dict[int, ir.Node]) -> ir.Node:
+        if id(node) in memo:
+            return memo[id(node)]
+        if isinstance(node, ir.Scan):
+            out: ir.Node = ir.Filter(node, pred) if node.table == table \
+                else node
+        elif isinstance(node, ir.UNARY_TYPES):
+            child = rec(node.child, memo)
+            if (isinstance(node, ir.Filter)
+                    and _chain_scan_table(node) == table
+                    and not _above_blocking_op(node)
+                    and not (ex.columns_of(node.predicate)
+                             & _chain_derived_names(node))):
+                out = child  # original pushable fact filter: dropped
+            else:
+                out = ir.rebuild_unary(node, child)
+        elif isinstance(node, (ir.Join, ir.SemiJoin)):
+            out = dataclasses.replace(node, left=rec(node.left, memo),
+                                      right=rec(node.right, memo))
+        elif isinstance(node, ir.PyOp):
+            out = dataclasses.replace(node, children=tuple(
+                rec(c, memo) for c in node.children))
+        else:
+            out = node
+        memo[id(node)] = out
+        return out
+
+    return rec(root, {})
+
+
+def _chain_scan_table(node: ir.Node) -> Optional[str]:
+    cur = node
+    while isinstance(cur, ir.UNARY_TYPES):
+        cur = cur.child
+    return cur.table if isinstance(cur, ir.Scan) else None
+
+
+def _above_blocking_op(node: ir.Node) -> bool:
+    """True when an Aggregate/TopK sits below ``node`` on its chain: a
+    filter up there is residual by the splitter's own absorption rule
+    (never a pushable fact filter), so substitution must not drop it —
+    even when its columns are base columns (e.g. a group key)."""
+    cur = node.child if isinstance(node, ir.UNARY_TYPES) else node
+    while isinstance(cur, ir.UNARY_TYPES):
+        if isinstance(cur, (ir.Aggregate, ir.TopK)):
+            return True
+        cur = cur.child
+    return False
+
+
+def _chain_derived_names(node: ir.Node) -> set:
+    """Columns that only exist above some producer on the chain below
+    ``node`` — Map derives AND Aggregate outputs. A Filter over any of
+    them (Q4 _late, Q12 _ontime, Q18's HAVING on sum_qty) is not a base
+    fact filter and must survive substitution."""
+    names: set = set()
+    cur = node
+    while isinstance(cur, ir.UNARY_TYPES):
+        if cur is not node:
+            if isinstance(cur, ir.Map):
+                names |= {n for n, _, _ in cur.derives}
+            elif isinstance(cur, ir.Aggregate):
+                names |= {out for out, _, _ in cur.aggs}
+        cur = cur.child
+    return names

@@ -1,0 +1,76 @@
+"""Generic residual interpreter over ``queryproc/operators.py``.
+
+Replaces the per-query hand-written ``compute`` closures of the seed: the
+splitter's residual IR is evaluated bottom-up against the merged pushdown
+results (``Dict[table, ColumnTable]``), each node dispatching to the exact
+numpy operator the closures used. One interpreter, fifteen queries.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.compiler import ir
+from repro.queryproc import expressions as ex
+from repro.queryproc import operators as ops
+from repro.queryproc.table import ColumnTable
+
+
+def run(node: ir.Node, merged: Dict[str, ColumnTable]) -> ColumnTable:
+    """Evaluate a residual plan against the merged pushdown results.
+    Shared subtrees (DAGs) are evaluated once via an id-keyed memo."""
+    return _run(node, merged, {})
+
+
+def _run(node: ir.Node, merged: Dict[str, ColumnTable],
+         memo: Dict[int, ColumnTable]) -> ColumnTable:
+    if id(node) in memo:
+        return memo[id(node)]
+    out = _eval(node, merged, memo)
+    memo[id(node)] = out
+    return out
+
+
+def _eval(node: ir.Node, merged: Dict[str, ColumnTable],
+          memo: Dict[int, ColumnTable]) -> ColumnTable:
+    def run(n, m):  # noqa: A001 — keep the recursive body readable
+        return _run(n, m, memo)
+
+    if isinstance(node, (ir.Merged, ir.Scan)):
+        return merged[node.table]
+    if isinstance(node, ir.Filter):
+        t = run(node.child, merged)
+        return t.filter(ex.evaluate(node.predicate, t))
+    if isinstance(node, ir.Project):
+        t = run(node.child, merged)
+        return t.select([c for c in node.columns if c in t.cols])
+    if isinstance(node, ir.Map):
+        t = run(node.child, merged)
+        cols = dict(t.cols)
+        for name, incols, fn in node.derives:
+            cols[name] = fn(*[cols[c] for c in incols])
+        return ColumnTable(cols)
+    if isinstance(node, ir.Aggregate):
+        t = run(node.child, merged)
+        return ops.grouped_agg(t, list(node.keys),
+                               {out: (fn, col) for out, fn, col in node.aggs})
+    if isinstance(node, ir.Join):
+        return ops.hash_join(run(node.left, merged), run(node.right, merged),
+                             node.lkey, node.rkey)
+    if isinstance(node, ir.SemiJoin):
+        left = run(node.left, merged)
+        right = run(node.right, merged)
+        mask = np.isin(left.cols[node.lkey], np.unique(right.cols[node.rkey]))
+        return left.filter(~mask if node.anti else mask)
+    if isinstance(node, ir.TopK):
+        return ops.top_k(run(node.child, merged), node.col, node.k,
+                         node.ascending)
+    if isinstance(node, ir.Sort):
+        return ops.sort_table(run(node.child, merged), list(node.columns),
+                              ascending=node.ascending)
+    if isinstance(node, ir.Shuffle):  # redistribution marker: row-preserving
+        return run(node.child, merged)
+    if isinstance(node, ir.PyOp):
+        return node.fn(*[run(c, merged) for c in node.children])
+    raise TypeError(f"unknown IR node: {node!r}")

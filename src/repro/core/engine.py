@@ -144,6 +144,14 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     return out
 
 
+def compile_and_run(qid: str, catalog: Catalog, cfg: EngineConfig,
+                    fact_selectivity: Optional[float] = None) -> QueryRun:
+    """Compiler front door: logical-plan IR -> amenability split -> run.
+    Equivalent to ``run_query(compiler.compile_query(qid), ...)``."""
+    from repro.compiler import compile_query  # deferred: avoids cycle
+    return run_query(compile_query(qid, fact_selectivity), catalog, cfg)
+
+
 # ------------------------------------------------------------ validation
 def theoretical_split(query: Query, catalog: Catalog, res: StorageResources):
     """Discrete oracle split (§3.1) for the gap evaluation (Fig 7)."""

@@ -118,7 +118,8 @@ def estimate_cost(plan: PushPlan, part: Partition) -> RequestCost:
         keys, aggs = plan.agg
         groups = 1
         for k in keys:
-            groups *= max(1, stats[k].ndv)
+            # derived group keys have no stored stats: assume the cap
+            groups *= max(1, stats[k].ndv if k in stats else _AGG_OUT_ROWS)
         groups = min(groups, _AGG_OUT_ROWS, len(data))
         s_out = groups * 8 * (len(keys) + len(aggs))
     else:

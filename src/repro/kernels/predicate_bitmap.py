@@ -69,6 +69,9 @@ def compile_predicate(expr: ex.Expr) -> Callable:
         op = {"<=": jnp.less_equal, "<": jnp.less, ">=": jnp.greater_equal,
               ">": jnp.greater, "==": jnp.equal}[expr.op]
         name, v = expr.col.name, expr.value
+        if isinstance(v, ex.Col):  # column-column compare (e.g. Q4-style)
+            rname = v.name
+            return lambda cols: op(cols[name], cols[rname])
         return lambda cols: op(cols[name], v)
     if isinstance(expr, ex.In):
         name, vals = expr.col.name, expr.values

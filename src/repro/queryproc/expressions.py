@@ -56,7 +56,7 @@ class Col(Expr):
 class Cmp(Expr):
     op: str
     col: Col
-    value: Any
+    value: Any  # scalar, or Col for a column-column comparison
 
 
 @dataclasses.dataclass
@@ -83,7 +83,9 @@ _OPS = {"<=": np.less_equal, "<": np.less, ">=": np.greater_equal,
 
 def evaluate(expr: Expr, table: ColumnTable) -> np.ndarray:
     if isinstance(expr, Cmp):
-        return _OPS[expr.op](table.cols[expr.col.name], expr.value)
+        rhs = (table.cols[expr.value.name] if isinstance(expr.value, Col)
+               else expr.value)
+        return _OPS[expr.op](table.cols[expr.col.name], rhs)
     if isinstance(expr, In):
         return np.isin(table.cols[expr.col.name], expr.values)
     if isinstance(expr, And):
@@ -95,6 +97,8 @@ def evaluate(expr: Expr, table: ColumnTable) -> np.ndarray:
 
 def columns_of(expr: Expr) -> set:
     if isinstance(expr, Cmp):
+        if isinstance(expr.value, Col):
+            return {expr.col.name, expr.value.name}
         return {expr.col.name}
     if isinstance(expr, In):
         return {expr.col.name}
@@ -106,6 +110,8 @@ def columns_of(expr: Expr) -> set:
 def estimate_selectivity(expr: Expr, stats: Dict[str, ColumnStats]) -> float:
     """Uniform-range cardinality estimate (the paper's lightweight model)."""
     if isinstance(expr, Cmp):
+        if isinstance(expr.value, Col):
+            return 0.5  # column-column compare: no per-column range applies
         st = stats.get(expr.col.name)
         if st is None or st.max <= st.min:
             return 0.5

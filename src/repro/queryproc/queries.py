@@ -1,4 +1,4 @@
-"""TPC-H queries as (pushable per-table plans, compute-layer rest).
+"""TPC-H queries: compiled entry point + the hand-built seed reference.
 
 15 of the 22 TPC-H queries — every query named in the paper's figures
 (Q1, Q3, Q4, Q6, Q12, Q14, Q19 in Figs 1/6-14; Q7, Q8, Q17 for shuffle in
@@ -6,10 +6,21 @@ Fig 15; Q15, Q18, Q22 for coverage). Q2/Q9/Q11/Q13/Q16/Q20/Q21 are omitted
 (multi-level correlated subqueries orthogonal to pushdown; noted in
 DESIGN.md §7).
 
-Each query = per-scanned-table ``PushPlan`` + a ``compute`` closure over the
-merged pushdown results. The SAME plan executes at storage (pushdown) or at
-the compute layer on raw shipped partitions (pushback / no-pushdown), so
-every execution mode returns identical results — the engine asserts this.
+``build_query`` now routes through ``repro.compiler``: each query is a
+logical-plan IR construction (``compiler/tpch_ir.py``) that the compiler
+splits into a maximal storage frontier + compute residual — the paper's
+§4.1 amenability principle, derived instead of frozen at authoring time.
+
+The hand-built builders below (``q1`` .. ``q22``, via
+``build_query_legacy``) are the *seed reference*: each query = per-table
+``PushPlan`` + a bespoke ``compute`` closure with the amenability split
+decided by hand. ``tests/test_compiler.py`` asserts the compiled plans
+reproduce their results exactly — on several queries with a strictly
+larger pushed-down frontier (see docs/compiler.md).
+
+Either way, the SAME plan executes at storage (pushdown) or at the compute
+layer on raw shipped partitions (pushback / no-pushdown), so every
+execution mode returns identical results — the engine asserts this.
 
 ``fact_selectivity`` rebuilds a query with the fact-table predicate replaced
 by ``l_quantity <= 50*sel`` (uniform 1..50 -> selectivity ~= sel), the knob
@@ -405,6 +416,16 @@ QUERY_IDS: List[str] = sorted(_BUILDERS, key=lambda q: int(q[1:]))
 
 
 def build_query(qid: str, fact_selectivity: Optional[float] = None) -> Query:
+    """Compile ``qid`` from its logical-plan IR (storage frontier derived
+    by the amenability splitter — see ``repro.compiler``)."""
+    from repro.compiler import compile_query  # deferred: avoids cycle
+    return compile_query(qid, fact_selectivity)
+
+
+def build_query_legacy(qid: str,
+                       fact_selectivity: Optional[float] = None) -> Query:
+    """The seed's hand-built plans (frozen amenability split) — kept as the
+    reference the compiled plans are asserted equal against."""
     q = _BUILDERS[qid.upper()]()
     if fact_selectivity is not None and "lineitem" in q.plans:
         thresh = float(np.ceil(50 * fact_selectivity))

@@ -72,11 +72,13 @@ class ColumnTable:
 
     @staticmethod
     def concat(tables: List["ColumnTable"]) -> "ColumnTable":
-        tables = [t for t in tables if len(t)]
-        if not tables:
-            return ColumnTable({})
-        cols = tables[0].columns
-        return ColumnTable({c: np.concatenate([t.cols[c] for t in tables]) for c in cols})
+        nonempty = [t for t in tables if len(t)]
+        if not nonempty:
+            # keep the schema: a filter matching zero rows everywhere must
+            # still yield a joinable (0-row, correct-columns) table
+            return tables[0] if tables else ColumnTable({})
+        cols = nonempty[0].columns
+        return ColumnTable({c: np.concatenate([t.cols[c] for t in nonempty]) for c in cols})
 
     def __repr__(self):
         return f"ColumnTable({len(self)} rows x {self.columns})"

@@ -1,9 +1,15 @@
 """Adaptive-pushdown core: cost model, optimum (Eq 1-7), Algorithm 1,
-simulator invariants — unit + hypothesis property tests."""
-import hypothesis.strategies as st
+simulator invariants — unit + property tests (hypothesis optional: a
+deterministic sweep covers the same invariants when it is absent)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dependency — see pyproject.toml [test]
+    HAVE_HYPOTHESIS = False
 
 from repro.core import optimum
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN, Arbitrator
@@ -25,9 +31,7 @@ def test_eq6_closed_form():
     assert optimum.n_opt_uniform(100, 0.0) == 0.0  # no pushdown layer
 
 
-@given(st.floats(0.01, 50.0), st.integers(1, 500))
-@settings(max_examples=50, deadline=None)
-def test_eq7_speedup_bounds(k, N):
+def _check_eq7(k, N):
     """T_opt = k/(k+1) T_pd = 1/(k+1) T_npd <= min(T_pd, T_npd)."""
     t_pd = 1.0
     t_npd = k * t_pd
@@ -39,18 +43,46 @@ def test_eq7_speedup_bounds(k, N):
             >= optimum.n_opt_uniform(N, k) - 1e-9)
 
 
-@given(st.lists(st.tuples(st.integers(10_000, 10**6),
-                          st.integers(100, 10**6),
-                          st.integers(10_000, 2 * 10**6)),
-                min_size=2, max_size=40))
-@settings(max_examples=30, deadline=None)
-def test_discrete_optimum_beats_endpoints(specs):
+if HAVE_HYPOTHESIS:
+    @given(st.floats(0.01, 50.0), st.integers(1, 500))
+    @settings(max_examples=50, deadline=None)
+    def test_eq7_speedup_bounds(k, N):
+        _check_eq7(k, N)
+
+
+@pytest.mark.parametrize("k", [0.01, 0.3, 1.0, 3.7, 50.0])
+@pytest.mark.parametrize("N", [1, 17, 500])
+def test_eq7_speedup_bounds_deterministic(k, N):
+    _check_eq7(k, N)
+
+
+def _check_discrete_optimum(specs):
     costs = [RequestCost(a, b, c) for a, b, c in specs]
     best = optimum.discrete_optimum(costs, RES)
     all_pd = optimum._time_of_split(costs, [True] * len(costs), RES)[0]
     all_pb = optimum._time_of_split(costs, [False] * len(costs), RES)[0]
     assert best.time <= min(all_pd, all_pb) + 1e-9
     assert 0 <= best.n_pushdown <= len(costs)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(10_000, 10**6),
+                              st.integers(100, 10**6),
+                              st.integers(10_000, 2 * 10**6)),
+                    min_size=2, max_size=40))
+    @settings(max_examples=30, deadline=None)
+    def test_discrete_optimum_beats_endpoints(specs):
+        _check_discrete_optimum(specs)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_discrete_optimum_beats_endpoints_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 41))
+    specs = [(int(rng.integers(10_000, 10**6)),
+              int(rng.integers(100, 10**6)),
+              int(rng.integers(10_000, 2 * 10**6))) for _ in range(n)]
+    _check_discrete_optimum(specs)
 
 
 # ------------------------------------------------------------ Algorithm 1

@@ -1,11 +1,17 @@
 """Per-kernel correctness: Pallas (interpret) == ref.py oracle == numpy
-storage engine, swept over shapes/dtypes + hypothesis property tests."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+storage engine, swept over shapes/dtypes + property tests (hypothesis
+optional: deterministic sweeps cover the same invariants when absent)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dependency — see pyproject.toml [test]
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.queryproc import operators as np_ops
@@ -33,6 +39,18 @@ def test_predicate_bitmap_matches_numpy(n, dtype):
         ops.compile_predicate(expr))
     mask = ((q <= 24) & ((d > 5) | (q == 7)))
     np.testing.assert_array_equal(np.asarray(words), np_ops.pack_bitmap(mask))
+
+
+def test_predicate_bitmap_col_col():
+    """Column-column Cmp (the compiler IR's Q4-style compare) evaluates
+    identically in the kernel and numpy engines (one plan, two engines)."""
+    a, b = _col(1000, np.float32), _col(1000, np.float32)
+    expr = (Col("a") < Col("b")) & (Col("a") > 5)
+    words = ops.predicate_bitmap(
+        {"a": jnp.asarray(a), "b": jnp.asarray(b)},
+        ops.compile_predicate(expr))
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np_ops.pack_bitmap((a < b) & (a > 5)))
 
 
 @pytest.mark.parametrize("block", BLOCKS)
@@ -100,14 +118,26 @@ def test_hash_partition(n, parts):
 
 
 # -------------------------------------------------------------- property
-@given(mask=hnp.arrays(np.bool_, st.integers(1, 2000)))
-@settings(max_examples=30, deadline=None)
-def test_pack_unpack_roundtrip(mask):
+def _check_pack_unpack(mask):
     words = np_ops.pack_bitmap(mask)
     np.testing.assert_array_equal(np_ops.unpack_bitmap(words, len(mask)), mask)
     rwords = ref.pack_bitmap(jnp.asarray(np.resize(mask, -(-len(mask) // 32) * 32)))
     got = np.asarray(rwords)
     assert np.array_equal(got[: len(words)] & _tailmask(len(mask)), words)
+
+
+if HAVE_HYPOTHESIS:
+    @given(mask=hnp.arrays(np.bool_, st.integers(1, 2000)))
+    @settings(max_examples=30, deadline=None)
+    def test_pack_unpack_roundtrip(mask):
+        _check_pack_unpack(mask)
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 517, 2000])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pack_unpack_roundtrip_deterministic(n, seed):
+    mask = np.random.default_rng(seed).random(n) < 0.5
+    _check_pack_unpack(mask)
 
 
 def _tailmask(n):
@@ -119,12 +149,23 @@ def _tailmask(n):
     return m.astype(np.uint32)
 
 
-@given(st.integers(1, 64), st.integers(2, 64))
-@settings(max_examples=25, deadline=None)
-def test_hash_partition_range(seed, parts):
+def _check_hash_partition_range(seed, parts):
     keys = np.random.default_rng(seed).integers(0, 1 << 31, 500).astype(np.int32)
     pids = np_ops.hash_partition_ids(keys, parts)
     assert pids.min() >= 0 and pids.max() < parts
     # permutation-invariance: same key -> same partition
     assert np.array_equal(np_ops.hash_partition_ids(keys[::-1], parts),
                           pids[::-1])
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 64), st.integers(2, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_hash_partition_range(seed, parts):
+        _check_hash_partition_range(seed, parts)
+
+
+@pytest.mark.parametrize("seed", [1, 17, 64])
+@pytest.mark.parametrize("parts", [2, 7, 64])
+def test_hash_partition_range_deterministic(seed, parts):
+    _check_hash_partition_range(seed, parts)
