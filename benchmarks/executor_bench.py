@@ -1,0 +1,166 @@
+"""Executor suite: REAL wall-clock of the fused batched executor vs the
+per-partition reference path (not simulated makespan — the one benchmark
+that measures what the Python actually does).
+
+For every TPC-H query: plan the per-partition requests once, then time
+
+- ``reference``  the seed's interpretive loop (``execute_push_plan`` per
+                 partition, plan re-walked each time),
+- ``batched``    compile-once plans + one vectorized multi-partition pass
+                 per (table, plan) (``core.executor``),
+
+asserting the merged tables are byte-identical every repeat. Also times
+``plan_requests`` both ways (compiled cost memoization vs per-partition
+recomputation). The consolidated summary lands in ``BENCH_engine.json`` at
+the repo root — one file appended per PR, the cross-PR perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import engine
+from repro.core.executor import compile_push_plan
+from repro.core.plan import estimate_cost
+from repro.queryproc import queries as Q
+
+ROOT_BENCH = Path("BENCH_engine.json")
+# the CI perf smoke and `run.py --quick` share this exact configuration
+QUICK_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q14", "Q18"), "repeats": 3,
+                "sf": 2.0}
+
+
+def _time(fn, repeats: int) -> float:
+    fn()  # warm (compile caches, page in columns)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _tables_identical(a, b) -> bool:
+    if set(a) != set(b):
+        return False
+    for t in a:
+        if a[t].columns != b[t].columns:
+            return False
+        for c in a[t].columns:
+            x, y = a[t].cols[c], b[t].cols[c]
+            if x.dtype != y.dtype or not np.array_equal(x, y, equal_nan=True):
+                return False
+    return True
+
+
+def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
+    qids = list(qids or Q.QUERY_IDS)
+    cat = common.catalog(num_nodes=2, sf=sf or common.SF)
+    n_parts = len(cat.partitions_of("lineitem"))
+    queries: Dict[str, Dict] = {}
+    for qid in qids:
+        q = Q.build_query(qid)
+        reqs = engine.plan_requests(q, cat)
+        ref = engine.execute_requests(reqs, engine.EXECUTOR_REFERENCE)
+        bat = engine.execute_requests(reqs, engine.EXECUTOR_BATCHED)
+        identical = _tables_identical(ref, bat)
+        assert identical, f"{qid}: batched merged tables diverge"
+        t_ref = _time(lambda: engine.execute_requests(
+            reqs, engine.EXECUTOR_REFERENCE), repeats)
+        t_bat = _time(lambda: engine.execute_requests(
+            reqs, engine.EXECUTOR_BATCHED), repeats)
+        # planning: compiled per-plan cost memoization vs per-partition
+        t_plan_ref = _time(
+            lambda: [estimate_cost(r.plan, r.part) for r in reqs], repeats)
+        t_plan_bat = _time(
+            lambda: [compile_push_plan(r.plan).estimate_cost(r.part)
+                     for r in reqs], repeats)
+        queries[qid] = {
+            "n_requests": len(reqs),
+            "t_reference_ms": 1e3 * t_ref,
+            "t_batched_ms": 1e3 * t_bat,
+            "speedup": t_ref / max(t_bat, 1e-12),
+            "t_plan_reference_ms": 1e3 * t_plan_ref,
+            "t_plan_batched_ms": 1e3 * t_plan_bat,
+            "plan_speedup": t_plan_ref / max(t_plan_bat, 1e-12),
+            "identical": identical,
+        }
+    vals = list(queries.values())
+    tot_ref = sum(v["t_reference_ms"] for v in vals)
+    tot_bat = sum(v["t_batched_ms"] for v in vals)
+    out = {
+        "sf": sf or common.SF,
+        "lineitem_partitions": n_parts,
+        "repeats": repeats,
+        "queries": queries,
+        "all_identical": all(v["identical"] for v in vals),
+        "total_reference_ms": tot_ref,
+        "total_batched_ms": tot_bat,
+        "total_speedup": tot_ref / max(tot_bat, 1e-12),
+        "geomean_speedup": float(np.exp(np.mean(
+            [np.log(v["speedup"]) for v in vals]))),
+        "min_speedup": min(v["speedup"] for v in vals),
+        "max_speedup": max(v["speedup"] for v in vals),
+    }
+    return out
+
+
+def render(out: Dict) -> str:
+    rows: List[List] = []
+    for qid, v in out["queries"].items():
+        rows.append([qid, v["n_requests"],
+                     f"{v['t_reference_ms']:.2f}", f"{v['t_batched_ms']:.2f}",
+                     f"{v['speedup']:.2f}x", f"{v['plan_speedup']:.2f}x",
+                     "yes" if v["identical"] else "NO"])
+    head = ["query", "reqs", "ref_ms", "batched_ms", "speedup",
+            "plan_speedup", "identical"]
+    summary = (f"\ntotal {out['total_reference_ms']:.1f}ms -> "
+               f"{out['total_batched_ms']:.1f}ms "
+               f"({out['total_speedup']:.2f}x; geomean "
+               f"{out['geomean_speedup']:.2f}x, min {out['min_speedup']:.2f}x)")
+    return common.table(rows, head) + summary
+
+
+def update_root_bench(out: Dict, path: Path = ROOT_BENCH) -> Path:
+    """Consolidated cross-PR trajectory file at the repo root: ``latest``
+    per suite plus an appended history of headline numbers."""
+    doc = {}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except (ValueError, OSError):
+            doc = {}
+    entry = doc.setdefault("executor", {"history": []})
+    headline = {
+        "sf": out["sf"],
+        "total_speedup": round(out["total_speedup"], 3),
+        "geomean_speedup": round(out["geomean_speedup"], 3),
+        "total_batched_ms": round(out["total_batched_ms"], 2),
+        "total_reference_ms": round(out["total_reference_ms"], 2),
+        "all_identical": out["all_identical"],
+    }
+    entry["latest"] = out
+    entry.setdefault("history", []).append(headline)
+    path.write_text(json.dumps(doc, indent=1, default=float))
+    return path
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="5 queries, 3 repeats, sf=2 (the CI perf smoke)")
+    args = ap.parse_args()
+    result = run(**(QUICK_KWARGS if args.quick else {}))
+    common.save_report("executor", result)
+    p = update_root_bench(result)
+    print(render(result))
+    print(f"\nwrote reports/bench/executor.json and {p}")
+    if not result["all_identical"]:
+        raise SystemExit(1)

@@ -13,8 +13,8 @@ import time
 import traceback
 
 from benchmarks import (adaptive, bitmap_compute, bitmap_storage, breakdown,
-                        common, compiler_bench, kernels_bench, network,
-                        optimal_gap, pa_aware, roofline, shuffle)
+                        common, compiler_bench, executor_bench, kernels_bench,
+                        network, optimal_gap, pa_aware, roofline, shuffle)
 
 SUITES = {
     "fig6_adaptive": adaptive,
@@ -28,6 +28,7 @@ SUITES = {
     "kernels": kernels_bench,
     "roofline": roofline,
     "compiler": compiler_bench,
+    "executor": executor_bench,
 }
 
 
@@ -82,6 +83,12 @@ def check_claims(results: dict) -> list:
               r["n_larger_frontier"] >= 1)
         claim("Compiler: plan compilation under 50 ms per query",
               r["compile_ms_max"] < 50.0)
+    r = results.get("executor")
+    if r:
+        claim("Executor: batched merged tables byte-identical on all queries",
+              r["all_identical"])
+        claim("Executor: >= 2x total wall-clock over per-partition reference",
+              r["total_speedup"] >= 2.0)
     return warns
 
 
@@ -104,9 +111,13 @@ def main() -> int:
             if args.quick and name == "fig6_adaptive":
                 kwargs = {"powers": (1.0, 0.5, 0.25, 0.06),
                           "qids": ("Q1", "Q6", "Q12", "Q14", "Q19")}
+            if args.quick and name == "executor":
+                kwargs = executor_bench.QUICK_KWARGS
             out = mod.run(**kwargs)
             results[name] = out
             common.save_report(name, out)
+            if name == "executor":
+                executor_bench.update_root_bench(out)
             print(mod.render(out))
             print(f"[{time.time()-t0:.1f}s]")
         except Exception:  # noqa: BLE001

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.compiler import analyzer, interpreter, ir, splitter, tpch_ir
+from repro.compiler import analyzer, interpreter, ir, pushability, splitter, tpch_ir
 from repro.queryproc import expressions as ex
 from repro.queryproc.expressions import Col
 from repro.queryproc.queries import Query
@@ -86,11 +86,12 @@ def substitute_fact_predicate(root: ir.Node, pred: ex.Expr,
                 else node
         elif isinstance(node, ir.UNARY_TYPES):
             child = rec(node.child, memo)
+            # the splitter's own absorption rule (compiler/pushability.py)
+            # decides what counts as a pushable fact filter — one shared
+            # predicate, so substitution and splitting cannot drift
             if (isinstance(node, ir.Filter)
-                    and _chain_scan_table(node) == table
-                    and not _above_blocking_op(node)
-                    and not (ex.columns_of(node.predicate)
-                             & _chain_derived_names(node))):
+                    and pushability.chain_scan_table(node) == table
+                    and pushability.filter_absorbable(node)):
                 out = child  # original pushable fact filter: dropped
             else:
                 out = ir.rebuild_unary(node, child)
@@ -108,38 +109,3 @@ def substitute_fact_predicate(root: ir.Node, pred: ex.Expr,
     return rec(root, {})
 
 
-def _chain_scan_table(node: ir.Node) -> Optional[str]:
-    cur = node
-    while isinstance(cur, ir.UNARY_TYPES):
-        cur = cur.child
-    return cur.table if isinstance(cur, ir.Scan) else None
-
-
-def _above_blocking_op(node: ir.Node) -> bool:
-    """True when an Aggregate/TopK sits below ``node`` on its chain: a
-    filter up there is residual by the splitter's own absorption rule
-    (never a pushable fact filter), so substitution must not drop it —
-    even when its columns are base columns (e.g. a group key)."""
-    cur = node.child if isinstance(node, ir.UNARY_TYPES) else node
-    while isinstance(cur, ir.UNARY_TYPES):
-        if isinstance(cur, (ir.Aggregate, ir.TopK)):
-            return True
-        cur = cur.child
-    return False
-
-
-def _chain_derived_names(node: ir.Node) -> set:
-    """Columns that only exist above some producer on the chain below
-    ``node`` — Map derives AND Aggregate outputs. A Filter over any of
-    them (Q4 _late, Q12 _ontime, Q18's HAVING on sum_qty) is not a base
-    fact filter and must survive substitution."""
-    names: set = set()
-    cur = node
-    while isinstance(cur, ir.UNARY_TYPES):
-        if cur is not node:
-            if isinstance(cur, ir.Map):
-                names |= {n for n, _, _ in cur.derives}
-            elif isinstance(cur, ir.Aggregate):
-                names |= {out for out, _, _ in cur.aggs}
-        cur = cur.child
-    return names

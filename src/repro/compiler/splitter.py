@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.compiler import analyzer, ir
+from repro.compiler import analyzer, ir, pushability
 from repro.core.plan import PushPlan
 from repro.queryproc import expressions as ex
 
@@ -112,7 +112,6 @@ def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
 
     pred: Optional[ex.Expr] = None
     derives: List[ir.DeriveSpec] = []
-    derived_names: List[str] = []
     out_derived: List[str] = []  # derives not (yet) pruned by a Project
     columns: Tuple[str, ...] = scan.columns
     agg: Optional[Tuple[Tuple[str, ...], Tuple[ir.AggSpec, ...]]] = None
@@ -123,10 +122,11 @@ def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
         if not analyzer.classify(node).pushable:
             break
         if isinstance(node, ir.Filter):
-            # PushPlan evaluates the predicate before derives: only sound
-            # for predicates over base columns (row-wise ops commute then)
-            if agg or topk or (ex.columns_of(node.predicate)
-                               & set(derived_names)):
+            # the shared pushability rule (compiler/pushability.py): only
+            # base-column predicates below any agg/top-k may be absorbed —
+            # the same predicate substitute_fact_predicate uses, so the
+            # two walks cannot drift
+            if not pushability.filter_absorbable(node):
                 break
             pred = (node.predicate if pred is None
                     else ex.And(pred, node.predicate))
@@ -134,7 +134,6 @@ def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
             if agg or topk:
                 break
             derives.extend(node.derives)
-            derived_names.extend(n for n, _, _ in node.derives)
             out_derived.extend(n for n, _, _ in node.derives)
         elif isinstance(node, ir.Project):
             if agg or topk:

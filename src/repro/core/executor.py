@@ -1,0 +1,312 @@
+"""Fused batched storage executor: compile-once PushPlans, vectorized
+multi-partition execution.
+
+The reference path (``core.plan.execute_push_plan``) interprets a
+``PushPlan`` per partition: it re-walks the predicate expression tree,
+re-derives columns, and re-runs the grouping machinery for every one of the
+~160 per-partition requests a query issues. The paper's pushdown wins rest
+on the storage-side operator path being tight (PushdownDB; Farview), so
+this module lowers each plan **once per query**:
+
+- ``compile_push_plan(plan)`` -> ``CompiledPushPlan``: the predicate is
+  compiled to a single numpy kernel (``expressions.compile_expr``, the same
+  lowering the Pallas ``predicate_bitmap`` kernel uses), the derive/agg/
+  top-k stages are bound into one fused closure, and plan-level invariants
+  (``accessed_columns``, the cost model's per-plan constants, the
+  selectivity closure) are memoized instead of recomputed per partition.
+
+- ``CompiledPushPlan.execute_batch(tables)`` stacks all partitions of a
+  table that share one plan and executes them in a single vectorized pass:
+  filter + derive run once over the concatenated columns, and partial
+  aggregation uses the partition id as an implicit leading segment key
+  (``np.bincount``/``ufunc.reduceat`` over the concatenation), so the
+  Python-per-partition loop in ``engine.execute_requests`` collapses to one
+  call per (table, plan).
+
+Bitwise contract: the batch path returns **byte-identical** merged tables
+to concatenating the per-partition reference results. The load-bearing
+facts: elementwise numpy ops distribute over concatenation exactly;
+``np.bincount`` accumulates weights in array order (so segment-keyed sums
+add the same floats in the same order as per-partition sums); stable
+argsort + ``reduceat`` reduce identical segments; and the keyless-agg /
+top-k stages intentionally drop to a per-segment loop because their
+reference semantics (``np.sum`` pairwise summation, ``argpartition`` tie
+choices, the empty-partition ``[0.]`` placeholder) are not
+concatenation-invariant — those loops run on the already-filtered rows, so
+the heavy stages stay fused. ``tests/test_executor.py`` pins all of this
+against the reference oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost import RequestCost
+from repro.core.plan import _AGG_OUT_ROWS, PushPlan
+from repro.queryproc import expressions as ex
+from repro.queryproc import operators as ops
+from repro.queryproc.table import ColumnTable
+from repro.storage.catalog import Partition
+
+
+@dataclasses.dataclass
+class CompiledPushPlan:
+    """A PushPlan lowered once: compiled kernels + memoized invariants."""
+    plan: PushPlan
+    accessed: Tuple[str, ...]               # memoized plan.accessed_columns()
+    pred_fn: Optional[Callable]             # fused numpy predicate kernel
+    pred_cols: Tuple[str, ...]              # columns the predicate reads
+    sel_fn: Optional[Callable]              # compiled selectivity estimator
+    agg_spec: Optional[Dict[str, Tuple[str, str]]]  # out -> (fn, col)
+    # cost-model per-plan constants (plan.estimate_cost recomputes these
+    # per partition; only the stats lookups actually vary across partitions)
+    _n_derived_out: int = 0
+    _agg_keys: Tuple[str, ...] = ()
+
+    # ------------------------------------------------------------ execution
+    def execute(self, data: ColumnTable, bitmap: Optional[np.ndarray] = None
+                ) -> Tuple[ColumnTable, Dict]:
+        """Single-partition fused path: the same *result table* as
+        ``plan.execute_push_plan``, minus the per-call plan re-walk. The
+        aux dict is always empty — plans whose value IS the aux by-product
+        (bitmap_only's packed bitmap, shuffle's parts/position vector) must
+        use the reference path, which this guards against."""
+        assert not self.plan.bitmap_only and self.plan.shuffle is None, \
+            "aux-producing plans need plan.execute_push_plan"
+        merged = self.execute_batch([data],
+                                    None if bitmap is None else [bitmap])
+        return merged, {}
+
+    def execute_batch(self, tables: Sequence[ColumnTable],
+                      bitmaps: Optional[Sequence[np.ndarray]] = None
+                      ) -> ColumnTable:
+        """All partitions sharing this plan in one vectorized pass.
+        Returns the merged table — byte-identical to
+        ``ColumnTable.concat([execute_push_plan(plan, t)[0] for t in tables])``.
+        """
+        plan = self.plan
+        assert plan.columns or plan.agg is not None, \
+            "plans must declare output columns (the splitter guarantees it)"
+        n_parts = len(tables)
+        lens = np.asarray([len(t) for t in tables], np.int64)
+
+        def concat(column: str) -> np.ndarray:
+            if n_parts == 1:
+                return np.asarray(tables[0].cols[column])
+            return np.concatenate([t.cols[column] for t in tables])
+
+        # accessed columns only: the reference filters whole partitions,
+        # but output columns are always a subset of accessed + derived
+        present = [c for c in self.accessed if c in tables[0].cols]
+
+        # ---- filter stage: one fused predicate pass over the predicate
+        # columns, then gather only the *surviving* rows of the remaining
+        # columns (pushed predicates are selective — copying non-survivors
+        # was the dominant batch cost)
+        cols: Dict[str, np.ndarray]
+        if plan.apply_bitmap:
+            assert bitmaps is not None, "compute-layer bitmaps required"
+            masks = [ops.unpack_bitmap(w, int(m))
+                     for w, m in zip(bitmaps, lens)]
+            cols = {}
+        elif self.pred_fn is not None:
+            pcols = {c: concat(c) for c in self.pred_cols
+                     if c in tables[0].cols}
+            mask = self.pred_fn(pcols)
+            masks = (np.split(mask, np.cumsum(lens)[:-1]) if n_parts > 1
+                     else [mask])
+            # predicate columns are already concatenated: one gather
+            cols = {c: v[mask] for c, v in pcols.items() if c in present}
+        else:
+            masks = None
+            cols = {}
+        segmented = plan.agg is not None or plan.top_k is not None
+        if masks is None:
+            seg = np.repeat(np.arange(n_parts), lens) if segmented else None
+            for c in present:
+                cols.setdefault(c, concat(c))
+        else:
+            counts = np.asarray([int(m.sum()) for m in masks])
+            seg = np.repeat(np.arange(n_parts), counts) if segmented else None
+            for c in present:
+                if c not in cols:
+                    cols[c] = (tables[0].cols[c][masks[0]] if n_parts == 1
+                               else np.concatenate(
+                                   [t.cols[c][m]
+                                    for t, m in zip(tables, masks)]))
+
+        # ---- derive stage (fused: one elementwise pass per derived column)
+        for name, incols, fn in plan.derive:
+            cols[name] = fn(*[cols[c] for c in incols])
+
+        t = ColumnTable(cols)
+        if plan.agg is not None:
+            # aggregation collapses rows: seg is re-derived at group level
+            # so a downstream top-k segments the agg *output*, not the input
+            out, seg = self._batched_agg(t, seg, n_parts)
+        elif plan.columns:
+            out = t.select([c for c in plan.columns if c in t.cols])
+        else:
+            out = t
+        if plan.top_k is not None:
+            out = self._segmented_top_k(out, seg, n_parts)
+        return out
+
+    # ----------------------------------------------------- agg / top-k
+    def _batched_agg(self, t: ColumnTable, seg: np.ndarray, n_parts: int
+                     ) -> Tuple[ColumnTable, np.ndarray]:
+        """Returns (partials table, per-output-row partition id)."""
+        keys, _ = self.plan.agg
+        if keys:
+            return self._segment_keyed_agg(t, seg, keys)
+        # keyless (scalar) aggs: the reference emits one row per partition,
+        # with np.sum's pairwise summation and a float64 [0.] placeholder
+        # for empty partitions — neither is concatenation-invariant, so
+        # reduce per segment over the already-filtered rows
+        bounds = np.searchsorted(seg, np.arange(n_parts + 1))
+        out: Dict[str, List[np.ndarray]] = {name: [] for name in self.agg_spec}
+        for p in range(n_parts):
+            lo, hi = int(bounds[p]), int(bounds[p + 1])
+            for name, (fn, col) in self.agg_spec.items():
+                if hi == lo:
+                    val = np.asarray([0], np.float64)
+                elif fn == "count":  # length-only: no column materialization
+                    val = np.asarray([np.asarray(hi - lo, np.int64)])
+                else:
+                    arr = (t.cols[col] if col else next(iter(t.cols.values())))
+                    val = np.asarray([ops.AGG_FUNCS[fn](arr[lo:hi])])
+                out[name].append(val)
+        return (ColumnTable({n: np.concatenate(v) for n, v in out.items()}),
+                np.arange(n_parts))  # one output row per partition
+
+    def _segment_keyed_agg(self, t: ColumnTable, seg: np.ndarray,
+                           keys: Tuple[str, ...]
+                           ) -> Tuple[ColumnTable, np.ndarray]:
+        """Grouped partials over all partitions at once, the partition id as
+        implicit leading segment key.
+
+        The reference (``ops.grouped_agg`` per partition) sorts a rec array
+        — a void-dtype comparison per element. Here one type-specialized
+        stable ``np.lexsort`` over (pid, keys...) orders the concatenation;
+        group boundaries fall out of adjacent-row key changes. Sorting by
+        pid first makes the group order *identical* to concatenating the
+        per-partition key-sorted outputs, and sums/counts go through
+        ``np.bincount`` over the original-order group ids, so each group
+        accumulates the same floats in the same order as the reference —
+        bitwise-identical partials (reduceat is pairwise, bincount is
+        sequential: only bincount matches)."""
+        key_arrs = [t.cols[k] for k in keys]
+        n = len(seg)
+        # lexsort: last key is primary -> (seg, k1, .., kn) lexicographic
+        order = np.lexsort(tuple(reversed(key_arrs)) + (seg,))
+        sorted_keys = [a[order] for a in [seg, *key_arrs]]
+        new_group = np.zeros(n, bool)
+        if n:
+            new_group[0] = True
+        for a in sorted_keys:
+            new_group[1:] |= a[1:] != a[:-1]
+        starts = np.flatnonzero(new_group)           # sorted-domain offsets
+        n_groups = len(starts)
+        gid = np.cumsum(new_group) - 1               # sorted-domain group id
+        inv = np.empty(n, np.intp)
+        inv[order] = gid                             # original-order group id
+        first_idx = order[starts]                    # stable: first original row
+        counts = np.bincount(inv, minlength=n_groups)
+        out = {k: t.cols[k][first_idx] for k in keys}
+        for name, (fn, col) in self.agg_spec.items():
+            if fn == "count":
+                out[name] = counts.astype(np.int64)
+            elif fn == "sum":
+                out[name] = np.bincount(inv, weights=t.cols[col].astype(np.float64),
+                                        minlength=n_groups)
+            elif fn == "mean":
+                s = np.bincount(inv, weights=t.cols[col].astype(np.float64),
+                                minlength=n_groups)
+                out[name] = s / np.maximum(counts, 1)
+            else:
+                red = np.minimum if fn == "min" else np.maximum
+                out[name] = red.reduceat(t.cols[col][order], starts)
+        return ColumnTable(out), sorted_keys[0][starts]  # per-group pid
+
+    def _segmented_top_k(self, t: ColumnTable, seg: np.ndarray, n_parts: int
+                         ) -> ColumnTable:
+        # per-partition top-k supersets, exactly as the reference selects
+        # them (argpartition tie behavior is position-dependent, so the
+        # reference operator runs per segment — on filtered rows only)
+        col, k, asc = self.plan.top_k
+        bounds = np.searchsorted(seg, np.arange(n_parts + 1))
+        parts = [ops.top_k(
+            ColumnTable({c: v[bounds[p]:bounds[p + 1]]
+                         for c, v in t.cols.items()}), col, k, asc)
+            for p in range(n_parts)]
+        return ColumnTable.concat(parts)
+
+    # ------------------------------------------------------------ cost
+    def estimate_cost(self, part: Partition) -> RequestCost:
+        """Identical arithmetic to ``plan.estimate_cost`` with the per-plan
+        constants memoized; only the stats lookups touch the partition."""
+        plan = self.plan
+        data = part.data
+        stats = data.stats()
+        acc_cols = [c for c in self.accessed if c in data.cols]
+        s_in = data.nbytes(acc_cols, stored=True)
+        raw_in = data.nbytes(acc_cols, stored=False)
+        sel = self.sel_fn(stats) if self.sel_fn is not None else 1.0
+        if plan.bitmap_only:
+            out_cols = [c for c in plan.columns if c in data.cols]
+            s_out = ((data.nbytes(out_cols, stored=False)
+                      + 8 * self._n_derived_out * len(data)) * sel
+                     + len(data) / 8)
+        elif plan.agg is not None:
+            groups = 1
+            for key in self._agg_keys:
+                groups *= max(1, stats[key].ndv if key in stats
+                              else _AGG_OUT_ROWS)
+            groups = min(groups, _AGG_OUT_ROWS, len(data))
+            s_out = groups * 8 * (len(self._agg_keys) + len(self.agg_spec))
+        else:
+            out_cols = [c for c in plan.columns if c in data.cols]
+            s_out = (data.nbytes(out_cols, stored=False)
+                     + 8 * self._n_derived_out * len(data)) * sel
+        if plan.top_k is not None:
+            s_out = min(s_out, plan.top_k[1] * 8 * max(1, len(plan.columns)))
+        return RequestCost(s_in=int(s_in), s_out=int(max(64, s_out)),
+                           compute_in=int(raw_in))
+
+
+# ----------------------------------------------------------- compile cache
+_CACHE: "OrderedDict[int, CompiledPushPlan]" = OrderedDict()
+_CACHE_CAP = 256
+
+
+def compile_push_plan(plan: PushPlan) -> CompiledPushPlan:
+    """Lower a PushPlan once; memoized per plan object (the engine issues
+    one plan instance per (query, table) shared by all its partitions)."""
+    hit = _CACHE.get(id(plan))
+    if hit is not None and hit.plan is plan:   # guard against id() reuse
+        _CACHE.move_to_end(id(plan))
+        return hit
+    derived = frozenset(n for n, _, _ in plan.derive)
+    cplan = CompiledPushPlan(
+        plan=plan,
+        accessed=plan.accessed_columns(),
+        pred_fn=(ex.compile_expr(plan.predicate)
+                 if plan.predicate is not None and not plan.apply_bitmap
+                 else None),
+        pred_cols=(tuple(sorted(ex.columns_of(plan.predicate)))
+                   if plan.predicate is not None and not plan.apply_bitmap
+                   else ()),
+        sel_fn=(ex.compile_selectivity(plan.predicate)
+                if plan.predicate is not None else None),
+        agg_spec=({o: (f, c) for o, f, c in plan.agg[1]}
+                  if plan.agg is not None else None),
+        _n_derived_out=len(derived & set(plan.columns)),
+        _agg_keys=tuple(plan.agg[0]) if plan.agg is not None else (),
+    )
+    _CACHE[id(plan)] = cplan
+    while len(_CACHE) > _CACHE_CAP:
+        _CACHE.popitem(last=False)
+    return cplan

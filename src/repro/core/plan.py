@@ -10,6 +10,12 @@ A ``PushPlan`` is deliberately restricted to the paper's pushdown-amenable
 operator set: projection, selection (expression tree), selection *bitmap*
 (ship the bitmap instead of columns, §4.2), partial grouped/scalar
 aggregation, top-k, and the shuffle partition function (§4.2).
+
+``execute_push_plan`` below is the *interpretive per-partition reference*:
+it re-walks the plan per call and is kept as the correctness oracle. The
+production path is ``core.executor``: plans compile once per query and all
+partitions of a table execute in a single vectorized pass, byte-identical
+to this reference (tests/test_executor.py).
 """
 from __future__ import annotations
 

@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the pushed-back storage operators.
 
-predicate_bitmap / bitmap_apply / grouped_agg / hash_partition — each with
-an ``ops.py`` jit wrapper and a ``ref.py`` pure-jnp oracle; tests sweep
-shapes x dtypes in interpret mode against both ref.py and the numpy
-storage engine.
+predicate_bitmap / bitmap_apply / grouped_agg / hash_partition /
+fused_scan_agg (predicate -> bitmap-apply -> grouped-agg in one pass, no
+materialized intermediates) — each with an ``ops.py`` jit wrapper and a
+``ref.py`` pure-jnp oracle; tests sweep shapes x dtypes in interpret mode
+against both ref.py and the numpy storage engine.
 """
 from repro.kernels import ops, ref  # noqa: F401

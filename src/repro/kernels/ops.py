@@ -8,13 +8,14 @@ container; on a real TPU the same calls lower natively.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import bitmap_apply as _ba
+from repro.kernels import fused_scan_agg as _fsa
 from repro.kernels import grouped_agg as _ga
 from repro.kernels import hash_partition as _hp
 from repro.kernels import predicate_bitmap as _pb
@@ -69,6 +70,25 @@ def grouped_agg(ids: jax.Array, values: jax.Array, num_groups: int,
     vals_p, _ = _pad_to(values.astype(jnp.float32), block)
     sums, counts = _ga.grouped_agg(ids_p, vals_p, num_groups + 1, block,
                                    interpret)
+    return sums[:num_groups], counts[:num_groups]
+
+
+def fused_scan_agg(cols: Dict[str, jax.Array], pred_fn: Optional[Callable],
+                   ids: jax.Array, values: jax.Array, num_groups: int,
+                   block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Fused predicate -> mask -> grouped agg: (sums (G,) f32, counts (G,)
+    int32) over rows passing pred_fn. Padding rows carry the poison group
+    id == G (their one-hot column is an extra scratch group, dropped), so
+    they cannot contribute even when the padded predicate holds."""
+    ids_p, R = _pad_to(ids.astype(jnp.int32), block, fill=num_groups)
+    vals_p, _ = _pad_to(values.astype(jnp.float32), block)
+    padded = {}
+    for k, v in cols.items():
+        assert v.shape == (R,), (k, v.shape)
+        padded[k], _ = _pad_to(v.astype(jnp.float32) if v.dtype == jnp.float64
+                               else v, block)
+    sums, counts = _fsa.fused_scan_agg(padded, pred_fn, ids_p, vals_p,
+                                       num_groups + 1, block, interpret)
     return sums[:num_groups], counts[:num_groups]
 
 

@@ -45,6 +45,20 @@ def grouped_agg(ids: jnp.ndarray, values: jnp.ndarray, num_groups: int):
     return sums, counts
 
 
+def fused_scan_agg(cols: dict, pred_fn, ids: jnp.ndarray,
+                   values: jnp.ndarray, num_groups: int):
+    """Predicate -> mask -> grouped agg in one jnp expression: sums/counts
+    over rows passing pred_fn (None = all). Masking is arithmetic (failing
+    rows contribute 0), matching the fused kernel exactly."""
+    keep = (pred_fn(cols) if pred_fn is not None
+            else jnp.ones(ids.shape, bool)).astype(jnp.float32)
+    onehot = (ids[:, None] == jnp.arange(num_groups)[None, :]
+              ).astype(jnp.float32)
+    sums = ((values.astype(jnp.float32) * keep)[:, None] * onehot).sum(axis=0)
+    counts = (keep[:, None] * onehot).sum(axis=0).astype(jnp.int32)
+    return sums, counts
+
+
 def hash_partition(keys: jnp.ndarray, num_parts: int, block: int = 8192):
     """Knuth multiplicative hash -> (pids (R,) int32, hist (R/block, P))."""
     h = keys.astype(jnp.uint32) * KNUTH

@@ -5,13 +5,19 @@ Evaluated two ways:
 - selectivity estimation from ColumnStats (the arbitrator's cardinality
   estimator, Eq. 9's S_out)
 
+Both walks also have a *compile-once* form (``compile_expr`` /
+``compile_selectivity``): the tree is lowered into a closure a single time
+per query plan, so the per-partition executor (``core.executor``) never
+re-walks the tree — the storage layer runs one request per partition and a
+query touches ~160 of them.
+
 The same tree is compiled to the fused Pallas ``predicate_bitmap`` kernel for
 pushed-back on-device evaluation (see repro.kernels).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import numpy as np
 
@@ -95,6 +101,34 @@ def evaluate(expr: Expr, table: ColumnTable) -> np.ndarray:
     raise TypeError(expr)
 
 
+def compile_expr(expr: Expr) -> Callable[[Dict[str, np.ndarray]], np.ndarray]:
+    """Lower the tree once into a numpy closure over a column dict.
+
+    ``compile_expr(e)({c: arr})`` is bitwise-identical to
+    ``evaluate(e, ColumnTable({c: arr}))`` — same numpy ufuncs in the same
+    association order — but the tree walk happens at compile time, not per
+    partition. Mirrors ``kernels.predicate_bitmap.compile_predicate`` (one
+    plan representation, numpy and Pallas backends)."""
+    if isinstance(expr, Cmp):
+        op = _OPS[expr.op]
+        name = expr.col.name
+        if isinstance(expr.value, Col):
+            rname = expr.value.name
+            return lambda cols: op(cols[name], cols[rname])
+        v = expr.value
+        return lambda cols: op(cols[name], v)
+    if isinstance(expr, In):
+        name, vals = expr.col.name, expr.values
+        return lambda cols: np.isin(cols[name], vals)
+    if isinstance(expr, And):
+        lf, rf = compile_expr(expr.left), compile_expr(expr.right)
+        return lambda cols: lf(cols) & rf(cols)
+    if isinstance(expr, Or):
+        lf, rf = compile_expr(expr.left), compile_expr(expr.right)
+        return lambda cols: lf(cols) | rf(cols)
+    raise TypeError(expr)
+
+
 def columns_of(expr: Expr) -> set:
     if isinstance(expr, Cmp):
         if isinstance(expr.value, Col):
@@ -131,4 +165,48 @@ def estimate_selectivity(expr: Expr, stats: Dict[str, ColumnStats]) -> float:
         a = estimate_selectivity(expr.left, stats)
         b = estimate_selectivity(expr.right, stats)
         return a + b - a * b
+    raise TypeError(expr)
+
+
+def compile_selectivity(expr: Expr) -> Callable[[Dict[str, ColumnStats]], float]:
+    """Compile-once form of ``estimate_selectivity``: returns a closure over
+    a stats dict that computes the identical estimate without re-walking the
+    tree per partition (partitions differ only in their stats)."""
+    if isinstance(expr, Cmp):
+        if isinstance(expr.value, Col):
+            return lambda stats: 0.5
+        name, op = expr.col.name, expr.op
+        v = float(expr.value)
+
+        def cmp_sel(stats: Dict[str, ColumnStats]) -> float:
+            st = stats.get(name)
+            if st is None or st.max <= st.min:
+                return 0.5
+            span = st.max - st.min
+            if op in ("<", "<="):
+                return float(np.clip((v - st.min) / span, 0.0, 1.0))
+            if op in (">", ">="):
+                return float(np.clip((st.max - v) / span, 0.0, 1.0))
+            return 1.0 / max(1, st.ndv)
+
+        return cmp_sel
+    if isinstance(expr, In):
+        name, n_vals = expr.col.name, len(expr.values)
+
+        def in_sel(stats: Dict[str, ColumnStats]) -> float:
+            st = stats.get(name)
+            return min(1.0, n_vals / max(1, st.ndv if st else 10))
+
+        return in_sel
+    if isinstance(expr, And):
+        lf, rf = compile_selectivity(expr.left), compile_selectivity(expr.right)
+        return lambda stats: lf(stats) * rf(stats)
+    if isinstance(expr, Or):
+        lf, rf = compile_selectivity(expr.left), compile_selectivity(expr.right)
+
+        def or_sel(stats: Dict[str, ColumnStats]) -> float:
+            a, b = lf(stats), rf(stats)
+            return a + b - a * b
+
+        return or_sel
     raise TypeError(expr)

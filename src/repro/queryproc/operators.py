@@ -83,10 +83,12 @@ def grouped_agg(t: ColumnTable, keys: Sequence[str],
             out[name] = np.bincount(inv, weights=t.cols[col].astype(np.float64),
                                     minlength=len(uniq))
         else:
+            # reduceat over the group-sorted values: boundaries are each
+            # group's first row, and every group is nonempty (the groups
+            # come from the data), so segment reductions are well-defined
             vals = t.cols[col][order]
             red = np.minimum if fn == "min" else np.maximum
-            segs = np.split(vals, boundaries[1:])
-            out[name] = np.asarray([seg.min() if fn == "min" else seg.max() for seg in segs])
+            out[name] = red.reduceat(vals, boundaries)
     return ColumnTable(out)
 
 

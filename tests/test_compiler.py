@@ -295,3 +295,39 @@ def test_engine_compile_and_run_entry_point():
     r = engine.compile_and_run("Q6", CAT, CFG)
     rl = engine.run_query(Q.build_query_legacy("Q6"), CAT, CFG)
     assert engine.results_equal(r.result, rl.result)
+
+
+def test_shared_pushability_rule_matches_splitter():
+    """The drift guard the unification exists for: on every TPC-H IR, each
+    Filter that pushability.filter_absorbable accepts on a Scan chain must
+    have its predicate absorbed by the splitter, and each one it rejects
+    must survive in the residual — the absorption rule and the
+    substitution walk are now literally the same function."""
+    from repro.compiler import pushability, tpch_ir
+
+    def chain_filters(root):
+        for node in ir.walk(root):
+            if (isinstance(node, ir.Filter)
+                    and pushability.chain_scan_table(node) is not None):
+                yield node
+
+    for qid in Q.QUERY_IDS:
+        root = tpch_ir.build_ir(qid)
+        sp = splitter.split(root)
+        residual_filters = [n for n in ir.walk(sp.residual)
+                            if isinstance(n, ir.Filter)]
+        residual_preds = [ir.describe(n) + repr(n.predicate)
+                          for n in residual_filters]
+        for f in chain_filters(root):
+            table = pushability.chain_scan_table(f)
+            if pushability.filter_absorbable(f):
+                # absorbed: its columns feed the pushed predicate
+                plan = sp.plans[table]
+                assert plan.predicate is not None, (qid, table)
+                from repro.queryproc import expressions as ex
+                assert (ex.columns_of(f.predicate)
+                        <= ex.columns_of(plan.predicate)), (qid, table)
+            else:
+                # rejected: an identical Filter must appear in the residual
+                assert any(repr(f.predicate) in p for p in residual_preds), \
+                    (qid, table, f.predicate)

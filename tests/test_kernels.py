@@ -90,6 +90,64 @@ def test_grouped_agg(n, groups):
                                   np.bincount(ids, minlength=groups))
 
 
+# --------------------------------------------------------- fused_scan_agg
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("groups", [1, 37])
+def test_fused_scan_agg_matches_numpy(n, groups):
+    """One fused pass == predicate_bitmap -> bitmap_apply -> grouped_agg
+    pipeline == the numpy storage path (filter then group)."""
+    q, d = _col(n, np.float32), _col(n, np.float32)
+    ids = RNG.integers(0, groups, n).astype(np.int32)
+    vals = RNG.uniform(0, 10, n).astype(np.float32)
+    expr = (Col("q") <= 24) & (Col("d") > 5)
+    cols = {"q": jnp.asarray(q), "d": jnp.asarray(d)}
+    sums, counts = ops.fused_scan_agg(cols, ops.compile_predicate(expr),
+                                      jnp.asarray(ids), jnp.asarray(vals),
+                                      groups, block=1024)
+    mask = (q <= 24) & (d > 5)
+    want = np.zeros(groups)
+    np.add.at(want, ids[mask], vals[mask].astype(np.float64))
+    np.testing.assert_allclose(np.asarray(sums), want, rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.bincount(ids[mask], minlength=groups))
+    # the unfused three-kernel pipeline agrees (no materialized
+    # intermediates changed the semantics)
+    words = ops.predicate_bitmap(cols, ops.compile_predicate(expr), block=1024)
+    masked, cnt = ops.bitmap_apply(words, jnp.asarray(vals), block=1024)
+    keep_ids = np.where(mask, ids, groups)  # poison dropped rows
+    s2, c2 = ops.grouped_agg(jnp.asarray(keep_ids), masked, groups + 1,
+                             block=1024)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(s2)[:groups],
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(c2)[:groups])
+
+
+def test_fused_scan_agg_no_predicate():
+    ids = RNG.integers(0, 5, 3000).astype(np.int32)
+    vals = RNG.uniform(0, 10, 3000).astype(np.float32)
+    sums, counts = ops.fused_scan_agg({}, None, jnp.asarray(ids),
+                                      jnp.asarray(vals), 5, block=1024)
+    want = np.zeros(5)
+    np.add.at(want, ids, vals.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(sums), want, rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(counts), np.bincount(ids, minlength=5))
+
+
+def test_fused_scan_agg_ref_oracle():
+    q = _col(2048, np.float32)
+    ids = RNG.integers(0, 9, 2048).astype(np.int32)
+    vals = RNG.uniform(0, 10, 2048).astype(np.float32)
+    pf = ops.compile_predicate(Col("q") < 30)
+    cols = {"q": jnp.asarray(q)}
+    s, c = ops.fused_scan_agg(cols, pf, jnp.asarray(ids), jnp.asarray(vals),
+                              9, block=1024)
+    rs, rc = ref.fused_scan_agg(cols, pf, jnp.asarray(ids),
+                                jnp.asarray(vals), 9)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+
+
 def test_grouped_agg_vs_storage_engine():
     """Kernel == the numpy grouped_agg the storage layer runs (pushback
     equivalence: either side of the network computes the same partials)."""
