@@ -6,18 +6,32 @@ the storage node applies it WITHOUT scanning the predicate columns.
 Claims: wins at LOW selectivity (less data dominates -> scan/CPU savings
 show): paper sees 2.0x/2.6x on Q12/Q19 as sel -> 0; disk bytes read drop
 10-46%, columns accessed drop 18-56%.
+
+``run_real`` additionally measures REAL wall-clock of the storage-side
+bitmap *application* (an ``apply_bitmap`` plan: compute-shipped packed
+bitmaps filter the output columns, predicate columns never scanned):
+per-partition reference loop vs the batch executor's fused pass, byte-
+identity asserted. Headline lands in ``BENCH_engine.json`` under
+``bitmap_compute``.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core import engine
 from repro.core.bitmap import CacheState, rewrite_all
+from repro.core.executor import compile_push_plan
+from repro.core.plan import PushPlan, execute_push_plan
 from repro.core.simulator import MODE_EAGER
 from repro.queryproc import expressions as ex
+from repro.queryproc import operators as np_ops
 from repro.queryproc import queries as Q
 
 from benchmarks import common
 
 SELECTIVITIES = (0.02, 0.1, 0.3, 0.5, 0.9)
+# the CI perf smoke shares this exact configuration
+REAL_QUICK_KWARGS = {"qids": ("Q6", "Q14", "Q19"), "repeats": 3, "sf": 2.0}
 
 
 def _cache_predicates_only(query) -> CacheState:
@@ -49,7 +63,74 @@ def run(qids=("Q3", "Q4", "Q12", "Q14", "Q19"), sels=SELECTIVITIES) -> dict:
         out["queries"][qid] = {"speedup": speeds, "disk_saved": disk_saved,
                                "cols_skipped_total": cols_skipped}
     out["max_speedup"] = max(max(d["speedup"]) for d in out["queries"].values())
+    # real wall-clock of the storage-side bitmap application (batch path)
+    out["real"] = run_real(qids=qids)
     return out
+
+
+# ------------------------------------------- real wall-clock (batch path)
+def run_real(qids=("Q1", "Q3", "Q4", "Q6", "Q12", "Q14", "Q19"),
+             repeats: int = 3, sf: float = None, table: str = "lineitem"
+             ) -> dict:
+    """REAL wall-clock of storage-side bitmap application: compute builds
+    the bitmaps (outside the timer — that work moves across the network,
+    Fig 4), then the storage node applies them to every partition —
+    per-partition reference loop vs one fused batch pass."""
+    cat = common.catalog(num_nodes=2, sf=sf or common.SF)
+    parts = [p.data for p in cat.partitions_of(table)]
+    queries = {}
+    for qid in qids:
+        plan = Q.build_query(qid).plans[table]
+        if plan.predicate is None:
+            continue
+        pred_cols = ex.columns_of(plan.predicate)
+        derived = {n for n, _, _ in plan.derive}
+        out_cols = tuple(c for c in plan.accessed_columns()
+                         if c not in derived and c not in pred_cols)
+        if not out_cols:
+            continue
+        # compute layer: evaluate the cached predicate columns, pack
+        bitmaps = [np_ops.selection_bitmap(p, plan.predicate) for p in parts]
+        aplan = PushPlan(table, out_cols, apply_bitmap=True)
+        cplan = compile_push_plan(aplan)
+        ref_out = [execute_push_plan(aplan, p, bitmap=w)
+                   for p, w in zip(parts, bitmaps)]
+        bat_parts, _ = cplan.execute_batch_parts(parts, bitmaps)
+        for (rt, _), bt in zip(ref_out, bat_parts):
+            for c in rt.columns:
+                assert rt.cols[c].dtype == bt.cols[c].dtype and \
+                    np.array_equal(rt.cols[c], bt.cols[c],
+                                   equal_nan=True), (qid, c)
+        t_ref = common.best_time(
+            lambda: [execute_push_plan(aplan, p, bitmap=w)
+                     for p, w in zip(parts, bitmaps)], repeats)
+        t_bat = common.best_time(
+            lambda: cplan.execute_batch_parts(parts, bitmaps), repeats)
+        queries[qid] = {"n_partitions": len(parts),
+                        "n_out_cols": len(out_cols),
+                        "t_reference_ms": 1e3 * t_ref,
+                        "t_batched_ms": 1e3 * t_bat,
+                        "speedup": t_ref / max(t_bat, 1e-12),
+                        "identical": True}
+    return common.summarize_real(queries, sf or common.SF, repeats)
+
+
+def render_real(out: dict) -> str:
+    if not out["queries"]:
+        return "real bitmap-apply path: no eligible queries"
+    rows = [[qid, v["n_partitions"], v["n_out_cols"],
+             f"{v['t_reference_ms']:.2f}", f"{v['t_batched_ms']:.2f}",
+             f"{v['speedup']:.2f}x"] for qid, v in out["queries"].items()]
+    hdr = ["query", "parts", "out_cols", "ref_ms", "batched_ms", "speedup"]
+    return common.table(rows, hdr) + (
+        f"\nreal bitmap-apply path: total "
+        f"{out['total_reference_ms']:.1f}ms -> "
+        f"{out['total_batched_ms']:.1f}ms ({out['total_speedup']:.2f}x; "
+        f"geomean {out['geomean_speedup']:.2f}x)")
+
+
+def update_root_bench(out: dict):
+    return common.update_root_bench_real("bitmap_compute", out)
 
 
 def render(out: dict) -> str:
@@ -58,12 +139,27 @@ def render(out: dict) -> str:
         rows.append([qid] + [f"{s:.2f}x" for s in d["speedup"]]
                     + [" ".join(f"{v*100:.0f}%" for v in d["disk_saved"])])
     hdr = ["query"] + [f"sel={s}" for s in out["selectivities"]] + ["disk saved"]
-    return common.table(rows, hdr) + (
+    txt = common.table(rows, hdr) + (
         f'\nmax speedup {out["max_speedup"]:.2f}x (paper Fig 14: 2.0-2.6x '
         f'as sel->0; 10-46% scan reduction)')
+    if "real" in out:
+        txt += "\n\n" + render_real(out["real"])
+    return txt
 
 
 if __name__ == "__main__":
-    o = run()
-    common.save_report("fig14_bitmap_compute", o)
-    print(render(o))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real-quick", action="store_true",
+                    help="real wall-clock only, 3 queries, sf=2 (CI smoke)")
+    args = ap.parse_args()
+    if args.real_quick:
+        o = run_real(**REAL_QUICK_KWARGS)
+        update_root_bench(o)
+        print(render_real(o))
+    else:
+        o = run()
+        common.save_report("fig14_bitmap_compute", o)
+        update_root_bench(o)
+        print(render(o))

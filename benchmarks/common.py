@@ -10,7 +10,7 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.cost import StorageResources
 from repro.core.engine import EngineConfig
@@ -43,6 +43,109 @@ def save_report(name: str, data: dict) -> Path:
     path = REPORT_DIR / f"{name}.json"
     path.write_text(json.dumps(data, indent=1, default=float))
     return path
+
+
+ROOT_BENCH = Path("BENCH_engine.json")
+
+
+def update_root_bench(suite: str, latest: dict, headline: dict,
+                      path: Path = ROOT_BENCH) -> Path:
+    """Consolidated cross-PR trajectory file at the repo root: per suite a
+    ``latest`` full report plus an appended ``history`` of headline numbers
+    (executor / shuffle / bitmap wall-clock suites all land here; the CI
+    perf-smoke uploads the file and ``benchmarks.perf_guard`` enforces that
+    the trajectory stays monotone)."""
+    doc = {}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except (ValueError, OSError):
+            doc = {}
+    entry = doc.setdefault(suite, {"history": []})
+    entry["latest"] = latest
+    entry.setdefault("history", []).append(headline)
+    path.write_text(json.dumps(doc, indent=1, default=float))
+    return path
+
+
+def summarize_real(queries: Dict[str, dict], sf: float, repeats: int,
+                   **extra) -> dict:
+    """Summary dict shared by every ``run_real`` wall-clock suite
+    (shuffle / bitmap_storage / bitmap_compute). ``queries`` maps qid ->
+    per-query timings with ``t_reference_ms``/``t_batched_ms``/``speedup``;
+    byte-identity is asserted by the caller before timing. Safe when no
+    query qualified (geomean/min are omitted rather than NaN)."""
+    tot_ref = sum(v["t_reference_ms"] for v in queries.values())
+    tot_bat = sum(v["t_batched_ms"] for v in queries.values())
+    out = {"sf": sf, "repeats": repeats, "queries": queries,
+           "all_identical": True,  # asserted per partition by the caller
+           "total_reference_ms": tot_ref, "total_batched_ms": tot_bat,
+           "total_speedup": tot_ref / max(tot_bat, 1e-12), **extra}
+    if queries:
+        import numpy as np
+        out["geomean_speedup"] = float(np.exp(np.mean(
+            [np.log(v["speedup"]) for v in queries.values()])))
+        out["min_speedup"] = min(v["speedup"] for v in queries.values())
+    return out
+
+
+def real_headline(real: Optional[dict]) -> Optional[dict]:
+    """Trajectory headline for a ``summarize_real`` dict; None when the
+    suite timed nothing (nothing worth recording — or guarding)."""
+    if not real or not real.get("queries") or "geomean_speedup" not in real:
+        return None
+    return {
+        "sf": real["sf"],
+        "total_speedup": round(real["total_speedup"], 3),
+        "geomean_speedup": round(real["geomean_speedup"], 3),
+        "total_batched_ms": round(real["total_batched_ms"], 2),
+        "total_reference_ms": round(real["total_reference_ms"], 2),
+        "all_identical": real["all_identical"],
+    }
+
+
+def update_root_bench_real(suite: str, out: dict) -> Optional[Path]:
+    """Record a run_real suite (or a run() dict carrying one under
+    ``"real"``) into the consolidated trajectory."""
+    real = out.get("real") if "real" in out else out
+    headline = real_headline(real)
+    if headline is None:
+        return None
+    return update_root_bench(suite, real, headline)
+
+
+def median_time(fn, repeats: int) -> float:
+    """Median wall-clock of ``fn`` over ``repeats`` runs (plus one warm-up
+    for compile caches / page-ins)."""
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def best_time(fn, repeats: int) -> float:
+    """Min wall-clock of ``fn`` over ``repeats`` runs, GC paused during
+    timing — the standard microbenchmark estimator: allocator/GC noise in a
+    shared container only ever inflates a sample, so the minimum is the
+    least-biased reading of the actual work."""
+    import gc
+    fn()  # warm (compile caches, page in columns)
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
+        gc.collect()
+    return best
 
 
 def table(rows: List[List], header: List[str]) -> str:

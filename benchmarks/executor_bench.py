@@ -16,8 +16,6 @@ the repo root — one file appended per PR, the cross-PR perf trajectory.
 """
 from __future__ import annotations
 
-import json
-import time
 from pathlib import Path
 from typing import Dict, List
 
@@ -25,24 +23,17 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import engine
+from repro.core import executor as executor_mod
 from repro.core.executor import compile_push_plan
 from repro.core.plan import estimate_cost
 from repro.queryproc import queries as Q
 
-ROOT_BENCH = Path("BENCH_engine.json")
+ROOT_BENCH = common.ROOT_BENCH
 # the CI perf smoke and `run.py --quick` share this exact configuration
 QUICK_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q14", "Q18"), "repeats": 3,
                 "sf": 2.0}
 
-
-def _time(fn, repeats: int) -> float:
-    fn()  # warm (compile caches, page in columns)
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+_time = common.median_time
 
 
 def _tables_identical(a, b) -> bool:
@@ -67,7 +58,10 @@ def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
         q = Q.build_query(qid)
         reqs = engine.plan_requests(q, cat)
         ref = engine.execute_requests(reqs, engine.EXECUTOR_REFERENCE)
+        executor_mod.reset_filter_decisions()
         bat = engine.execute_requests(reqs, engine.EXECUTOR_BATCHED)
+        # which adaptive filter branch each (table, plan) batch took
+        branches = executor_mod.filter_decision_counts()
         identical = _tables_identical(ref, bat)
         assert identical, f"{qid}: batched merged tables diverge"
         t_ref = _time(lambda: engine.execute_requests(
@@ -89,6 +83,7 @@ def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
             "t_plan_batched_ms": 1e3 * t_plan_bat,
             "plan_speedup": t_plan_ref / max(t_plan_bat, 1e-12),
             "identical": identical,
+            "filter_branches": branches,
         }
     vals = list(queries.values())
     tot_ref = sum(v["t_reference_ms"] for v in vals)
@@ -106,6 +101,7 @@ def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
             [np.log(v["speedup"]) for v in vals]))),
         "min_speedup": min(v["speedup"] for v in vals),
         "max_speedup": max(v["speedup"] for v in vals),
+        "filter_gather_threshold": executor_mod.FILTER_GATHER_THRESHOLD,
     }
     return out
 
@@ -113,29 +109,25 @@ def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
 def render(out: Dict) -> str:
     rows: List[List] = []
     for qid, v in out["queries"].items():
+        br = v.get("filter_branches", {})
         rows.append([qid, v["n_requests"],
                      f"{v['t_reference_ms']:.2f}", f"{v['t_batched_ms']:.2f}",
                      f"{v['speedup']:.2f}x", f"{v['plan_speedup']:.2f}x",
+                     f"g{br.get('gather', 0)}/c{br.get('concat', 0)}",
                      "yes" if v["identical"] else "NO"])
     head = ["query", "reqs", "ref_ms", "batched_ms", "speedup",
-            "plan_speedup", "identical"]
+            "plan_speedup", "filter", "identical"]
     summary = (f"\ntotal {out['total_reference_ms']:.1f}ms -> "
                f"{out['total_batched_ms']:.1f}ms "
                f"({out['total_speedup']:.2f}x; geomean "
-               f"{out['geomean_speedup']:.2f}x, min {out['min_speedup']:.2f}x)")
+               f"{out['geomean_speedup']:.2f}x, min {out['min_speedup']:.2f}x)"
+               f"\nadaptive filter threshold "
+               f"{out['filter_gather_threshold']:.2f} "
+               "(gN/cM = N gather / M concat batches)")
     return common.table(rows, head) + summary
 
 
 def update_root_bench(out: Dict, path: Path = ROOT_BENCH) -> Path:
-    """Consolidated cross-PR trajectory file at the repo root: ``latest``
-    per suite plus an appended history of headline numbers."""
-    doc = {}
-    if path.exists():
-        try:
-            doc = json.loads(path.read_text())
-        except (ValueError, OSError):
-            doc = {}
-    entry = doc.setdefault("executor", {"history": []})
     headline = {
         "sf": out["sf"],
         "total_speedup": round(out["total_speedup"], 3),
@@ -144,10 +136,7 @@ def update_root_bench(out: Dict, path: Path = ROOT_BENCH) -> Path:
         "total_reference_ms": round(out["total_reference_ms"], 2),
         "all_identical": out["all_identical"],
     }
-    entry["latest"] = out
-    entry.setdefault("history", []).append(headline)
-    path.write_text(json.dumps(doc, indent=1, default=float))
-    return path
+    return common.update_root_bench("executor", out, headline, path)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+"""CI monotone guard over the consolidated ``BENCH_engine.json`` trajectory.
+
+Every wall-clock suite (executor / shuffle / bitmap_storage /
+bitmap_compute) appends a headline entry per run. This guard fails when
+the newest entry of any suite regresses below the previous entry *at the
+same scale factor* (quick-mode sf=2 CI entries are never compared against
+full sf=4 local entries) beyond a wall-clock-noise tolerance, or when any
+entry recorded a result divergence. Run after the quick benchmarks:
+
+    PYTHONPATH=src python -m benchmarks.executor_bench --quick
+    PYTHONPATH=src python -m benchmarks.shuffle --real-quick
+    PYTHONPATH=src python -m benchmarks.bitmap_storage --real-quick
+    PYTHONPATH=src python -m benchmarks.bitmap_compute --real-quick
+    PYTHONPATH=src python -m benchmarks.perf_guard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from benchmarks import common
+
+# shared CI runners are noisy; a real regression from a batching change
+# shows up far below this (the batch paths are >= 1.5x, not 0.85x)
+TOLERANCE = 0.85
+
+
+def check(doc: dict, tolerance: float = TOLERANCE) -> List[str]:
+    failures: List[str] = []
+    for suite, entry in sorted(doc.items()):
+        hist = [h for h in entry.get("history", [])
+                if isinstance(h, dict) and "total_speedup" in h]
+        if not hist:
+            continue
+        last = hist[-1]
+        if not last.get("all_identical", True):
+            failures.append(f"{suite}: newest entry diverged from the "
+                            "reference executor")
+        prior = [h for h in hist[:-1] if h.get("sf") == last.get("sf")]
+        if not prior:
+            continue  # first entry at this scale factor: nothing to guard
+        prev = prior[-1]
+        if last["total_speedup"] < tolerance * prev["total_speedup"]:
+            failures.append(
+                f"{suite}: total_speedup {last['total_speedup']:.3f} fell "
+                f"below {tolerance:.2f} * previous "
+                f"{prev['total_speedup']:.3f} (sf={last.get('sf')})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=str(common.ROOT_BENCH))
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+    path = Path(args.path)
+    if not path.exists():
+        print(f"perf_guard: {path} missing — run the benchmarks first")
+        return 1
+    doc = json.loads(path.read_text())
+    failures = check(doc, args.tolerance)
+    for suite, entry in sorted(doc.items()):
+        hist = [h for h in entry.get("history", [])
+                if isinstance(h, dict) and "total_speedup" in h]
+        traj = " -> ".join(f"{h['total_speedup']:.2f}x(sf={h.get('sf')})"
+                           for h in hist)
+        print(f"{suite:>16}: {traj or '(no entries)'}")
+    if failures:
+        print("\nPERF REGRESSION:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nperf_guard: trajectory monotone (within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,10 +7,23 @@ directly to the join's target node. Claims: avg 1.3x over baseline
 pushdown / 1.8x over no pushdown; >=1.7x on Q7/Q8/Q17 (non-selective base
 scans); little effect on Q6/Q15/Q19 (selective filters); compute-fabric
 traffic nearly eliminated for base-table redistribution.
+
+``run_real`` additionally measures REAL wall-clock of the storage-side
+shuffle execution — each shuffle-marked table's pushed plan with
+``shuffle=(key, n)``, per-partition reference loop vs the batch executor's
+fused aux pass — asserting per-partition byte-identity (results, slices,
+position vectors) every repeat. Headline lands in ``BENCH_engine.json``
+under the ``shuffle`` suite (the cross-PR perf trajectory).
 """
 from __future__ import annotations
 
+import dataclasses
+
+import numpy as np
+
 from repro.core import engine
+from repro.core.executor import compile_push_plan
+from repro.core.plan import execute_push_plan
 from repro.core.shuffle import ShuffleConfig, run_shuffle
 from repro.core.simulator import MODE_NO_PUSHDOWN
 from repro.queryproc import queries as Q
@@ -18,6 +31,8 @@ from repro.queryproc import queries as Q
 from benchmarks import common
 
 NODES = 4
+# the CI perf smoke shares this exact configuration
+REAL_QUICK_KWARGS = {"qids": ("Q3", "Q12", "Q14"), "repeats": 3, "sf": 2.0}
 
 
 def run(qids=None) -> dict:
@@ -52,7 +67,93 @@ def run(qids=None) -> dict:
         out["queries"][qid] = d
     out["avg_speedup_vs_baseline"] = sum(sp_base) / len(sp_base)
     out["avg_speedup_vs_npd"] = sum(sp_npd) / len(sp_npd)
+    # real wall-clock of the storage-side shuffle execution (batch path)
+    out["real"] = run_real(qids=qids if qids != Q.QUERY_IDS else None)
     return out
+
+
+# ------------------------------------------- real wall-clock (batch path)
+def _shuffle_plan(q, table: str, n: int):
+    """The query's pushed plan for ``table`` with the shuffle partition
+    function attached — the §4.2 request the storage node actually runs.
+    The shuffle key must survive into the plan's output schema."""
+    plan = q.plans[table]
+    key = q.shuffle_keys[table]
+    if plan.agg is not None or plan.top_k is not None:
+        # shuffling partial aggregates only makes sense on a group key
+        return None if key not in (plan.agg[0] if plan.agg else ()) else \
+            dataclasses.replace(plan, shuffle=(key, n))
+    cols = (plan.columns if key in plan.columns
+            else tuple(plan.columns) + (key,))
+    return dataclasses.replace(plan, columns=cols, shuffle=(key, n))
+
+
+def _assert_shuffle_identical(ref_out, bat_parts, bat_aux, ctx):
+    for (rt, raux), bt, ba in zip(ref_out, bat_parts, bat_aux):
+        for c in rt.columns:
+            assert rt.cols[c].dtype == bt.cols[c].dtype and np.array_equal(
+                rt.cols[c], bt.cols[c], equal_nan=True), (ctx, c)
+        assert np.array_equal(raux["position_vector"],
+                              ba["position_vector"]), ctx
+        for rp, bp in zip(raux["shuffle_parts"], ba["shuffle_parts"]):
+            for c in rp.columns:
+                assert np.array_equal(rp.cols[c], bp.cols[c],
+                                      equal_nan=True), (ctx, c)
+
+
+def run_real(qids=None, repeats: int = 3, sf: float = None,
+             n_nodes: int = NODES) -> dict:
+    """REAL wall-clock of storage-side shuffle execution: per-partition
+    reference (plan walk + n boolean filters per partition) vs the batch
+    executor's single fused pass with shuffle aux."""
+    cat = common.catalog(num_nodes=2, sf=sf or common.SF)
+    queries = {}
+    for qid in qids or Q.QUERY_IDS:
+        q = Q.build_query(qid)
+        t_ref = t_bat = 0.0
+        tables = []
+        for table in q.shuffle_keys:
+            plan = _shuffle_plan(q, table, n_nodes)
+            if plan is None:
+                continue
+            parts = [p.data for p in cat.partitions_of(table)]
+            cplan = compile_push_plan(plan)
+            ref_out = [execute_push_plan(plan, p) for p in parts]
+            bat_parts, bat_aux = cplan.execute_batch_parts(parts)
+            _assert_shuffle_identical(ref_out, bat_parts, bat_aux,
+                                      (qid, table))
+            t_ref += common.best_time(
+                lambda: [execute_push_plan(plan, p) for p in parts], repeats)
+            t_bat += common.best_time(
+                lambda: cplan.execute_batch_parts(parts), repeats)
+            tables.append(table)
+        if not tables:
+            continue
+        queries[qid] = {"tables": tables, "n_partitions": sum(
+            len(cat.partitions_of(t)) for t in tables),
+            "t_reference_ms": 1e3 * t_ref, "t_batched_ms": 1e3 * t_bat,
+            "speedup": t_ref / max(t_bat, 1e-12), "identical": True}
+    return common.summarize_real(queries, sf or common.SF, repeats,
+                                 n_nodes=n_nodes)
+
+
+def render_real(out: dict) -> str:
+    if not out["queries"]:
+        return "real shuffle path: no shuffle-eligible queries"
+    rows = [[qid, "+".join(v["tables"]), v["n_partitions"],
+             f"{v['t_reference_ms']:.2f}", f"{v['t_batched_ms']:.2f}",
+             f"{v['speedup']:.2f}x"] for qid, v in out["queries"].items()]
+    hdr = ["query", "shuffled tables", "parts", "ref_ms", "batched_ms",
+           "speedup"]
+    return common.table(rows, hdr) + (
+        f"\nreal shuffle path: total {out['total_reference_ms']:.1f}ms -> "
+        f"{out['total_batched_ms']:.1f}ms ({out['total_speedup']:.2f}x; "
+        f"geomean {out['geomean_speedup']:.2f}x, "
+        f"min {out['min_speedup']:.2f}x)")
+
+
+def update_root_bench(out: dict):
+    return common.update_root_bench_real("shuffle", out)
 
 
 def render(out: dict) -> str:
@@ -66,13 +167,28 @@ def render(out: dict) -> str:
                      f'{d["cross_traffic_saved"]*100:.0f}%'])
     hdr = ["query", "no-pd", "base-pd", "shuffle-pd", "vs base", "vs npd",
            "xtraffic saved"]
-    return common.table(rows, hdr) + (
+    txt = common.table(rows, hdr) + (
         f'\navg {out["avg_speedup_vs_baseline"]:.2f}x vs baseline pushdown, '
         f'{out["avg_speedup_vs_npd"]:.2f}x vs no pushdown '
         f'(paper Fig 15: 1.3x / 1.8x)')
+    if "real" in out:
+        txt += "\n\n" + render_real(out["real"])
+    return txt
 
 
 if __name__ == "__main__":
-    o = run()
-    common.save_report("fig15_shuffle", o)
-    print(render(o))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real-quick", action="store_true",
+                    help="real wall-clock only, 3 queries, sf=2 (CI smoke)")
+    args = ap.parse_args()
+    if args.real_quick:
+        o = run_real(**REAL_QUICK_KWARGS)
+        update_root_bench(o)
+        print(render_real(o))
+    else:
+        o = run()
+        common.save_report("fig15_shuffle", o)
+        update_root_bench(o)
+        print(render(o))

@@ -33,13 +33,18 @@ class CompiledQuery:
     residual: ir.Node                   # compute-side remainder
     query: Query                        # engine-ready (plans + compute)
     amenability: List                   # [(node, Amenability)] for root
+    # per-table stages the fused batch executor runs in one pass —
+    # shuffle/bitmap-bearing frontiers are marked batchable here
+    batchable: Dict[str, tuple] = dataclasses.field(default_factory=dict)
 
     @property
     def plans(self):
         return self.query.plans
 
-    def frontier_signature(self) -> Dict[str, str]:
-        return splitter.frontier_signature(self.query.plans)
+    def frontier_signature(self, with_shuffle: bool = False) -> Dict[str, str]:
+        return splitter.frontier_signature(
+            self.query.plans,
+            self.query.shuffle_keys if with_shuffle else None)
 
     def frontier_size(self) -> int:
         return splitter.frontier_size(self.query.plans)
@@ -52,7 +57,8 @@ def compile_ir(root: ir.Node, qid: str = "Q?") -> CompiledQuery:
     q = Query(qid=qid.upper(), plans=sp.plans,
               compute=lambda merged: interpreter.run(residual, merged),
               shuffle_keys=sp.shuffle_keys)
-    return CompiledQuery(qid.upper(), root, residual, q, analyzer.analyze(root))
+    return CompiledQuery(qid.upper(), root, residual, q,
+                         analyzer.analyze(root), batchable=sp.batchable)
 
 
 def compile_query_detailed(qid: str,

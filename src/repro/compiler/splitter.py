@@ -32,7 +32,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.compiler import analyzer, ir, pushability
-from repro.core.plan import PushPlan
+from repro.core.plan import PushPlan, batchable_stages
 from repro.queryproc import expressions as ex
 
 
@@ -45,13 +45,22 @@ class SplitResult:
     residual: ir.Node
     plans: Dict[str, PushPlan]
     shuffle_keys: Dict[str, str]
+    # per-table stages the fused batch executor runs in one vectorized pass
+    # (core.executor.batchable_stages) — shuffle/bitmap-bearing frontiers
+    # included since the executor emits their aux products batched; the
+    # engine and the shuffle/bitmap evaluations consult this instead of
+    # assuming only scan->filter->agg chains batch
+    batchable: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=dict)
 
 
 def split(root: ir.Node) -> SplitResult:
     plans: Dict[str, PushPlan] = {}
     skeys: Dict[str, str] = {}
     residual = _rec(root, plans, skeys, {})
-    return SplitResult(residual, plans, skeys)
+    batchable = {t: batchable_stages(p, skeys.get(t))
+                 for t, p in plans.items()}
+    return SplitResult(residual, plans, skeys, batchable)
 
 
 # ------------------------------------------------------------------ walk
@@ -188,20 +197,29 @@ def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
 _STAGES = ("filter", "derive", "agg", "topk")
 
 
-def frontier_signature(plans: Dict[str, PushPlan]) -> Dict[str, str]:
+def frontier_signature(plans: Dict[str, PushPlan],
+                       shuffle_keys: Optional[Dict[str, str]] = None
+                       ) -> Dict[str, str]:
     """Per-table signature of the pushed stages, e.g.
-    {'lineitem': 'scan+filter+derive+agg', 'orders': 'scan'}."""
+    {'lineitem': 'scan+filter+derive+agg', 'orders': 'scan'}. Passing the
+    split's ``shuffle_keys`` marks shuffle-bearing frontiers
+    (``...+shuffle``) — the batch executor runs the partition function in
+    the same fused pass as the rest of the chain."""
     out = {}
     for table, p in sorted(plans.items()):
         stages = ["scan"]
         if p.predicate is not None:
             stages.append("filter")
+        if p.bitmap_only:
+            stages.append("bitmap")
         if p.derive:
             stages.append("derive")
         if p.agg is not None:
             stages.append("agg")
         if p.top_k is not None:
             stages.append("topk")
+        if p.shuffle is not None or (shuffle_keys and table in shuffle_keys):
+            stages.append("shuffle")
         out[table] = "+".join(stages)
     return out
 

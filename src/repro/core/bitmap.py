@@ -27,9 +27,11 @@ import numpy as np
 
 from repro.core.cost import RequestCost
 from repro.core.engine import PlannedRequest
+from repro.core.executor import compile_push_plan
 from repro.core.plan import PushPlan
 from repro.queryproc import expressions as ex
 from repro.queryproc import operators as ops
+from repro.queryproc.table import ColumnTable
 
 
 @dataclasses.dataclass
@@ -153,11 +155,37 @@ def rewrite_all(reqs: List[PlannedRequest], cache: CacheState,
 # --------------------------------------------------- real bitmap execution
 def storage_side_bitmap(part_data, predicate, out_cols_uncached):
     """Actually produce (packed bitmap, filtered uncached columns) at the
-    storage node — the numpy half; the device half is kernels.bitmap_apply."""
+    storage node — the numpy half; the device half is kernels.bitmap_apply.
+    Per-partition reference — the oracle for the batched form below."""
     words = ops.selection_bitmap(part_data, predicate)
     filtered = ops.apply_bitmap(part_data.select(
         [c for c in out_cols_uncached if c in part_data.cols]), words)
     return words, filtered
+
+
+def storage_side_bitmap_batched(parts, predicate, out_cols_uncached,
+                                table: str = "lineitem"
+                                ) -> Tuple[List[np.ndarray], List[ColumnTable]]:
+    """Fig-3 path over ALL partitions in one fused pass (the batch
+    executor's ``bitmap_only`` aux): one predicate evaluation over the
+    concatenation, per-partition packed bitmaps + filtered uncached columns
+    split back out — byte-identical to looping ``storage_side_bitmap``."""
+    cols = tuple(c for c in out_cols_uncached if c in parts[0].cols)
+    plan = PushPlan(table, cols, predicate=predicate, bitmap_only=True)
+    tabs, aux = compile_push_plan(plan).execute_batch_parts(parts)
+    return [a["bitmap"] for a in aux], tabs
+
+
+def compute_side_apply_batched(parts, bitmaps, out_cols,
+                               table: str = "lineitem") -> List[ColumnTable]:
+    """Fig-4 path over ALL partitions in one fused pass: the storage node
+    applies compute-built bitmaps (predicate columns never scanned) and
+    returns each partition's filtered output columns — byte-identical to
+    per-partition ``execute_push_plan(plan, part, bitmap=words)``."""
+    cols = tuple(c for c in out_cols if c in parts[0].cols)
+    plan = PushPlan(table, cols, apply_bitmap=True)
+    tabs, _aux = compile_push_plan(plan).execute_batch_parts(parts, bitmaps)
+    return tabs
 
 
 def combine_bitmaps(a: np.ndarray, b: np.ndarray) -> np.ndarray:

@@ -52,6 +52,12 @@ class EngineConfig:
     compute_bw: float = 2.4e9   # compute-node operator bandwidth (16 vCPU)
     num_compute_nodes: int = 1
     executor: str = EXECUTOR_BATCHED  # real-execution path (results identical)
+    # adaptive filter stage: estimated selectivity at/above which the batch
+    # executor concatenates whole columns then masks once instead of
+    # gathering survivors per partition. None = the import-time calibrated
+    # crossover (core.executor.FILTER_GATHER_THRESHOLD). Bytes identical
+    # either way — this knob is purely a performance override.
+    filter_gather_threshold: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -98,7 +104,8 @@ def plan_requests(query: Query, catalog: Catalog, start_id: int = 0
 
 
 def execute_requests(reqs: List[PlannedRequest],
-                     executor: str = EXECUTOR_BATCHED
+                     executor: str = EXECUTOR_BATCHED,
+                     filter_gather_threshold: Optional[float] = None
                      ) -> Dict[str, ColumnTable]:
     """Run every pushable sub-plan (path-independent result) and merge.
 
@@ -122,7 +129,8 @@ def execute_requests(reqs: List[PlannedRequest],
     for (table, _pid), rs in groups.items():
         by_table.setdefault(table, []).append(
             compile_push_plan(rs[0].plan).execute_batch(
-                [r.part.data for r in rs]))
+                [r.part.data for r in rs],
+                threshold=filter_gather_threshold))
     # a table normally carries one plan (query.plans is table-keyed); with
     # hand-built request lists carrying several, merge in group order
     return {t: parts[0] if len(parts) == 1 else ColumnTable.concat(parts)
@@ -143,7 +151,8 @@ def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
                 for r in reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode)
-    merged = execute_requests(reqs, cfg.executor)
+    merged = execute_requests(reqs, cfg.executor,
+                              cfg.filter_gather_threshold)
     result = query.compute(merged)
     t_np = nonpushable_time(merged, cfg)
     return QueryRun(
@@ -167,7 +176,8 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     out: Dict[str, QueryRun] = {}
     for q in queries:
         reqs = [r for r in all_reqs if r.query_id == q.qid]
-        merged = execute_requests(reqs, cfg.executor)
+        merged = execute_requests(reqs, cfg.executor,
+                                  cfg.filter_gather_threshold)
         result = q.compute(merged)
         t_np = nonpushable_time(merged, cfg)
         out[q.qid] = QueryRun(

@@ -1,5 +1,5 @@
 """Fused batched storage executor: compile-once PushPlans, vectorized
-multi-partition execution.
+multi-partition execution — including the aux-producing data paths.
 
 The reference path (``core.plan.execute_push_plan``) interprets a
 ``PushPlan`` per partition: it re-walks the predicate expression tree,
@@ -23,22 +23,46 @@ this module lowers each plan **once per query**:
   Python-per-partition loop in ``engine.execute_requests`` collapses to one
   call per (table, plan).
 
+- ``execute_batch_aux`` / ``execute_batch_parts`` additionally emit the
+  §4.2 **auxiliary by-products** in the same fused pass: per-partition
+  packed selection bitmaps (``bitmap_only`` plans — Figs 3/4), and
+  per-partition hash-partition slices + position vectors (``shuffle``
+  plans — Fig 5/15). One predicate/hash evaluation over the concatenation
+  serves every partition; a single stable sort by ``(partition, target)``
+  replaces the reference's ``n_parts * n_targets`` boolean filters.
+
+The filter stage is **selectivity-adaptive**: the compiled ``sel_fn``
+estimate (or the exact bitmap popcount on ``apply_bitmap`` plans) picks
+between gathering survivors per partition (cheap when the predicate is
+selective) and concatenating whole columns then applying one big mask
+(cheap when most rows survive — scan-heavy plans used to pay per-partition
+gather overhead for nothing). The crossover threshold is micro-calibrated
+at import time (``calibrate_gather_threshold``), overridable via
+``EngineConfig.filter_gather_threshold`` or ``REPRO_GATHER_THRESHOLD``;
+each batch's decision lands in ``FILTER_DECISIONS`` for the benchmarks to
+report. Both branches produce the same bytes — the choice is purely a
+performance one.
+
 Bitwise contract: the batch path returns **byte-identical** merged tables
-to concatenating the per-partition reference results. The load-bearing
-facts: elementwise numpy ops distribute over concatenation exactly;
+and aux products to the per-partition reference. The load-bearing facts:
+elementwise numpy ops distribute over concatenation exactly;
 ``np.bincount`` accumulates weights in array order (so segment-keyed sums
 add the same floats in the same order as per-partition sums); stable
-argsort + ``reduceat`` reduce identical segments; and the keyless-agg /
-top-k stages intentionally drop to a per-segment loop because their
-reference semantics (``np.sum`` pairwise summation, ``argpartition`` tie
-choices, the empty-partition ``[0.]`` placeholder) are not
-concatenation-invariant — those loops run on the already-filtered rows, so
-the heavy stages stay fused. ``tests/test_executor.py`` pins all of this
-against the reference oracle.
+argsort + ``reduceat`` reduce identical segments; a stable sort by
+``(partition, target)`` slices into exactly the rows ``pid == target``
+selects per partition, in the same order; and the keyless-agg / top-k
+stages intentionally drop to a per-segment loop because their reference
+semantics (``np.sum`` pairwise summation, ``argpartition`` tie choices,
+the empty-partition ``[0.]`` placeholder) are not concatenation-invariant
+— those loops run on the already-filtered rows, so the heavy stages stay
+fused. ``tests/test_executor.py`` pins all of this against the reference
+oracle.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -46,10 +70,108 @@ import numpy as np
 
 from repro.core.cost import RequestCost
 from repro.core.plan import _AGG_OUT_ROWS, PushPlan
+from repro.core.plan import batchable_stages  # noqa: F401 re-export
 from repro.queryproc import expressions as ex
 from repro.queryproc import operators as ops
 from repro.queryproc.table import ColumnTable
 from repro.storage.catalog import Partition
+
+# --------------------------------------------- adaptive filter calibration
+DEFAULT_GATHER_THRESHOLD = 0.55  # fallback when calibration is disabled
+
+
+def calibrate_gather_threshold(n_parts: int = 160, rows_per_part: int = 1000,
+                               n_cols: int = 3,
+                               sels: Sequence[float] = (0.9, 0.7, 0.5, 0.3),
+                               repeats: int = 2) -> float:
+    """Micro-benchmark the two filter-stage strategies at the engine's real
+    request shape (~160 small partitions) and return the estimated-
+    selectivity crossover above which concat-everything beats
+    gather-survivors on this machine.
+
+    gather copies ~sel*N bytes through ``n_parts`` cache-resident boolean
+    gathers; concat copies ~(1+sel)*N bytes in two big bandwidth-bound ops
+    — the crossover is machine-dependent (allocator + memcpy throughput vs
+    per-call overhead), hence measured, not assumed. The scan walks the
+    selectivities DOWNWARD and stops at the first one where gather wins, so
+    a noisy concat win at low selectivity can never drag the threshold down
+    — the adaptive stage must never lose to the always-gather baseline."""
+    rng = np.random.default_rng(0)
+    n_rows = n_parts * rows_per_part
+    # one shared buffer stands in for every column: the strategies only
+    # read the sources (outputs are fresh allocations either way), so the
+    # work profile is identical and data generation stays cheap at import
+    base = rng.uniform(0.0, 1.0, n_rows)
+    data = [base] * n_cols
+    bnd = np.linspace(0, n_rows, n_parts + 1).astype(np.intp)
+    parts = [[a[bnd[p]:bnd[p + 1]] for a in data] for p in range(n_parts)]
+    u = rng.random(n_rows)
+
+    def best_of(fn) -> float:
+        fn()  # warm
+        return min(_t(fn) for _ in range(repeats))
+
+    def _t(fn) -> float:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    lowest_concat_win = None
+    for sel in sorted(sels, reverse=True):
+        mask = u < sel
+        masks = [mask[bnd[p]:bnd[p + 1]] for p in range(n_parts)]
+        t_gather = best_of(lambda: [np.concatenate(
+            [parts[p][i][masks[p]] for p in range(n_parts)])
+            for i in range(n_cols)])
+        t_concat = best_of(lambda: [np.concatenate(
+            [parts[p][i] for p in range(n_parts)])[mask]
+            for i in range(n_cols)])
+        if t_concat >= t_gather:
+            break
+        lowest_concat_win = sel
+    if lowest_concat_win is None:
+        return 1.01  # gather always won: never switch
+    lower = max((s for s in sels if s < lowest_concat_win), default=None)
+    return (lowest_concat_win if lower is None
+            else (lowest_concat_win + lower) / 2)
+
+
+def _init_threshold() -> float:
+    env = os.environ.get("REPRO_GATHER_THRESHOLD")
+    if env:
+        return float(env)
+    if os.environ.get("REPRO_NO_CALIBRATE"):
+        return DEFAULT_GATHER_THRESHOLD
+    try:
+        return calibrate_gather_threshold()
+    except Exception:  # pragma: no cover - calibration is best-effort
+        return DEFAULT_GATHER_THRESHOLD
+
+
+FILTER_GATHER_THRESHOLD = _init_threshold()
+
+# every batch filter-stage decision, for the benchmarks to report
+FILTER_DECISIONS: List[Dict] = []
+_DECISION_CAP = 8192
+
+
+def reset_filter_decisions() -> None:
+    FILTER_DECISIONS.clear()
+
+
+def filter_decision_counts() -> Dict[str, int]:
+    out = {"gather": 0, "concat": 0}
+    for d in FILTER_DECISIONS:
+        out[d["branch"]] += 1
+    return out
+
+
+def _record_decision(table: str, est: Optional[float], branch: str,
+                     n_parts: int, rows: int) -> None:
+    if len(FILTER_DECISIONS) < _DECISION_CAP:
+        FILTER_DECISIONS.append({"table": table, "est_selectivity": est,
+                                 "branch": branch, "n_parts": n_parts,
+                                 "rows": rows})
 
 
 @dataclasses.dataclass
@@ -69,24 +191,56 @@ class CompiledPushPlan:
     # ------------------------------------------------------------ execution
     def execute(self, data: ColumnTable, bitmap: Optional[np.ndarray] = None
                 ) -> Tuple[ColumnTable, Dict]:
-        """Single-partition fused path: the same *result table* as
-        ``plan.execute_push_plan``, minus the per-call plan re-walk. The
-        aux dict is always empty — plans whose value IS the aux by-product
-        (bitmap_only's packed bitmap, shuffle's parts/position vector) must
-        use the reference path, which this guards against."""
-        assert not self.plan.bitmap_only and self.plan.shuffle is None, \
-            "aux-producing plans need plan.execute_push_plan"
-        merged = self.execute_batch([data],
-                                    None if bitmap is None else [bitmap])
-        return merged, {}
+        """Single-partition fused path: the same ``(result, aux)`` as
+        ``plan.execute_push_plan`` — aux-producing plans (bitmap_only,
+        shuffle) emit their by-products from the batch machinery."""
+        merged, aux = self.execute_batch_aux(
+            [data], None if bitmap is None else [bitmap])
+        return merged, aux[0]
 
     def execute_batch(self, tables: Sequence[ColumnTable],
-                      bitmaps: Optional[Sequence[np.ndarray]] = None
-                      ) -> ColumnTable:
+                      bitmaps: Optional[Sequence[np.ndarray]] = None,
+                      threshold: Optional[float] = None) -> ColumnTable:
         """All partitions sharing this plan in one vectorized pass.
         Returns the merged table — byte-identical to
         ``ColumnTable.concat([execute_push_plan(plan, t)[0] for t in tables])``.
         """
+        out, _, _ = self._run_batch(tables, bitmaps, threshold,
+                                    want_aux=False)
+        return out
+
+    def execute_batch_aux(self, tables: Sequence[ColumnTable],
+                          bitmaps: Optional[Sequence[np.ndarray]] = None,
+                          threshold: Optional[float] = None
+                          ) -> Tuple[ColumnTable, List[Dict]]:
+        """(merged table, per-partition aux dicts) — each aux dict is
+        byte-identical to ``execute_push_plan(plan, tables[i])[1]``:
+        ``bitmap`` (packed uint32 words) for bitmap_only plans,
+        ``shuffle_parts`` + ``position_vector`` for shuffle plans."""
+        out, _, aux = self._run_batch(tables, bitmaps, threshold,
+                                      want_aux=True)
+        return out, aux
+
+    def execute_batch_parts(self, tables: Sequence[ColumnTable],
+                            bitmaps: Optional[Sequence[np.ndarray]] = None,
+                            threshold: Optional[float] = None
+                            ) -> Tuple[List[ColumnTable], List[Dict]]:
+        """(per-partition result tables, per-partition aux dicts) — each
+        entry byte-identical to ``execute_push_plan(plan, tables[i])``. The
+        per-partition views slice one fused pass; nothing is re-executed."""
+        out, bounds, aux = self._run_batch(tables, bitmaps, threshold,
+                                           want_aux=True)
+        parts = [ColumnTable({c: v[bounds[p]:bounds[p + 1]]
+                              for c, v in out.cols.items()})
+                 for p in range(len(tables))]
+        return parts, aux
+
+    def _run_batch(self, tables: Sequence[ColumnTable],
+                   bitmaps: Optional[Sequence[np.ndarray]],
+                   threshold: Optional[float], want_aux: bool
+                   ) -> Tuple[ColumnTable, np.ndarray, List[Dict]]:
+        """The fused pass. Returns (merged, per-partition output-row bounds
+        (n_parts+1,), per-partition aux dicts)."""
         plan = self.plan
         assert plan.columns or plan.agg is not None, \
             "plans must declare output columns (the splitter guarantees it)"
@@ -103,40 +257,59 @@ class CompiledPushPlan:
         present = [c for c in self.accessed if c in tables[0].cols]
 
         # ---- filter stage: one fused predicate pass over the predicate
-        # columns, then gather only the *surviving* rows of the remaining
-        # columns (pushed predicates are selective — copying non-survivors
-        # was the dominant batch cost)
-        cols: Dict[str, np.ndarray]
+        # columns; remaining columns materialize through the adaptive
+        # gather-vs-concat branch below
+        cols: Dict[str, np.ndarray] = {}
+        masks: Optional[List[np.ndarray]] = None
+        mask_full: Optional[np.ndarray] = None
+        est: Optional[float] = None
         if plan.apply_bitmap:
             assert bitmaps is not None, "compute-layer bitmaps required"
             masks = [ops.unpack_bitmap(w, int(m))
                      for w, m in zip(bitmaps, lens)]
-            cols = {}
+            mask_full = masks[0] if n_parts == 1 else np.concatenate(masks)
+            total = int(lens.sum())
+            # the bitmap is in hand: the selectivity is exact, not estimated
+            est = float(mask_full.sum()) / total if total else 0.0
         elif self.pred_fn is not None:
             pcols = {c: concat(c) for c in self.pred_cols
                      if c in tables[0].cols}
-            mask = self.pred_fn(pcols)
-            masks = (np.split(mask, np.cumsum(lens)[:-1]) if n_parts > 1
-                     else [mask])
+            mask_full = self.pred_fn(pcols)
+            masks = (np.split(mask_full, np.cumsum(lens)[:-1]) if n_parts > 1
+                     else [mask_full])
             # predicate columns are already concatenated: one gather
-            cols = {c: v[mask] for c, v in pcols.items() if c in present}
-        else:
-            masks = None
-            cols = {}
+            cols = {c: v[mask_full] for c, v in pcols.items() if c in present}
+            if self.sel_fn is not None:
+                est = float(self.sel_fn(tables[0].stats()))
+
         segmented = plan.agg is not None or plan.top_k is not None
         if masks is None:
+            counts = lens
             seg = np.repeat(np.arange(n_parts), lens) if segmented else None
             for c in present:
                 cols.setdefault(c, concat(c))
         else:
-            counts = np.asarray([int(m.sum()) for m in masks])
+            counts = np.asarray([int(m.sum()) for m in masks], np.int64)
             seg = np.repeat(np.arange(n_parts), counts) if segmented else None
-            for c in present:
-                if c not in cols:
-                    cols[c] = (tables[0].cols[c][masks[0]] if n_parts == 1
-                               else np.concatenate(
-                                   [t.cols[c][m]
-                                    for t, m in zip(tables, masks)]))
+            missing = [c for c in present if c not in cols]
+            if missing:
+                thr = (FILTER_GATHER_THRESHOLD if threshold is None
+                       else threshold)
+                branch = ("concat" if est is not None and est >= thr
+                          else "gather")
+                _record_decision(plan.table, est, branch, n_parts,
+                                 int(lens.sum()))
+                if branch == "concat":
+                    # most rows survive: two big copies beat n_parts gathers
+                    for c in missing:
+                        cols[c] = concat(c)[mask_full]
+                else:
+                    # selective predicate: copy only the survivors
+                    for c in missing:
+                        cols[c] = (tables[0].cols[c][masks[0]]
+                                   if n_parts == 1 else np.concatenate(
+                                       [t.cols[c][m]
+                                        for t, m in zip(tables, masks)]))
 
         # ---- derive stage (fused: one elementwise pass per derived column)
         for name, incols, fn in plan.derive:
@@ -152,8 +325,45 @@ class CompiledPushPlan:
         else:
             out = t
         if plan.top_k is not None:
-            out = self._segmented_top_k(out, seg, n_parts)
-        return out
+            out, bounds = self._segmented_top_k(out, seg, n_parts)
+        elif plan.agg is not None:
+            bounds = np.searchsorted(seg, np.arange(n_parts + 1))
+        else:
+            bounds = np.concatenate([[0], np.cumsum(counts)])
+
+        aux: List[Dict] = [{} for _ in range(n_parts)]
+        if want_aux:
+            self._emit_aux(out, bounds, masks, aux)
+        return out, bounds, aux
+
+    def _emit_aux(self, out: ColumnTable, bounds: np.ndarray,
+                  masks: Optional[List[np.ndarray]], aux: List[Dict]) -> None:
+        """The §4.2 by-products, vectorized over the whole batch."""
+        plan = self.plan
+        n_parts = len(aux)
+        if plan.bitmap_only and masks is not None and not plan.apply_bitmap:
+            # the reference packs the full-partition predicate mask — which
+            # is exactly the per-partition split of the batch mask
+            for a, m in zip(aux, masks):
+                a["bitmap"] = ops.pack_bitmap(m)
+        if plan.shuffle is not None:
+            key, n_t = plan.shuffle
+            pid = ops.hash_partition_ids(np.asarray(out.cols[key]), n_t)
+            seg_of_row = np.repeat(np.arange(n_parts), np.diff(bounds))
+            code = seg_of_row * n_t + pid
+            order = np.argsort(code, kind="stable")
+            # one gather per column; a stable sort by (partition, target)
+            # makes each (p, t) run exactly the rows `pid == t` selects per
+            # partition, in the reference's row order
+            sorted_cols = {c: v[order] for c, v in out.cols.items()}
+            bb = np.searchsorted(code[order],
+                                 np.arange(n_parts * n_t + 1))
+            for p, a in enumerate(aux):
+                a["shuffle_parts"] = [
+                    ColumnTable({c: v[bb[p * n_t + i]:bb[p * n_t + i + 1]]
+                                 for c, v in sorted_cols.items()})
+                    for i in range(n_t)]
+                a["position_vector"] = pid[bounds[p]:bounds[p + 1]]
 
     # ----------------------------------------------------- agg / top-k
     def _batched_agg(self, t: ColumnTable, seg: np.ndarray, n_parts: int
@@ -232,7 +442,7 @@ class CompiledPushPlan:
         return ColumnTable(out), sorted_keys[0][starts]  # per-group pid
 
     def _segmented_top_k(self, t: ColumnTable, seg: np.ndarray, n_parts: int
-                         ) -> ColumnTable:
+                         ) -> Tuple[ColumnTable, np.ndarray]:
         # per-partition top-k supersets, exactly as the reference selects
         # them (argpartition tie behavior is position-dependent, so the
         # reference operator runs per segment — on filtered rows only)
@@ -242,7 +452,9 @@ class CompiledPushPlan:
             ColumnTable({c: v[bounds[p]:bounds[p + 1]]
                          for c, v in t.cols.items()}), col, k, asc)
             for p in range(n_parts)]
-        return ColumnTable.concat(parts)
+        out_bounds = np.concatenate(
+            [[0], np.cumsum([len(p) for p in parts])])
+        return ColumnTable.concat(parts), out_bounds
 
     # ------------------------------------------------------------ cost
     def estimate_cost(self, part: Partition) -> RequestCost:

@@ -63,6 +63,32 @@ class PushPlan:
         return tuple(sorted(cols))
 
 
+def batchable_stages(plan: PushPlan, shuffle_key: Optional[str] = None
+                     ) -> Tuple[str, ...]:
+    """The stages of this frontier the batch executor (``core.executor``)
+    fuses into its single vectorized pass — including the aux-producing
+    ones (bitmap emission, shuffle partitioning). The splitter uses this to
+    mark shuffle/bitmap-bearing frontiers batchable
+    (``SplitResult.batchable``). Pure plan introspection — lives here so
+    the compiler can consult it without importing the execution module."""
+    stages: List[str] = []
+    if plan.apply_bitmap:
+        stages.append("apply_bitmap")
+    elif plan.predicate is not None:
+        stages.append("filter")
+        if plan.bitmap_only:
+            stages.append("bitmap")
+    if plan.derive:
+        stages.append("derive")
+    if plan.agg is not None:
+        stages.append("agg")
+    if plan.top_k is not None:
+        stages.append("topk")
+    if plan.shuffle is not None or shuffle_key is not None:
+        stages.append("shuffle")
+    return tuple(stages)
+
+
 def execute_push_plan(plan: PushPlan, data: ColumnTable,
                       bitmap: Optional[np.ndarray] = None):
     """Run the pushable sub-plan on one partition (storage-native numpy).

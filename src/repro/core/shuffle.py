@@ -24,7 +24,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.core import engine
 from repro.core.engine import EngineConfig, PlannedRequest, plan_requests
+from repro.core.executor import compile_push_plan
+from repro.core.plan import PushPlan
 from repro.core.simulator import SimRequest, simulate
 from repro.queryproc import operators as ops
 from repro.queryproc.queries import Query
@@ -50,14 +53,29 @@ class ShuffleRun:
     position_vector_bytes: float
 
 
-def _exec_table_bytes(reqs: List[PlannedRequest]) -> Dict[str, List[Tuple[int, int]]]:
-    """Actually run each request's plan and record (node, out_bytes)."""
-    from repro.core.plan import execute_push_plan
+def _exec_table_bytes(reqs: List[PlannedRequest],
+                      executor: str = engine.EXECUTOR_BATCHED
+                      ) -> Dict[str, List[Tuple[int, int]]]:
+    """Actually run each request's plan and record (node, out_bytes).
+    ``batched`` runs one fused pass per (table, plan) and splits the result
+    back per partition — identical bytes to the per-request reference loop."""
     by_table: Dict[str, List[Tuple[int, int]]] = {}
+    if executor == engine.EXECUTOR_REFERENCE:
+        from repro.core.plan import execute_push_plan
+        for r in reqs:
+            res, _ = execute_push_plan(r.plan, r.part.data)
+            b = res.nbytes(stored=False) if len(res) else 0
+            by_table.setdefault(r.table, []).append((r.part.node_id, b))
+        return by_table
+    groups: Dict[Tuple[str, int], List[PlannedRequest]] = {}
     for r in reqs:
-        res, _ = execute_push_plan(r.plan, r.part.data)
-        b = res.nbytes(stored=False) if len(res) else 0
-        by_table.setdefault(r.table, []).append((r.part.node_id, b))
+        groups.setdefault((r.table, id(r.plan)), []).append(r)
+    for (table, _pid), rs in groups.items():
+        parts, _aux = compile_push_plan(rs[0].plan).execute_batch_parts(
+            [r.part.data for r in rs])
+        for r, res in zip(rs, parts):
+            b = res.nbytes(stored=False) if len(res) else 0
+            by_table.setdefault(table, []).append((r.part.node_id, b))
     return by_table
 
 
@@ -121,12 +139,37 @@ def shuffle_at_storage(catalog: Catalog, table: str, key: str, n: int
                        ) -> List[ColumnTable]:
     """Actually partition every partition of ``table`` by ``key`` at its
     storage node and concatenate per-target slices (what the target compute
-    nodes would receive)."""
+    nodes would receive). Per-partition reference loop — the oracle for
+    ``shuffle_at_storage_batched``."""
     targets: List[List[ColumnTable]] = [[] for _ in range(n)]
     for part in catalog.partitions_of(table):
         for t, piece in enumerate(ops.shuffle_partition(part.data, key, n)):
             targets[t].append(piece)
     return [ColumnTable.concat(ps) for ps in targets]
+
+
+def shuffle_at_storage_batched(catalog: Catalog, table: str, key: str, n: int
+                               ) -> List[ColumnTable]:
+    """The same per-target slices via the batch executor's shuffle aux: one
+    hash + one stable sort over all partitions instead of
+    ``n_partitions * n`` boolean filters — byte-identical to
+    ``shuffle_at_storage``."""
+    parts = [p.data for p in catalog.partitions_of(table)]
+    plan = PushPlan(table, tuple(parts[0].columns), shuffle=(key, n))
+    _merged, aux = compile_push_plan(plan).execute_batch_aux(parts)
+    targets: List[List[ColumnTable]] = [[] for _ in range(n)]
+    for a in aux:
+        for t, piece in enumerate(a["shuffle_parts"]):
+            targets[t].append(piece)
+    return [ColumnTable.concat(ps) for ps in targets]
+
+
+def apply_position_vector(t: ColumnTable, pv, n: int) -> List[ColumnTable]:
+    """Cached-data interop (§4.2): route a compute-cached table's rows with
+    a storage-shipped position vector — no key columns re-read, no re-hash.
+    Equivalent to ``ops.shuffle_partition(t, key, n)`` when ``pv`` is the
+    position vector the storage node computed over ``key``."""
+    return [t.filter(pv == i) for i in range(n)]
 
 
 def shuffle_at_compute(catalog: Catalog, table: str, key: str, n: int

@@ -1,9 +1,19 @@
 """Pallas TPU kernels for the pushed-back storage operators.
 
 predicate_bitmap / bitmap_apply / grouped_agg / hash_partition /
-fused_scan_agg (predicate -> bitmap-apply -> grouped-agg in one pass, no
-materialized intermediates) — each with an ``ops.py`` jit wrapper and a
-``ref.py`` pure-jnp oracle; tests sweep shapes x dtypes in interpret mode
-against both ref.py and the numpy storage engine.
+fused_scan_agg (predicate -> mask -> grouped agg, one pass, no materialized
+intermediates) / fused_scan_shuffle (predicate -> packed bitmap -> hash
+partition, one pass) — each with an ``ops.py`` jit wrapper and a ``ref.py``
+pure-jnp oracle; tests sweep shapes x dtypes in interpret mode against both
+ref.py and the numpy storage engine.
+
+The padded/jit'd op-level entry points are re-exported here — import
+``from repro.kernels import bitmap_apply`` (etc.) rather than reaching into
+the submodules; the submodules hold the raw ``pallas_call`` bodies with
+their exact-multiple shape preconditions.
 """
 from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (bitmap_apply, compile_predicate,  # noqa: F401
+                               fused_scan_agg, fused_scan_shuffle,
+                               grouped_agg, hash_partition, predicate_bitmap,
+                               predicate_bitmap_np)

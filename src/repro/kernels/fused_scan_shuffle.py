@@ -1,0 +1,89 @@
+"""Fused predicate -> packed bitmap -> hash partition (Pallas TPU).
+
+The storage-side hot path of a pushed filter + shuffle (or bitmap-exchange)
+chain as ONE kernel — the device mirror of the numpy batch executor's aux
+emission (``core.executor._emit_aux``). Per row tile:
+
+- the compiled predicate tree evaluates branch-free over VREG-resident
+  column tiles (as in ``predicate_bitmap``),
+- the boolean row mask packs 32 rows/word with the weighted-sum-over-lanes
+  contraction (disjoint powers of two make SUM == OR),
+- the shuffle key hashes to its target compute node in uint32 lanes (as in
+  ``hash_partition``),
+- and a mask-gated one-hot MXU contraction counts the *surviving* rows per
+  target — the per-target output sizes the storage node's pull buffers
+  need (§4.2), for free in the same pass.
+
+Fusion removes the two HBM round-trips the three-kernel pipeline
+(``predicate_bitmap`` -> ``bitmap_apply`` -> ``hash_partition``) pays
+between predicate, apply, and partition.
+
+A ``valid`` lane (1 real row / 0 padding) rides along with the columns so
+padding rows can never set a bitmap bit or count toward a target — the
+wrapper needs no tail-word masking and no histogram subtraction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192
+KNUTH = 2654435761
+
+
+def _kernel(pred_fn: Optional[Callable], names: Sequence[str],
+            num_parts: int, *refs):
+    *col_refs, key_ref, valid_ref, words_ref, pid_ref, hist_ref = refs
+    cols = {n: r[...] for n, r in zip(names, col_refs)}
+    keep = (pred_fn(cols) if pred_fn is not None
+            else jnp.ones(key_ref.shape, bool))
+    keep = keep & (valid_ref[...] > 0)                        # (B,) bool
+    # pack: 32 rows/word, little-endian bit order (== np.packbits)
+    m = keep.reshape(-1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, :]
+    words_ref[...] = (m * weights).sum(axis=1, dtype=jnp.uint32)
+    # hash: Knuth multiplicative, wraps mod 2^32 in uint32 lanes
+    keys = key_ref[...].astype(jnp.uint32)
+    h = keys * jnp.uint32(KNUTH)
+    pid = ((h >> jnp.uint32(16)) % jnp.uint32(num_parts)).astype(jnp.int32)
+    pid_ref[...] = pid
+    # per-target survivor count: mask-gated (1, B) @ (B, P) MXU contraction
+    onehot = (pid[:, None] == jnp.arange(num_parts)[None, :]
+              ).astype(jnp.float32)
+    hist = jnp.dot(keep.astype(jnp.float32)[None, :], onehot,
+                   preferred_element_type=jnp.float32)[0]
+    hist_ref[...] = hist.astype(jnp.int32)[None, :]
+
+
+def fused_scan_shuffle(cols, pred_fn: Optional[Callable], keys: jax.Array,
+                       valid: jax.Array, num_parts: int,
+                       block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """cols: dict of equal-length 1-D predicate input arrays; keys: (R,)
+    shuffle key; valid: (R,) 1/0 row-validity lane. R % block == 0,
+    block % 32 == 0. Returns (packed bitmap (R/32,) uint32, pids (R,)
+    int32, surviving-rows-per-target hist (R/block, P) int32).
+    ``pred_fn=None`` means every valid row survives."""
+    names = list(cols)
+    arrs = [cols[n] for n in names]
+    R = keys.shape[0]
+    assert R % block == 0 and block % 32 == 0, (R, block)
+    grid = (R // block,)
+    in_specs = ([pl.BlockSpec((block,), lambda i: (i,)) for _ in arrs]
+                + [pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))])
+    return pl.pallas_call(
+        functools.partial(_kernel, pred_fn, names, num_parts),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block // 32,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1, num_parts), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R // 32,), jnp.uint32),
+                   jax.ShapeDtypeStruct((R,), jnp.int32),
+                   jax.ShapeDtypeStruct((R // block, num_parts), jnp.int32)],
+        interpret=interpret,
+    )(*arrs, keys, valid)

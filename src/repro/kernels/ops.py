@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.kernels import bitmap_apply as _ba
 from repro.kernels import fused_scan_agg as _fsa
+from repro.kernels import fused_scan_shuffle as _fss
 from repro.kernels import grouped_agg as _ga
 from repro.kernels import hash_partition as _hp
 from repro.kernels import predicate_bitmap as _pb
@@ -90,6 +91,30 @@ def fused_scan_agg(cols: Dict[str, jax.Array], pred_fn: Optional[Callable],
     sums, counts = _fsa.fused_scan_agg(padded, pred_fn, ids_p, vals_p,
                                        num_groups + 1, block, interpret)
     return sums[:num_groups], counts[:num_groups]
+
+
+def fused_scan_shuffle(cols: Dict[str, jax.Array], pred_fn: Optional[Callable],
+                       keys: jax.Array, num_parts: int,
+                       block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Fused predicate -> packed bitmap -> hash partition: (packed bitmap
+    (ceil(R/32),) uint32, pids (R,) int32, surviving-rows-per-target hist
+    (P,) int32) in one pass. A validity lane zeroes padding rows inside the
+    kernel, so no tail-word masking or histogram subtraction is needed —
+    pad rows can neither set a bit nor count toward a target."""
+    R = keys.shape[0]
+    keys_p, _ = _pad_to(keys, block)
+    valid_p, _ = _pad_to(jnp.ones(R, jnp.int32), block)
+    padded = {}
+    for k, v in cols.items():
+        assert v.shape == (R,), (k, v.shape)
+        padded[k], _ = _pad_to(v.astype(jnp.float32) if v.dtype == jnp.float64
+                               else v, block)
+    words, pids, hist = _fss.fused_scan_shuffle(padded, pred_fn, keys_p,
+                                                valid_p, num_parts, block,
+                                                interpret)
+    n_words = -(-R // 32)
+    return (words[:n_words] if R else words[:0], pids[:R],
+            hist.sum(axis=0))
 
 
 def hash_partition(keys: jax.Array, num_parts: int,

@@ -59,6 +59,21 @@ def fused_scan_agg(cols: dict, pred_fn, ids: jnp.ndarray,
     return sums, counts
 
 
+def fused_scan_shuffle(cols: dict, pred_fn, keys: jnp.ndarray,
+                       num_parts: int):
+    """Predicate -> packed bitmap -> hash partition in one jnp expression:
+    (words (R/32,) u32, pids (R,) i32, surviving-rows hist (P,) i32).
+    R % 32 == 0; pred_fn=None means all rows survive."""
+    keep = (pred_fn(cols) if pred_fn is not None
+            else jnp.ones(keys.shape, bool))
+    words = pack_bitmap(keep)
+    h = keys.astype(jnp.uint32) * KNUTH
+    pid = ((h >> jnp.uint32(16)) % jnp.uint32(num_parts)).astype(jnp.int32)
+    onehot = pid[:, None] == jnp.arange(num_parts)[None, :]
+    hist = (onehot & keep[:, None]).sum(axis=0, dtype=jnp.int32)
+    return words, pid, hist
+
+
 def hash_partition(keys: jnp.ndarray, num_parts: int, block: int = 8192):
     """Knuth multiplicative hash -> (pids (R,) int32, hist (R/block, P))."""
     h = keys.astype(jnp.uint32) * KNUTH

@@ -17,17 +17,30 @@ except ImportError:  # optional dependency — see pyproject.toml [test]
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.bitmap import (CacheState, combine_bitmaps, rewrite_all,
-                               split_predicate, storage_side_bitmap)
-from repro.core.shuffle import shuffle_at_compute, shuffle_at_storage
+from repro.core.bitmap import (CacheState, combine_bitmaps,
+                               compute_side_apply_batched, rewrite_all,
+                               split_predicate, storage_side_bitmap,
+                               storage_side_bitmap_batched)
+from repro.core.plan import PushPlan, execute_push_plan
+from repro.core.shuffle import (apply_position_vector, shuffle_at_compute,
+                                shuffle_at_storage, shuffle_at_storage_batched)
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.queryproc import expressions as ex
 from repro.queryproc import operators as np_ops
 from repro.queryproc import queries as Q
 from repro.queryproc import tpch
 from repro.queryproc.expressions import Col
+from repro.queryproc.table import ColumnTable
 
 CAT = tpch.build_catalog(sf=1.0, num_nodes=4, rows_per_partition=4_000)
+
+
+def _tables_identical(a: ColumnTable, b: ColumnTable, ctx=""):
+    assert a.columns == b.columns, (ctx, a.columns, b.columns)
+    for c in a.columns:
+        assert a.cols[c].dtype == b.cols[c].dtype, (ctx, c)
+        assert np.array_equal(a.cols[c], b.cols[c], equal_nan=True), (ctx, c)
 
 
 # ------------------------------------------------------ selection bitmap
@@ -138,6 +151,96 @@ def test_shuffle_placement_equivalence(table, key):
     assert total == len(CAT.scan_table(table))
 
 
+@pytest.mark.parametrize("table,key", [("lineitem", "l_orderkey"),
+                                       ("orders", "o_custkey")])
+def test_shuffle_at_storage_batched_byte_identical(table, key):
+    """The batch executor's shuffle aux reproduces the per-partition
+    reference shuffle exactly, per target node."""
+    ref = shuffle_at_storage(CAT, table, key, 4)
+    bat = shuffle_at_storage_batched(CAT, table, key, 4)
+    for r, b in zip(ref, bat):
+        _tables_identical(r, b, (table, key))
+
+
+def test_storage_side_bitmap_batched_byte_identical():
+    """Fig 3 batched: per-partition packed bitmaps + filtered uncached
+    columns match the per-partition reference helper."""
+    parts = [p.data for p in CAT.partitions_of("lineitem")]
+    pred = (Col("l_quantity") <= 25) & (Col("l_shipmode").isin((0, 1)))
+    out_cols = ["l_orderkey", "l_extendedprice"]
+    words_b, tabs_b = storage_side_bitmap_batched(parts, pred, out_cols)
+    for p, wb, tb in zip(parts, words_b, tabs_b):
+        w, f = storage_side_bitmap(p, pred, out_cols)
+        np.testing.assert_array_equal(w, wb)
+        _tables_identical(f, tb, "fig3")
+
+
+def test_compute_side_apply_batched_byte_identical():
+    """Fig 4 batched: compute-built bitmaps applied to every partition in
+    one pass match the per-partition apply_bitmap reference."""
+    parts = [p.data for p in CAT.partitions_of("lineitem")]
+    pred = Col("l_quantity") <= 30
+    out_cols = ("l_orderkey", "l_extendedprice")
+    bitmaps = [np_ops.selection_bitmap(p, pred) for p in parts]
+    aplan = PushPlan("lineitem", out_cols, apply_bitmap=True)
+    got = compute_side_apply_batched(parts, bitmaps, out_cols)
+    for p, w, g in zip(parts, bitmaps, got):
+        ref, _ = execute_push_plan(aplan, p, bitmap=w)
+        _tables_identical(ref, g, "fig4")
+
+
+# ------------------------------------------ properties: pack/ship/apply
+def _check_bitmap_roundtrip(mask):
+    """pack -> ship -> apply == the boolean mask, any length/alignment."""
+    words = np_ops.pack_bitmap(mask)
+    np.testing.assert_array_equal(np_ops.unpack_bitmap(words, len(mask)),
+                                  mask)
+    t = ColumnTable({"v": np.arange(len(mask), dtype=np.int64)})
+    _tables_identical(np_ops.apply_bitmap(t, words), t.filter(mask))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10**6), st.integers(1, 3000))
+    @settings(max_examples=25, deadline=None)
+    def test_bitmap_roundtrip_property(seed, n):
+        rng = np.random.default_rng(seed)
+        _check_bitmap_roundtrip(rng.random(n) < rng.random())
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 517, 2000])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bitmap_roundtrip_deterministic(n, seed):
+    rng = np.random.default_rng(seed)
+    _check_bitmap_roundtrip(rng.random(n) < 0.4)
+
+
+def _check_position_vector_equivalence(seed, n_rows, n_targets):
+    """Routing cached columns with the position vector lands every row on
+    the same target as the storage-side hash partition (§4.2 interop)."""
+    rng = np.random.default_rng(seed)
+    t = ColumnTable({"k": rng.integers(0, 1 << 31, n_rows).astype(np.int64),
+                     "v": rng.normal(size=n_rows)})
+    pv = np_ops.position_vector(t, "k", n_targets)
+    via_pv = apply_position_vector(t, pv, n_targets)
+    via_hash = np_ops.shuffle_partition(t, "k", n_targets)
+    assert sum(len(p) for p in via_pv) == n_rows
+    for a, b in zip(via_pv, via_hash):
+        _tables_identical(a, b, (seed, n_targets))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10**6), st.integers(0, 2000), st.integers(1, 16))
+    @settings(max_examples=25, deadline=None)
+    def test_position_vector_equivalence_property(seed, n_rows, n_targets):
+        _check_position_vector_equivalence(seed, n_rows, n_targets)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n_targets", [1, 4, 7])
+def test_position_vector_equivalence_deterministic(seed, n_targets):
+    _check_position_vector_equivalence(seed, 500 + 37 * seed, n_targets)
+
+
 def test_shuffle_kernel_matches_engine():
     keys = CAT.partitions_of("lineitem")[0].data.cols["l_orderkey"]
     pids, hist = kops.hash_partition(jnp.asarray(keys), 4)
@@ -150,3 +253,24 @@ def test_position_vector_bits():
     pv = np_ops.position_vector(CAT.partitions_of("lineitem")[0].data,
                                 "l_orderkey", 4)
     assert pv.max() < 4 and pv.min() >= 0  # log2(4)=2 bits/row suffice
+
+
+def test_fused_scan_shuffle_kernel_matches_engine():
+    """The fused predicate -> bitmap-pack -> hash-partition kernel computes
+    exactly what the numpy batch executor's aux emission computes."""
+    part = CAT.partitions_of("lineitem")[0].data
+    # f32-exact operands: quantities are small integers, shipmode is int
+    pred = (Col("l_quantity") <= 25) & (Col("l_shipmode").isin((0, 1)))
+    keys = part.cols["l_orderkey"]
+    cols = {"l_quantity": jnp.asarray(part.cols["l_quantity"].astype(
+        np.float32)), "l_shipmode": jnp.asarray(part.cols["l_shipmode"])}
+    words, pids, hist = kops.fused_scan_shuffle(
+        cols, kops.compile_predicate(pred), jnp.asarray(keys), 4,
+        block=1024)
+    mask = ex.evaluate(pred, part)
+    want_pid = np_ops.hash_partition_ids(keys, 4)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np_ops.pack_bitmap(mask))
+    np.testing.assert_array_equal(np.asarray(pids), want_pid)
+    np.testing.assert_array_equal(
+        np.asarray(hist), np.bincount(want_pid[mask], minlength=4))

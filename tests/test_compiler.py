@@ -331,3 +331,27 @@ def test_shared_pushability_rule_matches_splitter():
                 # rejected: an identical Filter must appear in the residual
                 assert any(repr(f.predicate) in p for p in residual_preds), \
                     (qid, table, f.predicate)
+
+
+# ------------------------------------------------ batchable frontier marks
+def test_split_marks_frontiers_batchable():
+    """Every split marks its frontiers with the stages the batch executor
+    fuses — shuffle-bearing branches carry the 'shuffle' stage (the §4.2
+    partition function runs inside the same fused pass, PR 3)."""
+    for qid in Q.QUERY_IDS:
+        cq = compile_query_detailed(qid)
+        assert set(cq.batchable) == set(cq.plans), qid
+        for table, stages in cq.batchable.items():
+            plan = cq.plans[table]
+            assert ("filter" in stages) == (plan.predicate is not None), \
+                (qid, table)
+            assert ("agg" in stages) == (plan.agg is not None), (qid, table)
+            assert ("shuffle" in stages) == (
+                table in cq.query.shuffle_keys), (qid, table)
+        # the shuffle-aware signature is a superset of the plain one
+        plain = cq.frontier_signature()
+        marked = cq.frontier_signature(with_shuffle=True)
+        for table in plain:
+            assert marked[table].startswith(plain[table]), (qid, table)
+            if table in cq.query.shuffle_keys:
+                assert marked[table].endswith("+shuffle"), (qid, table)

@@ -52,6 +52,124 @@ def test_merged_tables_byte_identical(qid):
         _check_batch_equals_reference(plan, parts)
 
 
+@pytest.mark.parametrize("threshold", [0.0, 1.5])
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_adaptive_filter_branches_byte_identical(qid, threshold):
+    """Both adaptive filter-stage branches (forced concat-everything at
+    threshold 0, forced gather-survivors at 1.5) produce the same bytes as
+    the reference — the branch choice is purely a performance decision."""
+    q = Q.build_query(qid)
+    for table, plan in q.plans.items():
+        parts = [p.data for p in CAT.partitions_of(table)]
+        ref = ColumnTable.concat(
+            [execute_push_plan(plan, p)[0] for p in parts])
+        bat = compile_push_plan(plan).execute_batch(parts,
+                                                    threshold=threshold)
+        assert_tables_identical(ref, bat, (qid, table, threshold))
+
+
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_batch_parts_byte_identical(qid):
+    """execute_batch_parts splits the fused pass back into per-partition
+    tables identical to each per-partition reference result."""
+    q = Q.build_query(qid)
+    for table, plan in q.plans.items():
+        parts = [p.data for p in CAT.partitions_of(table)]
+        got, aux = compile_push_plan(plan).execute_batch_parts(parts)
+        for p, g, a in zip(parts, got, aux):
+            ref, ref_aux = execute_push_plan(plan, p)
+            assert_tables_identical(ref, g, (qid, table))
+            assert ref_aux == a == {}
+
+
+# ------------------------------------------- aux outputs: bitmap, shuffle
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_bitmap_only_batch_byte_identical(qid):
+    """The §4.2 bitmap-emission path: every predicate-bearing plan's
+    bitmap_only variant produces per-partition packed bitmaps and filtered
+    tables identical to the per-partition reference."""
+    import dataclasses
+    q = Q.build_query(qid)
+    checked = 0
+    for table, plan in q.plans.items():
+        if plan.predicate is None or plan.apply_bitmap:
+            continue
+        bplan = dataclasses.replace(plan, bitmap_only=True)
+        parts = [p.data for p in CAT.partitions_of(table)]
+        got, aux = compile_push_plan(bplan).execute_batch_parts(parts)
+        for p, g, a in zip(parts, got, aux):
+            ref, ref_aux = execute_push_plan(bplan, p)
+            assert_tables_identical(ref, g, (qid, table))
+            np.testing.assert_array_equal(ref_aux["bitmap"], a["bitmap"])
+        checked += 1
+    if qid != "Q18":      # Q18's fact predicate lives above the pushed agg
+        assert checked, f"{qid}: no predicate-bearing plan exercised"
+
+
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_shuffle_batch_byte_identical(qid):
+    """The §4.2 shuffle path: per-partition hash-partition slices and
+    position vectors from the batch pass match the reference exactly."""
+    import dataclasses
+    q = Q.build_query(qid)
+    for table, plan in q.plans.items():
+        # the shuffle key must be in the plan's output schema
+        key = q.shuffle_keys.get(table)
+        if key is None or key not in plan.columns:
+            key = next((c for c in plan.columns if c in
+                        CAT.partitions_of(table)[0].data.cols), None)
+        if key is None:
+            continue
+        splan = dataclasses.replace(plan, shuffle=(key, 4))
+        parts = [p.data for p in CAT.partitions_of(table)]
+        got, aux = compile_push_plan(splan).execute_batch_parts(parts)
+        for p, g, a in zip(parts, got, aux):
+            ref, ref_aux = execute_push_plan(splan, p)
+            assert_tables_identical(ref, g, (qid, table))
+            np.testing.assert_array_equal(ref_aux["position_vector"],
+                                          a["position_vector"])
+            assert len(ref_aux["shuffle_parts"]) == len(a["shuffle_parts"])
+            for rp, bp in zip(ref_aux["shuffle_parts"], a["shuffle_parts"]):
+                assert_tables_identical(rp, bp, (qid, table, key))
+
+
+def test_single_partition_execute_emits_aux():
+    """CompiledPushPlan.execute now serves aux-producing plans too."""
+    import dataclasses
+    plan = Q.build_query("Q3").plans["lineitem"]  # filter+derive, no agg
+    part = CAT.partitions_of("lineitem")[0].data
+    for variant in (dataclasses.replace(plan, bitmap_only=True),
+                    dataclasses.replace(plan, shuffle=("l_orderkey", 4))):
+        ref, ref_aux = execute_push_plan(variant, part)
+        got, aux = compile_push_plan(variant).execute(part)
+        assert_tables_identical(ref, got)
+        assert set(ref_aux) == set(aux)
+        for k in ref_aux:
+            if k == "shuffle_parts":
+                for rp, bp in zip(ref_aux[k], aux[k]):
+                    assert_tables_identical(rp, bp)
+            else:
+                np.testing.assert_array_equal(ref_aux[k], aux[k])
+
+
+def test_filter_decision_log():
+    """Each predicate-bearing batch records its adaptive branch choice."""
+    from repro.core import executor as X
+    q = Q.build_query("Q6")
+    reqs = engine.plan_requests(q, CAT)
+    X.reset_filter_decisions()
+    engine.execute_requests(reqs, filter_gather_threshold=1.5)
+    counts = X.filter_decision_counts()
+    assert counts["gather"] >= 1 and counts["concat"] == 0
+    X.reset_filter_decisions()
+    engine.execute_requests(reqs, filter_gather_threshold=0.0)
+    counts = X.filter_decision_counts()
+    assert counts["concat"] >= 1 and counts["gather"] == 0
+    d = X.FILTER_DECISIONS[0]
+    assert d["table"] == "lineitem" and 0.0 <= d["est_selectivity"] <= 1.0
+    X.reset_filter_decisions()
+
+
 @pytest.mark.parametrize("qid", Q.QUERY_IDS)
 @pytest.mark.parametrize("mode", engine.MODES)
 def test_end_to_end_byte_identical(qid, mode):

@@ -175,6 +175,68 @@ def test_hash_partition(n, parts):
                                   np.bincount(want, minlength=parts))
 
 
+# ----------------------------------------------------- fused_scan_shuffle
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("parts", [2, 4, 16])
+def test_fused_scan_shuffle_matches_numpy(n, parts):
+    """One fused pass == predicate_bitmap + hash_partition + a masked
+    histogram — the numpy storage path's bitmap/shuffle by-products."""
+    q, d = _col(n, np.float32), _col(n, np.float32)
+    keys = RNG.integers(0, 1 << 31, n).astype(np.int32)
+    expr = (Col("q") <= 24) & ((Col("d") > 5) | Col("q").eq(7))
+    cols = {"q": jnp.asarray(q), "d": jnp.asarray(d)}
+    words, pids, hist = ops.fused_scan_shuffle(
+        cols, ops.compile_predicate(expr), jnp.asarray(keys), parts,
+        block=1024)
+    mask = (q <= 24) & ((d > 5) | (q == 7))
+    want_pid = np_ops.hash_partition_ids(keys, parts)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np_ops.pack_bitmap(mask))
+    np.testing.assert_array_equal(np.asarray(pids), want_pid)
+    np.testing.assert_array_equal(
+        np.asarray(hist), np.bincount(want_pid[mask], minlength=parts))
+    # the unfused two-kernel pipeline agrees on the shared outputs
+    w2 = ops.predicate_bitmap(cols, ops.compile_predicate(expr), block=1024)
+    p2, _ = ops.hash_partition(jnp.asarray(keys), parts, block=1024)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(pids), np.asarray(p2))
+
+
+def test_fused_scan_shuffle_no_predicate():
+    keys = RNG.integers(0, 1 << 31, 3000).astype(np.int32)
+    words, pids, hist = ops.fused_scan_shuffle({}, None, jnp.asarray(keys),
+                                               5, block=1024)
+    want_pid = np_ops.hash_partition_ids(keys, 5)
+    np.testing.assert_array_equal(
+        np.asarray(words), np_ops.pack_bitmap(np.ones(3000, bool)))
+    np.testing.assert_array_equal(
+        np.asarray(hist), np.bincount(want_pid, minlength=5))
+
+
+def test_fused_scan_shuffle_ref_oracle():
+    q = _col(2048, np.float32)
+    keys = RNG.integers(0, 1 << 31, 2048).astype(np.int32)
+    pf = ops.compile_predicate(Col("q") < 30)
+    cols = {"q": jnp.asarray(q)}
+    w, p, h = ops.fused_scan_shuffle(cols, pf, jnp.asarray(keys), 9,
+                                     block=1024)
+    rw, rp, rh = ref.fused_scan_shuffle(cols, pf, jnp.asarray(keys), 9)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(rw))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(rh))
+
+
+def test_package_level_exports():
+    """kernels/__init__ re-exports the op-level entry points — callers use
+    one canonical import path instead of reaching into submodules."""
+    import repro.kernels as K
+    for name in ("predicate_bitmap", "bitmap_apply", "grouped_agg",
+                 "hash_partition", "fused_scan_agg", "fused_scan_shuffle",
+                 "compile_predicate", "predicate_bitmap_np"):
+        assert callable(getattr(K, name)), name
+        assert getattr(K, name) is getattr(ops, name), name
+
+
 # -------------------------------------------------------------- property
 def _check_pack_unpack(mask):
     words = np_ops.pack_bitmap(mask)
