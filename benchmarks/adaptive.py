@@ -5,14 +5,28 @@ power, all queries. Claims checked:
 - adaptive ~= min(baselines) everywhere (tolerance for Alg-1's greedy
   spill tail), and BEATS both around the break-even point,
 - break-even speedup up to ~1.9x (paper: 1.5x average, 1.9x best).
+
+``run_real`` additionally drives the decision-faithful runtime
+(``core.runtime.run_stream``) for REAL wall-clock: arrival-timed query
+waves execute their simulated decision split on per-node worker pools
+(pushdown storage-side batched, pushback shipped raw + replayed at the
+compute layer), adaptive vs the two forced baselines, asserting
+byte-identical results across modes every run. Headline lands in
+``BENCH_engine.json`` under the ``runtime`` suite.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core import engine
 from repro.core.simulator import (MODE_ADAPTIVE, MODE_EAGER, MODE_NO_PUSHDOWN)
 from repro.queryproc import queries as Q
 
 from benchmarks import common
+
+# the CI perf smoke shares this exact configuration
+REAL_QUICK_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q14"), "repeats": 3,
+                     "sf": 2.0}
 
 
 def run(powers=common.POWERS, qids=None) -> dict:
@@ -51,7 +65,126 @@ def run(powers=common.POWERS, qids=None) -> dict:
     out["breakeven_speedup_max"] = best_even
     out["breakeven_speedup_avg"] = sum(avg_even) / max(1, len(avg_even))
     out["num_breakeven_queries"] = len(avg_even)
+    # real wall-clock of the decision-faithful runtime (stream driver)
+    out["real"] = run_real(qids=qids if qids != Q.QUERY_IDS else None)
     return out
+
+
+# ---------------------------------------- real wall-clock (stream driver)
+REAL_MODES = (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE)
+
+
+def _stream(qids, wave_gap: float):
+    from repro.core import runtime
+    return [runtime.StreamQuery(Q.build_query(qid), arrival=i * wave_gap)
+            for i, qid in enumerate(qids)]
+
+
+def run_real(qids=None, repeats: int = 3, sf: float = None,
+             power: float = 0.375, wave_gap: float = 0.01) -> dict:
+    """REAL wall-clock A/B of the decision-faithful runtime: the same
+    arrival-timed multi-query stream under adaptive vs the two forced
+    baselines. ``storage_power`` shrinks the per-node pushdown worker pool
+    (multi-tenancy emulated with real threads, like the paper caps the
+    actor scheduler), so eager really queues behind the throttled storage
+    workers while no-pushdown really pays the ship-and-replay copies —
+    adaptive must not lose to the worse of the two. Byte-identity of every
+    query result across all three modes is asserted every repeat."""
+    from repro.core import runtime
+    from repro.core.cost import StorageResources
+
+    sf = sf or common.SF
+    cat = common.catalog(num_nodes=2, sf=sf)
+    qids = tuple(qids or Q.QUERY_IDS)
+    stream = _stream(qids, wave_gap)
+    res = StorageResources(storage_power=power)
+    repeats = max(1, repeats)
+    per_mode = {}
+    best: dict = {m: None for m in REAL_MODES}
+    runs: dict = {m: None for m in REAL_MODES}
+    reference = None                     # first measured run's results
+    # repeats interleave across modes (mode A, B, C, A, B, C, ...): a
+    # machine-load burst then hits every mode instead of biasing whichever
+    # mode owned that timing window; best-of per mode is the estimator
+    for rep in range(repeats + 1):       # first round is the warm-up
+        for mode in REAL_MODES:
+            r = runtime.run_stream(
+                stream, cat, engine.EngineConfig(res=res, mode=mode))
+            if rep == 0:
+                continue
+            # byte-identity asserted EVERY measured repeat, not only on
+            # the kept best-of run — a racy divergence anywhere aborts
+            if reference is None:
+                reference = r.results
+            else:
+                _assert_results_identical(reference, r.results, mode, qids)
+            if best[mode] is None or r.wall_clock < best[mode]:
+                best[mode], runs[mode] = r.wall_clock, r
+    for mode in REAL_MODES:
+        run = runs[mode]
+        per_mode[mode] = {
+            "wall_clock_ms": 1e3 * best[mode],
+            "n_pushdown": run.n_pushdown, "n_pushback": run.n_pushback,
+            "real_net_bytes": run.real_net_bytes,
+            # stream-relative completion times (arrival + queueing
+            # included) — queue position, NOT per-query execution cost
+            "finish_ms": {qid: 1e3 * d["finish_s"]
+                          for qid, d in run.per_query.items()},
+        }
+    t_ad = per_mode[MODE_ADAPTIVE]["wall_clock_ms"]
+    t_eg = per_mode[MODE_EAGER]["wall_clock_ms"]
+    t_np = per_mode[MODE_NO_PUSHDOWN]["wall_clock_ms"]
+    worse, best_base = max(t_eg, t_np), min(t_eg, t_np)
+    return {
+        "sf": sf, "power": power, "repeats": repeats, "wave_gap": wave_gap,
+        "qids": list(qids), "modes": per_mode,
+        "all_identical": True,           # asserted per repeat above
+        "t_adaptive_ms": t_ad, "t_eager_ms": t_eg, "t_no_pushdown_ms": t_np,
+        "worse_baseline_ms": worse, "best_baseline_ms": best_base,
+        # the monotone trajectory number: adaptive vs the worse baseline
+        "total_speedup": worse / max(t_ad, 1e-9),
+        # adaptive must not LOSE to the worse forced baseline (the paper's
+        # core adaptive claim, Fig 6); the 1.15 band absorbs thread-
+        # scheduling noise on 2-core shared runners — the recorded sf=4
+        # trajectory entries run well above 1.0
+        "adaptive_ok": t_ad <= 1.15 * worse,
+    }
+
+
+def _assert_results_identical(base, other, mode, qids):
+    for qid in qids:
+        a, b = base[qid], other[qid]
+        assert a.columns == b.columns, (mode, qid, a.columns, b.columns)
+        for c in a.columns:
+            assert a.cols[c].dtype == b.cols[c].dtype and np.array_equal(
+                a.cols[c], b.cols[c], equal_nan=True), (mode, qid, c)
+
+
+def render_real(out: dict) -> str:
+    rows = [[m, f'{out["modes"][m]["wall_clock_ms"]:.1f}',
+             out["modes"][m]["n_pushdown"], out["modes"][m]["n_pushback"],
+             out["modes"][m]["real_net_bytes"]] for m in REAL_MODES]
+    hdr = ["mode", "wall_ms", "pushdown", "pushback", "real net bytes"]
+    return common.table(rows, hdr) + (
+        f'\nreal runtime (sf={out["sf"]}, power={out["power"]}): adaptive '
+        f'{out["t_adaptive_ms"]:.1f}ms vs worse baseline '
+        f'{out["worse_baseline_ms"]:.1f}ms ({out["total_speedup"]:.2f}x), '
+        f'identical={out["all_identical"]}, ok={out["adaptive_ok"]}')
+
+
+def _real_headline(real: dict) -> dict:
+    return {"sf": real["sf"], "power": real["power"],
+            "total_speedup": round(real["total_speedup"], 3),
+            "t_adaptive_ms": round(real["t_adaptive_ms"], 2),
+            "worse_baseline_ms": round(real["worse_baseline_ms"], 2),
+            "best_baseline_ms": round(real["best_baseline_ms"], 2),
+            "adaptive_ok": real["adaptive_ok"],
+            "all_identical": real["all_identical"]}
+
+
+def update_root_bench(out: dict):
+    return common.update_root_bench_real("runtime", out,
+                                         headline_fn=_real_headline)
 
 
 def render(out: dict) -> str:
@@ -70,10 +203,26 @@ def render(out: dict) -> str:
     foot = (f'\nbreak-even speedup: avg {out["breakeven_speedup_avg"]:.2f}x, '
             f'max {out["breakeven_speedup_max"]:.2f}x '
             f'(paper Fig 6: avg 1.5x, best 1.9x)')
-    return common.table(rows, hdr) + foot
+    txt = common.table(rows, hdr) + foot
+    if "real" in out:
+        txt += "\n\n" + render_real(out["real"])
+    return txt
 
 
 if __name__ == "__main__":
-    o = run()
-    common.save_report("fig6_adaptive", o)
-    print(render(o))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real-quick", action="store_true",
+                    help="real wall-clock runtime only, 4 queries, sf=2 "
+                         "(CI smoke)")
+    args = ap.parse_args()
+    if args.real_quick:
+        o = run_real(**REAL_QUICK_KWARGS)
+        update_root_bench(o)
+        print(render_real(o))
+    else:
+        o = run()
+        common.save_report("fig6_adaptive", o)
+        update_root_bench(o)
+        print(render(o))

@@ -104,11 +104,14 @@ def real_headline(real: Optional[dict]) -> Optional[dict]:
     }
 
 
-def update_root_bench_real(suite: str, out: dict) -> Optional[Path]:
+def update_root_bench_real(suite: str, out: dict,
+                           headline_fn=None) -> Optional[Path]:
     """Record a run_real suite (or a run() dict carrying one under
-    ``"real"``) into the consolidated trajectory."""
+    ``"real"``) into the consolidated trajectory. ``headline_fn`` lets a
+    suite with a different headline shape (the runtime A/B) reuse the
+    same routing; it defaults to ``real_headline``."""
     real = out.get("real") if "real" in out else out
-    headline = real_headline(real)
+    headline = (headline_fn or real_headline)(real) if real else None
     if headline is None:
         return None
     return update_root_bench(suite, real, headline)

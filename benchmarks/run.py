@@ -46,6 +46,11 @@ def check_claims(results: dict) -> list:
               r["breakeven_speedup_avg"] >= 1.3)
         claim("Fig6: best break-even speedup >= 1.7x (paper 1.9x)",
               r["breakeven_speedup_max"] >= 1.7)
+        if "real" in r:
+            claim("Runtime: real split results byte-identical across modes",
+                  r["real"]["all_identical"])
+            claim("Runtime: real adaptive wall-clock >= worse forced "
+                  "baseline", r["real"]["adaptive_ok"])
     r = results.get("fig7_optimal_gap")
     if r:
         claim("Fig7: avg Eq6 admit-count gap <= 8% (paper 1-2%; residual "

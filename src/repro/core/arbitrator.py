@@ -22,6 +22,10 @@ from repro.core.cost import RequestCost, StorageResources
 
 PUSHDOWN, PUSHBACK = "pushdown", "pushback"
 
+# a live decision hook: called once per request the moment the Arbitrator
+# assigns it a path — the runtime uses it to route (and order) real work
+DecisionHook = Callable[[int, str], None]
+
 
 @dataclasses.dataclass
 class Pending:
@@ -33,10 +37,12 @@ class Pending:
 class Arbitrator:
     def __init__(self, res: StorageResources, pa_aware: bool = False,
                  forced_path: Optional[str] = None,
-                 backlog_guard: bool = True):
+                 backlog_guard: bool = True,
+                 on_decide: Optional[DecisionHook] = None):
         self.res = res
         self.pa_aware = pa_aware
         self.forced_path = forced_path  # "pushdown"/"pushback" for the baselines
+        self.on_decide = on_decide      # live callback: (req_id, path)
         # Alg 1 lines 7/10 assign to the SLOWER path whenever the faster
         # pool is full. Verbatim, that turns end-of-queue requests into
         # stragglers (the slower path outlives the fast pool's backlog).
@@ -87,15 +93,21 @@ class Arbitrator:
             return True
         return False
 
+    def _emit(self, assigned: List[Tuple[int, str]]) -> List[Tuple[int, str]]:
+        if self.on_decide is not None:
+            for rid, path in assigned:
+                self.on_decide(rid, path)
+        return assigned
+
     def drain(self) -> List[Tuple[int, str]]:
         """Assign queued requests to slots; returns [(req_id, path), ...]."""
         out: List[Tuple[int, str]] = []
         if self.forced_path is not None:
             while self.queue and self._try(self.forced_path):
                 out.append((self.queue.pop(0).req_id, self.forced_path))
-            return out
+            return self._emit(out)
         if self.pa_aware:
-            return self._drain_pa(out)
+            return self._emit(self._drain_pa(out))
         while self.queue:
             p = self.queue[0]
             t_pd = p.cost.t_pd(self.res, include_scan=False)
@@ -108,7 +120,7 @@ class Arbitrator:
                 out.append((self.queue.pop(0).req_id, second))
             else:
                 break  # both pools saturated (Algorithm 1 line 14)
-        return out
+        return self._emit(out)
 
     def _spill_ok(self, t_pd: float, t_pb: float, fast: str) -> bool:
         if not self.backlog_guard:

@@ -5,17 +5,19 @@ For one query the engine:
 1. plans per-partition pushdown requests (one per partition of every
    scanned table — the paper's request granularity),
 2. runs the Arbitrator + fluid simulator to obtain the pushdown/pushback
-   decisions and the simulated timeline (this is the paper's measured
-   quantity — the container has no real 16-core storage node),
-3. *really executes* both paths (numpy storage operators; the pushed-back
-   portion uses the same operators at the compute layer — and optionally
-   the TPU Pallas kernels, validated in tests) and merges, so correctness
-   is independent of the scheduling mode — by default through the fused
-   batched executor (``core.executor``: compile-once plans, one vectorized
-   pass per table), with the seed's per-partition loop kept as the
-   ``executor="reference"`` oracle,
+   decisions and the simulated timeline (the timeline is the paper's
+   measured quantity — the container has no real 16-core storage node),
+3. *really executes* the decision split (``core.runtime``): pushdown
+   requests run storage-side through the fused batched executor
+   (``core.executor``; the seed's per-partition loop stays as the
+   ``executor="reference"`` oracle), pushed-back requests ship the raw
+   accessed-column projection and the compute layer replays the same
+   compiled plan — merged byte-identically for any decision vector, so
+   correctness is independent of the scheduling mode while the bytes
+   really flow where the Arbitrator sent them,
 4. charges the non-pushable portion (joins/final aggs) to the compute
-   layer's bandwidth.
+   layer's bandwidth, and reconciles real shipped bytes against the
+   simulator's ``net_bytes``.
 
 Modes: no_pushdown / eager / adaptive / adaptive_pa (§6.2 baselines).
 """
@@ -26,11 +28,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import optimum
+from repro.core import optimum, runtime
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN
 from repro.core.cost import RequestCost, StorageResources
-from repro.core.executor import compile_push_plan
-from repro.core.plan import PushPlan, actual_out_bytes, execute_push_plan
+from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
+                                 compile_push_plan)
+from repro.core.plan import PushPlan, execute_push_plan
 from repro.core.simulator import (MODE_ADAPTIVE, MODE_ADAPTIVE_PA, MODE_EAGER,
                                   MODE_NO_PUSHDOWN, SimRequest, SimResult,
                                   simulate)
@@ -39,10 +42,6 @@ from repro.queryproc.table import ColumnTable
 from repro.storage.catalog import Catalog, Partition
 
 MODES = (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE, MODE_ADAPTIVE_PA)
-
-
-EXECUTOR_BATCHED = "batched"      # compile-once plans, one pass per table
-EXECUTOR_REFERENCE = "reference"  # per-partition interpretive oracle
 
 
 @dataclasses.dataclass
@@ -78,9 +77,15 @@ class QueryRun:
     t_pushable: float
     t_nonpushable: float
     requests: List[PlannedRequest]
-    net_bytes: float
+    net_bytes: float            # simulated traffic (cost-model s_out/s_in)
     n_admitted: int
     n_pushed_back: int
+    # real-execution accounting (core.runtime): bytes that actually crossed
+    # the storage->compute boundary under the decision split, and the
+    # reconciliation against the simulated figure above
+    real_net_bytes: float = 0.0
+    net_bytes_recon: Optional[Dict] = None
+    outcomes: Optional[List[runtime.RequestOutcome]] = None
 
     @property
     def t_total(self) -> float:
@@ -107,34 +112,37 @@ def execute_requests(reqs: List[PlannedRequest],
                      executor: str = EXECUTOR_BATCHED,
                      filter_gather_threshold: Optional[float] = None
                      ) -> Dict[str, ColumnTable]:
-    """Run every pushable sub-plan (path-independent result) and merge.
+    """Run every pushable sub-plan storage-side and merge in request order.
 
     ``executor="batched"`` stacks all partitions sharing one plan and runs a
     single fused, vectorized pass per (table, plan); ``"reference"`` is the
     seed's per-partition interpretive loop (the correctness oracle). Both
-    return byte-identical merged tables (tests/test_executor.py) — with one
-    caveat: a hand-built request list interleaving *several distinct plans
-    for one table* merges group-by-group under "batched" (same rows, rows
-    ordered per plan group rather than per request)."""
+    return byte-identical merged tables for **any** request list
+    (tests/test_executor.py): a table whose requests interleave several
+    distinct plans merges its per-partition results back in original
+    request order via ``execute_batch_parts``."""
     if executor == EXECUTOR_REFERENCE:
         by_table: Dict[str, List[ColumnTable]] = {}
         for r in reqs:
             res, _aux = execute_push_plan(r.plan, r.part.data)
             by_table.setdefault(r.table, []).append(res)
         return {t: ColumnTable.concat(parts) for t, parts in by_table.items()}
-    groups: Dict[Tuple[str, int], List[PlannedRequest]] = {}
+    by_table: Dict[str, List[PlannedRequest]] = {}
     for r in reqs:
-        groups.setdefault((r.table, id(r.plan)), []).append(r)
-    by_table: Dict[str, List[ColumnTable]] = {}
-    for (table, _pid), rs in groups.items():
-        by_table.setdefault(table, []).append(
-            compile_push_plan(rs[0].plan).execute_batch(
+        by_table.setdefault(r.table, []).append(r)
+    if any(len({id(r.plan) for r in rs}) > 1 for rs in by_table.values()):
+        # multi-plan tables: the request-order reassembly already lives in
+        # the decision-split machinery — an empty decision vector routes
+        # every request storage-side (pushdown is the default)
+        return runtime.execute_split(reqs, {}, executor,
+                                     filter_gather_threshold).merged
+    # the common case: one plan per table — each table's requests form one
+    # batch in request order, so the fused merged output needs no
+    # reassembly
+    return {table: compile_push_plan(rs[0].plan).execute_batch(
                 [r.part.data for r in rs],
-                threshold=filter_gather_threshold))
-    # a table normally carries one plan (query.plans is table-keyed); with
-    # hand-built request lists carrying several, merge in group order
-    return {t: parts[0] if len(parts) == 1 else ColumnTable.concat(parts)
-            for t, parts in by_table.items()}
+                threshold=filter_gather_threshold)
+            for table, rs in by_table.items()}
 
 
 def nonpushable_time(merged: Dict[str, ColumnTable], cfg: EngineConfig) -> float:
@@ -145,22 +153,37 @@ def nonpushable_time(merged: Dict[str, ColumnTable], cfg: EngineConfig) -> float
     return b / (cfg.compute_bw * cfg.num_compute_nodes)
 
 
+def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
+                 cfg: EngineConfig, t_pushable: float, net_bytes: float
+                 ) -> QueryRun:
+    """Real execution routed by the simulator's decision vector
+    (``core.runtime.execute_split``), plus the net-bytes reconciliation."""
+    split = runtime.execute_split(reqs, sim.decisions(), cfg.executor,
+                                  cfg.filter_gather_threshold)
+    # the real split IS the simulated split — one decision vector, two uses
+    assert split.n_pushdown == sim.admitted(query.qid), \
+        (query.qid, split.n_pushdown, sim.admitted(query.qid))
+    result = query.compute(split.merged)
+    t_np = nonpushable_time(split.merged, cfg)
+    return QueryRun(
+        qid=query.qid, result=result, sim=sim,
+        t_pushable=t_pushable, t_nonpushable=t_np, requests=reqs,
+        net_bytes=net_bytes,
+        n_admitted=sim.admitted(query.qid),
+        n_pushed_back=sim.pushed_back_by_query.get(query.qid, 0),
+        real_net_bytes=split.real_net_bytes,
+        net_bytes_recon=runtime.reconcile_net_bytes(sim, reqs, split),
+        outcomes=split.outcomes)
+
+
 def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
               requests: Optional[List[PlannedRequest]] = None) -> QueryRun:
     reqs = requests if requests is not None else plan_requests(query, catalog)
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
                 for r in reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode)
-    merged = execute_requests(reqs, cfg.executor,
-                              cfg.filter_gather_threshold)
-    result = query.compute(merged)
-    t_np = nonpushable_time(merged, cfg)
-    return QueryRun(
-        qid=query.qid, result=result, sim=sim,
-        t_pushable=sim.makespan, t_nonpushable=t_np, requests=reqs,
-        net_bytes=sim.net_bytes,
-        n_admitted=sim.admitted(query.qid),
-        n_pushed_back=sim.pushed_back_by_query.get(query.qid, 0))
+    return _run_decided(query, reqs, sim, cfg,
+                        t_pushable=sim.makespan, net_bytes=sim.net_bytes)
 
 
 def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
@@ -176,16 +199,9 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     out: Dict[str, QueryRun] = {}
     for q in queries:
         reqs = [r for r in all_reqs if r.query_id == q.qid]
-        merged = execute_requests(reqs, cfg.executor,
-                                  cfg.filter_gather_threshold)
-        result = q.compute(merged)
-        t_np = nonpushable_time(merged, cfg)
-        out[q.qid] = QueryRun(
-            qid=q.qid, result=result, sim=sim,
-            t_pushable=sim.finish_by_query[q.qid], t_nonpushable=t_np,
-            requests=reqs, net_bytes=sim.net_bytes_by_query[q.qid],
-            n_admitted=sim.admitted(q.qid),
-            n_pushed_back=sim.pushed_back_by_query.get(q.qid, 0))
+        out[q.qid] = _run_decided(
+            q, reqs, sim, cfg, t_pushable=sim.finish_by_query[q.qid],
+            net_bytes=sim.net_bytes_by_query[q.qid])
     return out
 
 
@@ -205,13 +221,38 @@ def theoretical_split(query: Query, catalog: Catalog, res: StorageResources):
 
 
 def results_equal(a: ColumnTable, b: ColumnTable, tol: float = 1e-6) -> bool:
+    """Order-insensitive table equality: same *row multiset* up to float
+    tolerance.
+
+    Rows are aligned via one lexsort over ALL columns (exact columns
+    leading, float columns last so a sub-tolerance jitter cannot flip the
+    row order between the two tables), then compared row-wise. Sorting
+    each column independently — the previous implementation — accepts
+    tables with entirely different row sets whenever every column happens
+    to hold the same value multiset (e.g. rows {(1,2),(2,1)} vs
+    {(1,1),(2,2)}); tests/test_runtime.py pins the regression."""
     if set(a.columns) != set(b.columns) or len(a) != len(b):
         return False
-    for c in a.columns:
-        x, y = np.asarray(a.cols[c]), np.asarray(b.cols[c])
-        if x.dtype.kind in "fc" or y.dtype.kind in "fc":
-            if not np.allclose(np.sort(x), np.sort(y), rtol=tol, atol=tol):
+    if len(a) == 0:
+        return True
+    cols = sorted(a.columns)
+    is_float = {c: (np.asarray(a.cols[c]).dtype.kind in "fc"
+                    or np.asarray(b.cols[c]).dtype.kind in "fc")
+                for c in cols}
+    # exact columns first in sort priority (lexsort: last key is primary)
+    key_order = [c for c in cols if is_float[c]] + \
+                [c for c in cols if not is_float[c]]
+
+    def row_order(t: ColumnTable) -> np.ndarray:
+        return np.lexsort(tuple(np.asarray(t.cols[c]) for c in key_order))
+
+    ia, ib = row_order(a), row_order(b)
+    for c in cols:
+        x = np.asarray(a.cols[c])[ia]
+        y = np.asarray(b.cols[c])[ib]
+        if is_float[c]:
+            if not np.allclose(x, y, rtol=tol, atol=tol):
                 return False
-        elif not np.array_equal(np.sort(x), np.sort(y)):
+        elif not np.array_equal(x, y):
             return False
     return True

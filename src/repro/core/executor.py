@@ -76,6 +76,10 @@ from repro.queryproc import operators as ops
 from repro.queryproc.table import ColumnTable
 from repro.storage.catalog import Partition
 
+# real-execution path names (shared by engine and runtime)
+EXECUTOR_BATCHED = "batched"      # compile-once plans, one pass per table
+EXECUTOR_REFERENCE = "reference"  # per-partition interpretive oracle
+
 # --------------------------------------------- adaptive filter calibration
 DEFAULT_GATHER_THRESHOLD = 0.55  # fallback when calibration is disabled
 
@@ -189,6 +193,14 @@ class CompiledPushPlan:
     _agg_keys: Tuple[str, ...] = ()
 
     # ------------------------------------------------------------ execution
+    def raw_projection(self, data: ColumnTable) -> ColumnTable:
+        """The pushback payload: the raw accessed-column projection of one
+        partition — the paper's ``S_in``. Executing this plan over the
+        projection is byte-identical to executing it over the full
+        partition (output columns ⊆ accessed ∪ derived), which is what
+        lets the compute layer replay the same compiled plan."""
+        return data.select([c for c in self.accessed if c in data.cols])
+
     def execute(self, data: ColumnTable, bitmap: Optional[np.ndarray] = None
                 ) -> Tuple[ColumnTable, Dict]:
         """Single-partition fused path: the same ``(result, aux)`` as

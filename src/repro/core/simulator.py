@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN, Arbitrator
 from repro.core.cost import RequestCost, StorageResources
@@ -80,6 +80,11 @@ class SimResult:
             return sum(self.admitted_by_query.values())
         return self.admitted_by_query.get(qid, 0)
 
+    def decisions(self) -> Dict[int, str]:
+        """The per-request path decisions — the vector the decision-faithful
+        runtime (``core.runtime``) routes real execution by."""
+        return {rid: path for rid, (path, _s, _f) in self.per_request.items()}
+
 
 def _mk_task(req: SimRequest, path: str, now: float) -> TaskState:
     c = req.cost
@@ -101,9 +106,10 @@ class _ForcedArbitrator:
     """Oracle mode: per-request decisions fixed up front (global view,
     §3.1); two FIFO queues so a blocked path never blocks the other."""
 
-    def __init__(self, res: StorageResources, decisions):
+    def __init__(self, res: StorageResources, decisions, on_decide=None):
         self.res = res
         self.decisions = decisions
+        self.on_decide = on_decide
         self.q = {PUSHDOWN: [], PUSHBACK: []}
         self.free = {PUSHDOWN: res.pd_slots, PUSHBACK: res.pb_slots}
         self.admitted = 0
@@ -127,6 +133,9 @@ class _ForcedArbitrator:
                 else:
                     self.pushed_back += 1
                 out.append((self.q[path].pop(0), path))
+        if self.on_decide is not None:
+            for rid, path in out:
+                self.on_decide(rid, path)
         return out
 
 
@@ -134,15 +143,19 @@ def simulate(requests: List[SimRequest],
              res: StorageResources,
              mode: str = MODE_ADAPTIVE,
              num_nodes: Optional[int] = None,
-             decisions: Optional[Dict[int, str]] = None) -> SimResult:
+             decisions: Optional[Dict[int, str]] = None,
+             on_decision: Optional[Callable[[int, str], None]] = None
+             ) -> SimResult:
     nodes = sorted({r.node_id for r in requests}) if num_nodes is None \
         else list(range(num_nodes))
     forced = {MODE_NO_PUSHDOWN: PUSHBACK, MODE_EAGER: PUSHDOWN}.get(mode)
     if decisions is not None:
-        arbs = {n: _ForcedArbitrator(res, decisions) for n in nodes}
+        arbs = {n: _ForcedArbitrator(res, decisions, on_decide=on_decision)
+                for n in nodes}
     else:
         arbs = {n: Arbitrator(res, pa_aware=(mode == MODE_ADAPTIVE_PA),
-                              forced_path=forced) for n in nodes}
+                              forced_path=forced, on_decide=on_decision)
+                for n in nodes}
     by_id = {r.req_id: r for r in requests}
     pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))
     active: List[TaskState] = []

@@ -62,7 +62,16 @@ class ColumnTable:
         return sum((st[c].nbytes_stored if stored else st[c].nbytes_raw) for c in cols)
 
     def select(self, columns: Iterable[str]) -> "ColumnTable":
-        return ColumnTable({c: self.cols[c] for c in columns})
+        cols = list(columns)
+        # projection keeps rows intact: already-computed per-column stats
+        # stay valid, so propagate them (only when every column is covered
+        # — a partial stats dict would mask the lazy recompute)
+        st = self._stats
+        if st is not None and all(c in st for c in cols):
+            st = {c: st[c] for c in cols}
+        else:
+            st = None
+        return ColumnTable({c: self.cols[c] for c in cols}, stats=st)
 
     def take(self, idx: np.ndarray) -> "ColumnTable":
         return ColumnTable({k: v[idx] for k, v in self.cols.items()})
