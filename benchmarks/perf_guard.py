@@ -5,15 +5,26 @@ bitmap_compute / runtime) appends a headline entry per run. This guard
 fails when the newest entry of any suite regresses below the previous
 entry *at the same scale factor* (quick-mode sf=2 CI entries are never
 compared against full sf=4 local entries) beyond a wall-clock-noise
-tolerance, when any entry recorded a result divergence, or when the
+tolerance, when any entry recorded a result divergence, when the
 ``runtime`` suite's newest adaptive A/B lost to the worse forced baseline
-(``adaptive_ok``). Run after the quick benchmarks:
+(``adaptive_ok``), or when the ``correction`` suite's newest feedback
+loop failed to shrink the s_out estimate error (``converged``).
+
+A suite whose newest entry has **no comparable prior** (prior entries
+exist, but none at the same sf) is a hard failure, not a silent pass:
+before this guard grew teeth, a quick-mode run against a history recorded
+only at another sf compared nothing and still printed "trajectory
+monotone". Record a same-sf baseline first (the repo ships sf=2 entries
+for exactly this reason). A suite's *first-ever* entry is reported loudly
+but cannot fail — there is nothing it could have regressed from. Run
+after the quick benchmarks:
 
     PYTHONPATH=src python -m benchmarks.executor_bench --quick
     PYTHONPATH=src python -m benchmarks.shuffle --real-quick
     PYTHONPATH=src python -m benchmarks.bitmap_storage --real-quick
     PYTHONPATH=src python -m benchmarks.bitmap_compute --real-quick
     PYTHONPATH=src python -m benchmarks.adaptive --real-quick
+    PYTHONPATH=src python -m benchmarks.adaptive --correction-quick
     PYTHONPATH=src python -m benchmarks.perf_guard
 """
 from __future__ import annotations
@@ -22,7 +33,7 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import List
+from typing import List, Tuple
 
 from benchmarks import common
 
@@ -36,14 +47,16 @@ TOLERANCE = 0.85
 SUITE_TOLERANCE = {"runtime": 0.60}
 
 
-def check(doc: dict, tolerance: float = TOLERANCE) -> List[str]:
+def check(doc: dict, tolerance: float = TOLERANCE
+          ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notices). Failures exit nonzero; notices are
+    printed loudly but pass (a suite's first-ever entry)."""
     failures: List[str] = []
+    notices: List[str] = []
     for suite, entry in sorted(doc.items()):
-        hist = [h for h in entry.get("history", [])
-                if isinstance(h, dict) and "total_speedup" in h]
+        hist = [h for h in entry.get("history", []) if isinstance(h, dict)]
         if not hist:
             continue
-        tol = min(tolerance, SUITE_TOLERANCE.get(suite, tolerance))
         last = hist[-1]
         if not last.get("all_identical", True):
             failures.append(f"{suite}: newest entry diverged from the "
@@ -53,16 +66,37 @@ def check(doc: dict, tolerance: float = TOLERANCE) -> List[str]:
                 f"{suite}: newest adaptive A/B lost to the worse forced "
                 f"baseline ({last.get('t_adaptive_ms')}ms vs "
                 f"{last.get('worse_baseline_ms')}ms)")
-        prior = [h for h in hist[:-1] if h.get("sf") == last.get("sf")]
+        if last.get("converged") is False:
+            failures.append(
+                f"{suite}: newest correction loop did not shrink the "
+                f"s_out estimate error (err {last.get('err_first')} -> "
+                f"{last.get('err_last')})")
+        if "total_speedup" not in last:
+            continue  # not a wall-clock trajectory entry
+        tol = min(tolerance, SUITE_TOLERANCE.get(suite, tolerance))
+        speed_hist = [h for h in hist if "total_speedup" in h]
+        prior = [h for h in speed_hist[:-1] if h.get("sf") == last.get("sf")]
         if not prior:
-            continue  # first entry at this scale factor: nothing to guard
+            if len(speed_hist) == 1:
+                notices.append(
+                    f"{suite}: first recorded entry "
+                    f"(sf={last.get('sf')}) — nothing to guard yet")
+            else:
+                # history exists but at other scale factors only: the old
+                # guard silently compared nothing here — fail loudly
+                failures.append(
+                    f"{suite}: newest entry (sf={last.get('sf')}) has no "
+                    f"comparable prior — history holds sf="
+                    f"{sorted({h.get('sf') for h in speed_hist[:-1]})} "
+                    "only; record a same-sf baseline first")
+            continue
         prev = prior[-1]
         if last["total_speedup"] < tol * prev["total_speedup"]:
             failures.append(
                 f"{suite}: total_speedup {last['total_speedup']:.3f} fell "
                 f"below {tol:.2f} * previous "
                 f"{prev['total_speedup']:.3f} (sf={last.get('sf')})")
-    return failures
+    return failures, notices
 
 
 def main() -> int:
@@ -75,13 +109,15 @@ def main() -> int:
         print(f"perf_guard: {path} missing — run the benchmarks first")
         return 1
     doc = json.loads(path.read_text())
-    failures = check(doc, args.tolerance)
+    failures, notices = check(doc, args.tolerance)
     for suite, entry in sorted(doc.items()):
         hist = [h for h in entry.get("history", [])
                 if isinstance(h, dict) and "total_speedup" in h]
         traj = " -> ".join(f"{h['total_speedup']:.2f}x(sf={h.get('sf')})"
                            for h in hist)
-        print(f"{suite:>16}: {traj or '(no entries)'}")
+        print(f"{suite:>16}: {traj or '(no wall-clock entries)'}")
+    for n in notices:
+        print(f"\nNOTICE: {n}")
     if failures:
         print("\nPERF REGRESSION:")
         for f in failures:

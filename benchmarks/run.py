@@ -51,6 +51,17 @@ def check_claims(results: dict) -> list:
                   r["real"]["all_identical"])
             claim("Runtime: real adaptive wall-clock >= worse forced "
                   "baseline", r["real"]["adaptive_ok"])
+        if "correction" in r:
+            c = r["correction"]
+            claim("Correction: s_out estimate error shrinks across runs",
+                  c["converged"])
+            claim("Correction: cost-based cut ships >=20% fewer net bytes "
+                  "on a lowered query", c["net_saved_frac_max"] >= 0.2)
+            claim("Correction: corrected chooser flips >=1 estimation-bias "
+                  "cut toward measured truth",
+                  len(c["corrected_flips"]) >= 1)
+            claim("Correction: maximal/costed/corrected results identical",
+                  c["all_identical"])
     r = results.get("fig7_optimal_gap")
     if r:
         claim("Fig7: avg Eq6 admit-count gap <= 8% (paper 1-2%; residual "

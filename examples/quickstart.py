@@ -60,6 +60,36 @@ for sel in (0.2, 0.5, 0.9):
     print(f"  selectivity {sel}: {t_b/t_m:.2f}x faster, "
           f"{saved*100:.0f}% network saved (bitmaps are 1 bit/row)")
 
+# ------------------------- 2b. cost-based cuts + online s_out correction
+print("\n== Cost-calibrated frontier + online s_out correction ==")
+from repro.compiler import compile_query_costed  # noqa: E402
+from repro.core.cost import CardinalityCorrector  # noqa: E402
+
+# Q19's multi-table join predicate lowers onto both tables (the part
+# disjunction as a pushed conjunct, the l_quantity bound as the §4.2
+# verdict-bitmap exchange) — strictly fewer bytes, identical result.
+q19 = compile_query_costed("Q19", cat)
+rm = engine.run_query(compile_query("Q19"), cat, cfg)
+rc = engine.run_query(q19.query, cat, cfg)
+assert engine.results_equal(rm.result, rc.result)
+print(f"  Q19 costed frontier {q19.frontier_signature()}\n"
+      f"      net bytes {rm.real_net_bytes} -> {rc.real_net_bytes} "
+      f"({100 * (1 - rc.real_net_bytes / rm.real_net_bytes):.0f}% saved)")
+
+# Q4: the static model overestimates the derived column (8 B/row vs two
+# narrow dates), so the uncorrected chooser cuts at the scan. Running
+# the maximal plan with a corrector observes the real bytes — the
+# corrected chooser flips the cut back to the measured-truth frontier.
+corr = CardinalityCorrector()
+engine.run_query(compile_query("Q4"), cat,
+                 engine.EngineConfig(mode=MODE_EAGER, corrector=corr))
+before = compile_query_costed("Q4", cat).frontier_signature()["lineitem"]
+after = compile_query_costed("Q4", cat,
+                             corrector=corr).frontier_signature()["lineitem"]
+print(f"  Q4 lineitem cut, model-only -> measured-feedback: "
+      f"{before!r} -> {after!r}")
+assert before == "scan" and after == "scan+derive"
+
 # ---------------------------------------------- 3. shuffle pushdown
 print("\n== Distributed shuffle pushdown: 4 compute nodes ==")
 scfg = ShuffleConfig(num_compute_nodes=4)

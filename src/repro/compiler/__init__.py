@@ -18,9 +18,11 @@ joins and sorts are not* — from prose into executable code:
 
 New workloads are IR construction, not new closures — see docs/compiler.md.
 """
-from repro.compiler import analyzer, interpreter, ir, splitter  # noqa: F401
-from repro.compiler.compile import (CompiledQuery, QUERY_IDS,  # noqa: F401
-                                    compile_ir, compile_query,
+from repro.compiler import (analyzer, interpreter, ir,  # noqa: F401
+                            multitable, splitter)
+from repro.compiler.compile import (CompiledQuery, CutChoice,  # noqa: F401
+                                    QUERY_IDS, compile_ir, compile_query,
+                                    compile_query_costed,
                                     compile_query_detailed,
                                     substitute_fact_predicate)
 from repro.compiler.splitter import (CompileError,  # noqa: F401

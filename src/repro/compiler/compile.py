@@ -3,7 +3,21 @@
 ``compile_query(qid)`` is the drop-in replacement for the seed's hand-built
 ``queries.build_query``: it builds the query's logical-plan IR, runs the
 splitter, and packages the storage frontier (``PushPlan`` per table) plus a
-generic residual interpreter as the ``Query`` the engine executes.
+generic residual interpreter as the ``Query`` the engine executes. It
+always pushes the **maximal** amenable frontier.
+
+``compile_query_costed(qid, catalog, ...)`` is the cost-based front door:
+it enumerates every candidate cut point along each table's absorbable
+chain (``splitter.split(cuts=...)``), scores each candidate with the §3.3
+cost model over the catalog's real partitions (``core.cost.cut_score`` —
+predicted storage CPU + result-ship time; the k=0 candidate IS the
+raw-projection baseline), lowers sound multi-table predicates onto their
+tables (``compiler.multitable``, conjunct pushdown or the §4.2
+selection-bitmap exchange, whichever is cheaper), and picks the argmin
+per table. An optional ``CardinalityCorrector`` rescales every
+candidate's estimated ``s_out`` with measured-feedback ratios, so the
+chosen cut converges toward observed truth across runs
+(docs/compiler.md, docs/runtime.md).
 
 ``fact_selectivity`` reproduces the seed's evaluation knob (Figs 13/14) at
 the IR level: the fact table's pushable filters are replaced by
@@ -13,16 +27,36 @@ the residual untouched.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.compiler import analyzer, interpreter, ir, pushability, splitter, tpch_ir
+from repro.compiler import (analyzer, interpreter, ir, multitable,
+                            pushability, splitter, tpch_ir)
+from repro.core.cost import CardinalityCorrector, StorageResources, cut_score
+from repro.core.plan import PushPlan, plan_signature
 from repro.queryproc import expressions as ex
 from repro.queryproc.expressions import Col
 from repro.queryproc.queries import Query
 
 QUERY_IDS: List[str] = list(tpch_ir.QUERY_IDS)
+
+
+@dataclasses.dataclass
+class CutChoice:
+    """How the cost-based chooser cut one table's chain."""
+    table: str
+    chosen: int                      # absorbed-prefix length picked
+    maximal: int                     # the maximal frontier's prefix length
+    scores: Tuple[float, ...]        # per candidate k = 0..maximal
+    signatures: Tuple[str, ...]      # per candidate frontier signature
+    bitmap: bool = False             # §4.2 exchange lowered onto this table
+    lowered: Optional[str] = None    # repr of the implied predicate, if any
+
+    @property
+    def differs(self) -> bool:
+        return self.chosen != self.maximal or self.bitmap \
+            or self.lowered is not None
 
 
 @dataclasses.dataclass
@@ -36,6 +70,10 @@ class CompiledQuery:
     # per-table stages the fused batch executor runs in one pass —
     # shuffle/bitmap-bearing frontiers are marked batchable here
     batchable: Dict[str, tuple] = dataclasses.field(default_factory=dict)
+    # the split itself (candidate-cut enumeration, chosen/maximal cuts)
+    split: Optional[splitter.SplitResult] = None
+    # cost-based compilation only: per-table chooser report
+    cut_report: Optional[List[CutChoice]] = None
 
     @property
     def plans(self):
@@ -50,15 +88,21 @@ class CompiledQuery:
         return splitter.frontier_size(self.query.plans)
 
 
-def compile_ir(root: ir.Node, qid: str = "Q?") -> CompiledQuery:
-    """Compile an arbitrary logical plan (not just the TPC-H registry)."""
-    sp = splitter.split(root)
+def compile_ir(root: ir.Node, qid: str = "Q?",
+               cuts: Optional[Dict[str, int]] = None,
+               bitmap_tables: Optional[frozenset] = None) -> CompiledQuery:
+    """Compile an arbitrary logical plan (not just the TPC-H registry).
+    ``cuts``/``bitmap_tables`` force a specific frontier cut per table
+    (see ``splitter.split``) — the property harness uses this to execute
+    every enumerated candidate."""
+    sp = splitter.split(root, cuts=cuts, bitmap_tables=bitmap_tables)
     residual = sp.residual
     q = Query(qid=qid.upper(), plans=sp.plans,
               compute=lambda merged: interpreter.run(residual, merged),
               shuffle_keys=sp.shuffle_keys)
     return CompiledQuery(qid.upper(), root, residual, q,
-                         analyzer.analyze(root), batchable=sp.batchable)
+                         analyzer.analyze(root), batchable=sp.batchable,
+                         split=sp)
 
 
 def compile_query_detailed(qid: str,
@@ -75,6 +119,85 @@ def compile_query_detailed(qid: str,
 def compile_query(qid: str, fact_selectivity: Optional[float] = None) -> Query:
     """IR -> split -> engine-ready Query (the main entry point)."""
     return compile_query_detailed(qid, fact_selectivity).query
+
+
+# ----------------------------------------------- cost-based cut selection
+def _candidate_score(plan: PushPlan, table: str, catalog,
+                     res: StorageResources,
+                     corrector: Optional[CardinalityCorrector],
+                     qid: str) -> float:
+    """Predicted cost of pushing this candidate frontier: summed
+    ``cut_score`` (storage CPU + result-ship time) over the table's real
+    partitions, with the corrector's measured s_out ratio applied."""
+    from repro.core.executor import compile_push_plan  # deferred: cycle-free
+    cplan = compile_push_plan(plan)
+    sig = plan_signature(plan)
+    has_work = bool(plan.predicate is not None or plan.derive
+                    or plan.agg is not None or plan.top_k is not None)
+    total = 0.0
+    for part in catalog.partitions_of(table):
+        cost = cplan.estimate_cost(part)
+        if corrector is not None:
+            # exact-signature correction only: candidates of different
+            # signatures compete, so measured ratios must not leak across
+            cost = corrector.correct(qid, table, sig, cost, exact=True)
+        total += cut_score(cost, res, has_work)
+    return total
+
+
+def compile_query_costed(qid: str, catalog,
+                         res: Optional[StorageResources] = None,
+                         corrector: Optional[CardinalityCorrector] = None,
+                         fact_selectivity: Optional[float] = None,
+                         multitable_lowering: bool = True,
+                         compute_bw: float = multitable.DEFAULT_COMPUTE_BW
+                         ) -> CompiledQuery:
+    """Cost-based frontier selection: enumerate candidate cuts, score each
+    against the catalog, lower sound multi-table predicates, pick the
+    cheapest cut per table. Results are equivalent to ``compile_query``'s
+    maximal frontier for every choice (the residual replays whatever was
+    not pushed; tests/test_cost_split.py pins it), so this is purely a
+    traffic/CPU optimization — the kind the corrector's online feedback is
+    allowed to re-steer."""
+    res = res if res is not None else StorageResources()
+    root = tpch_ir.build_ir(qid)
+    if fact_selectivity is not None and "lineitem" in ir.base_tables(root):
+        thresh = float(np.ceil(50 * fact_selectivity))
+        root = substitute_fact_predicate(root, Col("l_quantity") <= thresh)
+    lowerings: List[multitable.Lowering] = []
+    if multitable_lowering:
+        root, lowerings = multitable.lower(root, catalog, res, compute_bw)
+    lowered_by_table = {lw.table: lw for lw in lowerings}
+    bitmap_tables = frozenset(t for t, lw in lowered_by_table.items()
+                              if lw.bitmap)
+
+    probe = splitter.split(root)      # maximal split: candidate enumeration
+    cuts: Dict[str, int] = {}
+    report: List[CutChoice] = []
+    for table in sorted(probe.candidates):
+        cands = probe.candidates[table]
+        scored = []
+        for plan in cands:
+            if (table in bitmap_tables and plan.predicate is not None
+                    and plan.agg is None and plan.top_k is None):
+                plan = dataclasses.replace(plan, bitmap_only=True)
+            scored.append((plan, _candidate_score(plan, table, catalog, res,
+                                                  corrector, qid)))
+        # ties prefer the deeper cut, so equal-cost data keeps the maximal
+        # frontier (and the goldens stay put)
+        best = min(range(len(scored)), key=lambda j: (scored[j][1], -j))
+        cuts[table] = best
+        lw = lowered_by_table.get(table)
+        report.append(CutChoice(
+            table=table, chosen=best, maximal=len(cands) - 1,
+            scores=tuple(s for _, s in scored),
+            signatures=tuple(plan_signature(p) for p, _ in scored),
+            bitmap=table in bitmap_tables,
+            lowered=repr(lw.predicate) if lw is not None else None))
+
+    cq = compile_ir(root, qid, cuts=cuts, bitmap_tables=bitmap_tables)
+    cq.cut_report = report
+    return cq
 
 
 # ----------------------------------------------- fact-selectivity rewrite

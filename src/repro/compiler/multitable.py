@@ -1,0 +1,220 @@
+"""Multi-table predicate lowering: implied per-table predicates + the
+§4.2 selection-bitmap exchange.
+
+A residual ``Filter`` sitting above the joins whose predicate spans
+several base tables (Q7's two-nation OR, Q19's brand/container/quantity
+OR-of-ANDs) cannot be pushed as-is — it is not partition-parallel over any
+single table. But each table's *implied* predicate can: the strongest
+single-table consequence of the original predicate (``And`` keeps the
+owned side, ``Or`` requires both branches to imply something). Rows a
+table drops under its implied predicate could never survive the original
+filter, and inner equi-joins / row-preserving operators keep the
+surviving rows' relative order — so inserting the implied filter directly
+above the table's ``Scan`` (where the splitter absorbs it) leaves the
+final query result **byte-identical** while strictly shrinking the bytes
+the table ships. A soundness walk guards the insertion: the path from the
+multi-table filter down to the scan must not cross an ``Aggregate``,
+``TopK``, ``PyOp``, a ``SemiJoin`` right side, a shared (DAG) subtree, or
+a ``Map`` that shadows a predicate column.
+
+Two lowering encodings per table, chosen by cost (the paper's §4.2
+design-space discussion):
+
+- **conjunct pushdown** — the implied predicate joins the table's pushed
+  filter stage; the compute layer re-evaluates the full multi-table
+  predicate over the (smaller) join output.
+- **bitmap exchange** (``PushPlan.bitmap_only``) — the storage node
+  additionally ships the packed predicate-verdict bitmap (1 bit/row), so
+  the compute side can combine per-table verdicts with cheap bitwise ops
+  (``core.bitmap.combine_bitmaps``) instead of re-reading this table's
+  predicate columns across the join fan-out. Worth its 1 bit/row exactly
+  when the saved re-evaluation outweighs the extra ship + combine
+  (:func:`exchange_pays`) — high-selectivity, few-column conjuncts (Q19's
+  ``l_quantity`` bound) qualify; highly selective dimension restrictions
+  (Q19's part disjunction, Q7's nation lists) do not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.compiler import ir
+from repro.core.cost import StorageResources
+from repro.queryproc import expressions as ex
+
+#: compute-node operator bandwidth the exchange scoring assumes when the
+#: caller does not pass the engine's (matches EngineConfig.compute_bw)
+DEFAULT_COMPUTE_BW = 2.4e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """One implied predicate lowered onto one table's frontier."""
+    table: str
+    predicate: ex.Expr          # implied single-table predicate
+    bitmap: bool                # §4.2 exchange encoding chosen?
+    est_selectivity: float      # of the implied predicate, table stats
+    source: str                 # repr of the multi-table predicate
+
+
+# ------------------------------------------------------------ implication
+def implied_predicate(expr: ex.Expr, owned: Set[str]) -> Optional[ex.Expr]:
+    """Strongest predicate over ``owned`` columns implied by ``expr``
+    (None when nothing is implied). ``And`` keeps whichever side implies;
+    ``Or`` weakens — both branches must imply, else nothing does. A
+    column-column compare within one table qualifies; across tables it
+    implies nothing."""
+    if isinstance(expr, ex.And):
+        left = implied_predicate(expr.left, owned)
+        right = implied_predicate(expr.right, owned)
+        if left is None:
+            return right
+        if right is None:
+            return left
+        return ex.And(left, right)
+    if isinstance(expr, ex.Or):
+        left = implied_predicate(expr.left, owned)
+        right = implied_predicate(expr.right, owned)
+        if left is None or right is None:
+            return None
+        return ex.Or(left, right)
+    cols = ex.columns_of(expr)
+    if cols and cols <= owned:
+        return expr
+    return None
+
+
+# --------------------------------------------------------- soundness walk
+def _parent_counts(root: ir.Node) -> Dict[int, int]:
+    counts: Dict[int, int] = {}
+    for node in ir.walk(root):
+        for child in node.inputs():
+            counts[id(child)] = counts.get(id(child), 0) + 1
+    return counts
+
+
+def _path_to_scan(node: ir.Node, table: str) -> Optional[List[ir.Node]]:
+    """Nodes from ``node`` down to ``Scan(table)`` when every step is
+    row-removal-safe; None otherwise. Aggregate/TopK (row counts feed the
+    result), PyOp (opaque) and a SemiJoin's right side (membership tests
+    invert under anti-joins) block the descent."""
+    if isinstance(node, ir.Scan):
+        return [node] if node.table == table else None
+    if isinstance(node, (ir.Aggregate, ir.TopK, ir.PyOp, ir.Merged)):
+        return None
+    if isinstance(node, ir.SemiJoin):
+        sub = _path_to_scan(node.left, table)
+        return [node] + sub if sub is not None else None
+    if isinstance(node, ir.Join):
+        for side in (node.left, node.right):
+            sub = _path_to_scan(side, table)
+            if sub is not None:
+                return [node] + sub
+        return None
+    if isinstance(node, ir.UNARY_TYPES):
+        sub = _path_to_scan(node.child, table)
+        return [node] + sub if sub is not None else None
+    return None
+
+
+def _path_sound(path: List[ir.Node], pred_cols: Set[str],
+                parents: Dict[int, int]) -> bool:
+    for node in path:
+        if parents.get(id(node), 0) > 1:
+            return False  # shared subtree: the other consumer sees fewer rows
+        if isinstance(node, ir.Map) and (
+                {n for n, _, _ in node.derives} & pred_cols):
+            return False  # derive shadows a predicate column
+    return True
+
+
+# ------------------------------------------------------- exchange scoring
+def exchange_pays(sel: float, n_pred_cols: int, res: StorageResources,
+                  compute_bw: float = DEFAULT_COMPUTE_BW) -> bool:
+    """Per-row economics of shipping the verdict bitmap (§4.2 exchange)
+    instead of having the compute layer re-evaluate this table's share of
+    the multi-table predicate:
+
+    - saved at compute: re-reading the ``n_pred_cols`` shipped predicate
+      columns over the surviving rows — ``sel * 8 * n_pred_cols`` bytes;
+    - paid: 1 bit/row across the per-stream network share plus the
+      bitwise combine at compute.
+    """
+    saved = sel * 8.0 * n_pred_cols / compute_bw
+    paid = 0.125 * (1.0 / res.stream_bw + 1.0 / compute_bw)
+    return saved > paid
+
+
+# ---------------------------------------------------------------- rewrite
+def _insert_filters(node: ir.Node, by_table: Dict[str, ex.Expr],
+                    memo: Dict[int, ir.Node]) -> ir.Node:
+    if id(node) in memo:
+        return memo[id(node)]
+    if isinstance(node, ir.Scan):
+        out: ir.Node = (ir.Filter(node, by_table[node.table])
+                        if node.table in by_table else node)
+    elif isinstance(node, (ir.Join, ir.SemiJoin)):
+        out = dataclasses.replace(
+            node, left=_insert_filters(node.left, by_table, memo),
+            right=_insert_filters(node.right, by_table, memo))
+    elif isinstance(node, ir.PyOp):
+        out = dataclasses.replace(node, children=tuple(
+            _insert_filters(c, by_table, memo) for c in node.children))
+    elif isinstance(node, ir.UNARY_TYPES):
+        out = ir.rebuild_unary(node,
+                               _insert_filters(node.child, by_table, memo))
+    else:
+        out = node
+    memo[id(node)] = out
+    return out
+
+
+def lower(root: ir.Node, catalog, res: StorageResources,
+          compute_bw: float = DEFAULT_COMPUTE_BW
+          ) -> Tuple[ir.Node, List[Lowering]]:
+    """Lower every sound multi-table predicate of ``root`` onto its
+    tables' frontiers. Returns the rewritten plan (implied filters
+    inserted directly above the scans, where the splitter absorbs them)
+    plus the per-table :class:`Lowering` records — tables whose record has
+    ``bitmap=True`` should split with ``bitmap_tables`` so their frontier
+    carries the §4.2 exchange."""
+    owned_by_table: Dict[str, Set[str]] = {
+        t: set(parts[0].data.columns) for t, parts in catalog.tables.items()
+        if parts}
+    owner: Dict[str, str] = {c: t for t, cols in owned_by_table.items()
+                             for c in cols}
+    parents = _parent_counts(root)
+
+    implied_by_table: Dict[str, ex.Expr] = {}
+    source_by_table: Dict[str, List[str]] = {}
+    for node in ir.walk(root):
+        if not isinstance(node, ir.Filter):
+            continue
+        pred_cols = ex.columns_of(node.predicate)
+        span = {owner[c] for c in pred_cols if c in owner}
+        if len(span) < 2:
+            continue
+        for table in sorted(span):
+            implied = implied_predicate(node.predicate, owned_by_table[table])
+            if implied is None:
+                continue
+            path = _path_to_scan(node.child, table)
+            if path is None or not _path_sound(path, pred_cols, parents):
+                continue
+            prev = implied_by_table.get(table)
+            implied_by_table[table] = (implied if prev is None
+                                       else ex.And(prev, implied))
+            source_by_table.setdefault(table, []).append(
+                repr(node.predicate))
+    if not implied_by_table:
+        return root, []
+
+    lowerings: List[Lowering] = []
+    for table, implied in sorted(implied_by_table.items()):
+        stats = catalog.scan_table(table).stats()
+        sel = ex.estimate_selectivity(implied, stats)
+        bitmap = exchange_pays(sel, len(ex.columns_of(implied)), res,
+                               compute_bw)
+        lowerings.append(Lowering(table, implied, bitmap, sel,
+                                  "; ".join(source_by_table[table])))
+    return _insert_filters(root, implied_by_table, {}), lowerings

@@ -32,7 +32,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.compiler import analyzer, ir, pushability
-from repro.core.plan import PushPlan, batchable_stages
+from repro.core.plan import PushPlan, batchable_stages, plan_signature
 from repro.queryproc import expressions as ex
 
 
@@ -52,36 +52,79 @@ class SplitResult:
     # assuming only scan->filter->agg chains batch
     batchable: Dict[str, Tuple[str, ...]] = dataclasses.field(
         default_factory=dict)
+    # candidate-cut enumeration: per table, the PushPlan for every cut
+    # point k = 0..max_cut along the absorbable chain prefix
+    # (candidates[t][k]; candidates[t][max_cut[t]] is the maximal
+    # frontier). ``cuts`` records where this split actually cut.
+    candidates: Dict[str, List[PushPlan]] = dataclasses.field(
+        default_factory=dict)
+    cuts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    max_cut: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
-def split(root: ir.Node) -> SplitResult:
-    plans: Dict[str, PushPlan] = {}
-    skeys: Dict[str, str] = {}
-    residual = _rec(root, plans, skeys, {})
-    batchable = {t: batchable_stages(p, skeys.get(t))
-                 for t, p in plans.items()}
-    return SplitResult(residual, plans, skeys, batchable)
+@dataclasses.dataclass
+class _SplitCtx:
+    """State threaded through one split walk."""
+    plans: Dict[str, PushPlan]
+    skeys: Dict[str, str]
+    cuts: Optional[Dict[str, int]]          # requested cut per table
+    bitmap_tables: frozenset                # lower these to bitmap_only
+    candidates: Dict[str, List[PushPlan]]
+    chosen: Dict[str, int]
+    max_cut: Dict[str, int]
+
+
+def split(root: ir.Node, cuts: Optional[Dict[str, int]] = None,
+          bitmap_tables: Optional[frozenset] = None) -> SplitResult:
+    """Cut the plan into storage frontier + residual.
+
+    By default every chain absorbs its **maximal** amenable prefix (the
+    seed behavior, unchanged). ``cuts`` selects a shallower cut per table:
+    ``cuts[table] = k`` absorbs only the first ``k`` absorbable operators
+    (k = 0 is the raw-projection baseline — ship the accessed columns, the
+    residual replays the whole chain). Any k is *correct* — the residual
+    re-runs everything above the cut — which is what lets
+    ``compile.compile_query_costed`` pick k by estimated cost, and the
+    property harness (tests/test_cost_split.py) execute random cuts.
+
+    ``bitmap_tables`` marks tables whose pushed predicate is lowered to
+    the §4.2 selection-bitmap exchange (``PushPlan.bitmap_only``): the
+    storage node ships the packed predicate-verdict bitmap alongside the
+    filtered columns, so the compute side can combine verdicts with
+    bitwise ops instead of re-evaluating its share of a multi-table
+    predicate (see compiler/multitable.py). Only applied to frontiers
+    without an absorbed aggregate/top-k.
+    """
+    ctx = _SplitCtx({}, {}, cuts, frozenset(bitmap_tables or ()), {}, {}, {})
+    residual = _rec(root, ctx, {})
+    if cuts:
+        unknown = set(cuts) - set(ctx.plans)
+        if unknown:
+            raise CompileError(f"cuts for unscanned tables: {sorted(unknown)}")
+    batchable = {t: batchable_stages(p, ctx.skeys.get(t))
+                 for t, p in ctx.plans.items()}
+    return SplitResult(residual, ctx.plans, ctx.skeys, batchable,
+                       ctx.candidates, ctx.chosen, ctx.max_cut)
 
 
 # ------------------------------------------------------------------ walk
-def _rec(node: ir.Node, plans: Dict[str, PushPlan], skeys: Dict[str, str],
-         memo: Dict[int, ir.Node]) -> ir.Node:
+def _rec(node: ir.Node, ctx: _SplitCtx, memo: Dict[int, ir.Node]) -> ir.Node:
     # id-keyed memo: shared subtrees (Q17 joins its own join output back)
     # split once and stay shared in the residual
     if id(node) in memo:
         return memo[id(node)]
     chain = _chain_to_scan(node)
     if chain is not None:
-        out = _lower_chain(chain, plans, skeys)
+        out = _lower_chain(chain, ctx)
     elif isinstance(node, (ir.Join, ir.SemiJoin)):
         out = dataclasses.replace(node,
-                                  left=_rec(node.left, plans, skeys, memo),
-                                  right=_rec(node.right, plans, skeys, memo))
+                                  left=_rec(node.left, ctx, memo),
+                                  right=_rec(node.right, ctx, memo))
     elif isinstance(node, ir.PyOp):
         out = dataclasses.replace(node, children=tuple(
-            _rec(c, plans, skeys, memo) for c in node.children))
+            _rec(c, ctx, memo) for c in node.children))
     elif isinstance(node, ir.UNARY_TYPES):
-        out = ir.rebuild_unary(node, _rec(node.child, plans, skeys, memo))
+        out = ir.rebuild_unary(node, _rec(node.child, ctx, memo))
     elif isinstance(node, ir.Merged):
         out = node
     else:
@@ -104,29 +147,29 @@ def _chain_to_scan(node: ir.Node) -> Optional[List[ir.Node]]:
 
 
 # ----------------------------------------------------------------- lower
-def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
-                 skeys: Dict[str, str]) -> ir.Node:
-    scan = chain[0]
-    assert isinstance(scan, ir.Scan)
-    table = scan.table
-    if table in plans:
-        raise CompileError(f"table {table!r} scanned more than once")
-
-    ops_chain: List[ir.Node] = []
-    for node in chain[1:]:
-        if isinstance(node, ir.Shuffle):  # marker: record + drop
-            skeys[table] = node.key
-        else:
-            ops_chain.append(node)
-
+@dataclasses.dataclass
+class _ChainState:
+    """Absorption state after the first k absorbable chain operators."""
     pred: Optional[ex.Expr] = None
-    derives: List[ir.DeriveSpec] = []
-    out_derived: List[str] = []  # derives not (yet) pruned by a Project
-    columns: Tuple[str, ...] = scan.columns
+    derives: Tuple[ir.DeriveSpec, ...] = ()
+    out_derived: Tuple[str, ...] = ()  # derives not (yet) pruned by Project
+    columns: Tuple[str, ...] = ()
     agg: Optional[Tuple[Tuple[str, ...], Tuple[ir.AggSpec, ...]]] = None
     topk: Optional[Tuple[str, int, bool]] = None
 
-    absorbed = 0
+
+def _absorption_states(scan: ir.Scan,
+                       ops_chain: List[ir.Node]) -> List[_ChainState]:
+    """One state per cut point k = 0..M along the absorbable prefix.
+
+    The step rules are the seed's absorption loop verbatim. Note the
+    invariant the enumeration leans on: an absorbed Aggregate/TopK is
+    always the *last* absorbed operator (everything after either breaks),
+    so every non-maximal state has ``agg is None and topk is None`` — a
+    shallow cut never needs partial-merge obligations, its residual simply
+    replays the original operators over the merged raw rows."""
+    states = [_ChainState(columns=scan.columns)]
+    st = states[0]
     for node in ops_chain:
         if not analyzer.classify(node).pushable:
             break
@@ -137,59 +180,170 @@ def _lower_chain(chain: List[ir.Node], plans: Dict[str, PushPlan],
             # two walks cannot drift
             if not pushability.filter_absorbable(node):
                 break
-            pred = (node.predicate if pred is None
-                    else ex.And(pred, node.predicate))
+            st = dataclasses.replace(
+                st, pred=(node.predicate if st.pred is None
+                          else ex.And(st.pred, node.predicate)))
         elif isinstance(node, ir.Map):
-            if agg or topk:
+            if st.agg or st.topk:
                 break
-            derives.extend(node.derives)
-            out_derived.extend(n for n, _, _ in node.derives)
+            st = dataclasses.replace(
+                st, derives=st.derives + tuple(node.derives),
+                out_derived=st.out_derived + tuple(
+                    n for n, _, _ in node.derives))
         elif isinstance(node, ir.Project):
-            if agg or topk:
+            if st.agg or st.topk:
                 break
             # an explicit projection decides the output schema — derives
             # below it that it dropped must not be re-added
-            columns = node.columns
-            out_derived = []
+            st = dataclasses.replace(st, columns=node.columns,
+                                     out_derived=())
         elif isinstance(node, ir.Aggregate):
-            if agg or topk:
+            if st.agg or st.topk:
                 break
-            agg = (node.keys, node.aggs)
+            st = dataclasses.replace(st, agg=(node.keys, node.aggs))
         elif isinstance(node, ir.TopK):
             # top-k over *partial* aggregates could drop the true winner;
             # only absorb when no aggregation was pushed below it
-            if agg or topk:
+            if st.agg or st.topk:
                 break
-            topk = (node.col, node.k, node.ascending)
+            cols = st.columns
             # the ordering column must ship — both the storage-side select
             # and the residual re-select need it in the output schema
-            if node.col not in columns and node.col not in out_derived:
-                columns = tuple(columns) + (node.col,)
+            if node.col not in cols and node.col not in st.out_derived:
+                cols = tuple(cols) + (node.col,)
+            st = dataclasses.replace(
+                st, topk=(node.col, node.k, node.ascending), columns=cols)
         else:
             break
-        absorbed += 1
+        states.append(st)
+    return states
 
-    if agg is not None:
-        out_columns = tuple(agg[0])
+
+def _needed_above(states: List[_ChainState], ops_chain: List[ir.Node],
+                  k: int, skey: Optional[str]) -> set:
+    """Base/derived column names a cut at k must ship so the residual can
+    replay ``ops_chain[k:M]`` and still feed everything above the chain.
+
+    Seeded with the *maximal* plan's output schema (whatever consumes the
+    chain under the maximal split consumes a subset of it), then walked
+    backward over the replayed operators: each op removes the names it
+    produces and adds the names it consumes."""
+    M = len(states) - 1
+    top = states[M]
+    if top.agg is not None:
+        keys, specs = top.agg
+        need = set(keys) | {out for out, _, _ in specs}
     else:
-        out_columns = tuple(columns) + tuple(
-            n for n in out_derived if n not in columns)
-    plans[table] = PushPlan(
-        table, out_columns, predicate=pred, derive=tuple(derives),
-        agg=(tuple(agg[0]), tuple(agg[1])) if agg is not None else None,
-        top_k=topk)
+        need = set(top.columns) | set(top.out_derived)
+    if skey is not None:
+        need.add(skey)
+    for node in reversed(ops_chain[k:M]):
+        if isinstance(node, ir.Filter):
+            need |= ex.columns_of(node.predicate)
+        elif isinstance(node, ir.Map):
+            need -= {n for n, _, _ in node.derives}
+            for _, incols, _ in node.derives:
+                need |= set(incols)
+        elif isinstance(node, ir.Aggregate):
+            need -= {out for out, _, _ in node.aggs}
+            need |= set(node.keys) | {c for _, _, c in node.aggs if c}
+        elif isinstance(node, ir.TopK):
+            need.add(node.col)
+        # Project: pure restriction — consumes nothing new, and anything
+        # needed above it already lies inside its output schema
+    return need
 
+
+def _maximal_out_schema(states: List[_ChainState]) -> Tuple[str, ...]:
+    """Output schema of the maximal-frontier plan — what everything above
+    the chain observes. Shallow cuts project their replayed chain back to
+    this, so the extra replay-input columns they ship can never leak into
+    the merged schema (and from there into a Join-rooted result)."""
+    top = states[-1]
+    if top.agg is not None:
+        keys, specs = top.agg
+        return tuple(keys) + tuple(out for out, _, _ in specs)
+    return tuple(top.columns) + tuple(
+        n for n in top.out_derived if n not in top.columns)
+
+
+def _plan_at(table: str, states: List[_ChainState],
+             ops_chain: List[ir.Node], k: int,
+             skey: Optional[str]) -> PushPlan:
+    st = states[k]
+    if st.agg is not None:
+        out_columns = tuple(st.agg[0])
+    else:
+        out_columns = tuple(st.columns) + tuple(
+            n for n in st.out_derived if n not in st.columns)
+        if k < len(states) - 1:
+            # shallow cut: additionally ship the inputs of the operators
+            # the residual will replay
+            need = _needed_above(states, ops_chain, k, skey)
+            out_columns = out_columns + tuple(
+                sorted(c for c in need if c not in out_columns))
+    return PushPlan(
+        table, out_columns, predicate=st.pred, derive=st.derives,
+        agg=(tuple(st.agg[0]), tuple(st.agg[1])) if st.agg is not None
+        else None,
+        top_k=st.topk)
+
+
+def _lower_chain(chain: List[ir.Node], ctx: _SplitCtx) -> ir.Node:
+    scan = chain[0]
+    assert isinstance(scan, ir.Scan)
+    table = scan.table
+    if table in ctx.plans:
+        raise CompileError(f"table {table!r} scanned more than once")
+
+    ops_chain: List[ir.Node] = []
+    for node in chain[1:]:
+        if isinstance(node, ir.Shuffle):  # marker: record + drop
+            ctx.skeys[table] = node.key
+        else:
+            ops_chain.append(node)
+
+    skey = ctx.skeys.get(table)
+    states = _absorption_states(scan, ops_chain)
+    max_k = len(states) - 1
+    k = max_k if ctx.cuts is None else ctx.cuts.get(table, max_k)
+    if not 0 <= k <= max_k:
+        raise CompileError(
+            f"cut {k} out of range for {table!r} (max {max_k})")
+
+    plan = _plan_at(table, states, ops_chain, k, skey)
+    if (table in ctx.bitmap_tables and plan.predicate is not None
+            and plan.agg is None and plan.top_k is None):
+        # §4.2 exchange: ship the packed predicate-verdict bitmap alongside
+        plan = dataclasses.replace(plan, bitmap_only=True)
+    ctx.plans[table] = plan
+    ctx.candidates[table] = [_plan_at(table, states, ops_chain, j, skey)
+                             for j in range(max_k + 1)]
+    ctx.chosen[table] = k
+    ctx.max_cut[table] = max_k
+
+    st = states[k]
     residual: ir.Node = ir.Merged(table)
-    if agg is not None:
-        keys, specs = agg
+    if st.agg is not None:
+        keys, specs = st.agg
         merge = tuple((out, analyzer.DECOMPOSABLE[fn], out)
                       for out, fn, _ in specs)
         residual = ir.Aggregate(residual, tuple(keys), merge)
-    if topk is not None:
-        col, k, asc = topk
-        residual = ir.TopK(residual, col, k, asc)
-    for node in ops_chain[absorbed:]:
-        residual = ir.rebuild_unary(node, residual)
+    if st.topk is not None:
+        col, kk, asc = st.topk
+        residual = ir.TopK(residual, col, kk, asc)
+    if k < max_k:
+        # shallow cut: replay the unabsorbed absorbable prefix, then
+        # project back to the maximal frontier's output schema so the
+        # extra replay-input columns the plan shipped stay chain-local
+        for node in ops_chain[k:max_k]:
+            residual = ir.rebuild_unary(node, residual)
+        residual = ir.Project(residual, _maximal_out_schema(states))
+        for node in ops_chain[max_k:]:
+            residual = ir.rebuild_unary(node, residual)
+    else:
+        for node in ops_chain[k:]:
+            residual = ir.rebuild_unary(node, residual)
     return residual
 
 
@@ -205,23 +359,9 @@ def frontier_signature(plans: Dict[str, PushPlan],
     split's ``shuffle_keys`` marks shuffle-bearing frontiers
     (``...+shuffle``) — the batch executor runs the partition function in
     the same fused pass as the rest of the chain."""
-    out = {}
-    for table, p in sorted(plans.items()):
-        stages = ["scan"]
-        if p.predicate is not None:
-            stages.append("filter")
-        if p.bitmap_only:
-            stages.append("bitmap")
-        if p.derive:
-            stages.append("derive")
-        if p.agg is not None:
-            stages.append("agg")
-        if p.top_k is not None:
-            stages.append("topk")
-        if p.shuffle is not None or (shuffle_keys and table in shuffle_keys):
-            stages.append("shuffle")
-        out[table] = "+".join(stages)
-    return out
+    return {table: plan_signature(
+                p, shuffle_keys.get(table) if shuffle_keys else None)
+            for table, p in sorted(plans.items())}
 
 
 def frontier_size(plans: Dict[str, PushPlan]) -> int:

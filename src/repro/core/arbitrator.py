@@ -12,6 +12,12 @@ slower; if neither pool has a slot, arbitration stops (both saturated).
 PA-aware mode (§3.4): the queue is kept sorted by PA = t_pb - t_pd;
 pushdown slots consume from the high-PA end, pushback slots from the
 low-PA end.
+
+Both modes decide from the ``RequestCost`` they are handed: under an
+active ``CardinalityCorrector`` (core.cost) the ``s_out`` inside has been
+rescaled by measured feedback before submission, so ``t_pd`` — and with
+it every decision and every PA ordering — converges toward observed
+bytes across repeated runs without any change here.
 """
 from __future__ import annotations
 

@@ -194,3 +194,19 @@ def combine_bitmaps(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     aa = np.zeros(n, np.uint32); aa[:len(a)] = a
     bb = np.zeros(n, np.uint32); bb[:len(b)] = b
     return aa & bb
+
+
+def merged_verdicts(bitmaps: List[np.ndarray],
+                    part_rows: List[int]) -> np.ndarray:
+    """Unpack the per-partition §4.2 verdict bitmaps a bitmap-lowered
+    frontier ships (``PushPlan.bitmap_only`` — see
+    ``compiler/multitable.py``) into one boolean vector over the merged
+    pre-filter row order. This is the compute layer's view of an
+    exchanged multi-table sub-predicate: instead of re-reading the
+    predicate columns across the join fan-out, it combines these words
+    with the other table's verdicts via ``combine_bitmaps``-style bitwise
+    ops. The exchange contract — each bitmap equals the pushed
+    predicate's mask over the raw partition — is pinned by
+    tests/test_cost_split.py."""
+    return np.concatenate([ops.unpack_bitmap(words, int(n))
+                           for words, n in zip(bitmaps, part_rows)])

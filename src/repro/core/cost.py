@@ -15,6 +15,9 @@ does by capping the actor-scheduler thread pool (§6.2).
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
+from typing import Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,3 +84,116 @@ class RequestCost:
     def pa(self, res: StorageResources) -> float:
         """Pushdown Amenability, Eq. 12 (scan cancels)."""
         return self.t_pb(res, False) - self.t_pd(res, False)
+
+    def with_s_out(self, s_out: int) -> "RequestCost":
+        return dataclasses.replace(self, s_out=int(max(64, s_out)))
+
+
+# ------------------------------------------------------ frontier-cut score
+def cut_score(cost: RequestCost, res: StorageResources,
+              has_operator_work: bool) -> float:
+    """Objective the cost-based frontier chooser minimizes per request:
+    predicted storage-side operator CPU plus the result-ship time
+    (``s_out`` over the per-stream share). The scan term is identical for
+    every candidate cut of one table (same accessed bytes leave the disk)
+    and cancels, exactly like Algorithm 1's decision comparison.
+
+    ``has_operator_work`` is False for the raw-projection baseline (a bare
+    ``scan+project`` cut): the storage node streams the accessed columns
+    without running any operator, so it is charged ship time only — that
+    is what makes pushing a partial aggregate over a high-NDV group key
+    (Q18-style: partials ~ input rows, CPU spent for no reduction) lose to
+    cutting at the scan."""
+    cpu = cost.t_compute(res) if has_operator_work else 0.0
+    return cpu + cost.s_out / res.stream_bw
+
+
+# ------------------------------------------------- online s_out correction
+class CardinalityCorrector:
+    """Online cardinality correction of the cost model's ``s_out``.
+
+    The reconciliation in ``core.runtime`` measures, per executed query,
+    the *actual* bytes every pushdown request shipped; this class turns
+    those observations into a multiplicative correction the planner
+    applies to subsequent estimates. State is an EWMA **in log space** of
+    ``log(real / estimated)`` keyed by ``(query, table, frontier
+    signature)`` — so a ratio learned for ``scan+agg`` on Q18's lineitem
+    never silently applies to the ``scan`` candidate of the same table —
+    with a ``(query, table)`` fallback for unseen signatures.
+
+    With a stationary workload the corrected-estimate error contracts
+    geometrically: after k observations the log-error is ``(1-alpha)^k``
+    of the initial one (tests/test_runtime.py pins the monotone decay).
+    Corrections are clamped to ``[1/clamp, clamp]`` so one degenerate
+    observation can never catapult the arbitration, and they only ever
+    rescale ``s_out`` — decisions may flip, result bytes cannot (the
+    decision-faithful runtime is byte-identical for any vector).
+
+    Consumers: ``engine.plan_requests`` rescales each request's cost (the
+    simulator and the Arbitrator then arbitrate over corrected costs), and
+    ``compile.compile_query_costed`` rescales candidate-cut scores, so the
+    frontier choice converges toward measured truth too. Thread-safe (the
+    stream driver observes from worker threads)."""
+
+    def __init__(self, alpha: float = 0.5, clamp: float = 32.0):
+        assert 0.0 < alpha <= 1.0
+        self.alpha = alpha
+        self.clamp = clamp
+        self._log: Dict[Tuple[str, str, Optional[str]], float] = {}
+        self._n: Dict[Tuple[str, str, Optional[str]], int] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- reads
+    def ratio(self, qid: str, table: str, sig: Optional[str] = None,
+              exact: bool = False) -> float:
+        """Correction multiplier for an s_out estimate (1.0 = no data).
+        ``exact=True`` disables the (query, table) fallback — the cut
+        chooser compares candidates of *different* signatures against each
+        other, so a ratio measured under one frontier must not leak onto
+        the others (the planner's per-request correction keeps the
+        fallback: there one table runs one plan)."""
+        with self._lock:
+            key = (qid, table, sig)
+            if key not in self._log and not exact:
+                key = (qid, table, None)
+            log_r = self._log.get(key)
+        if log_r is None:
+            return 1.0
+        return float(min(self.clamp, max(1.0 / self.clamp, math.exp(log_r))))
+
+    def correct(self, qid: str, table: str, sig: Optional[str],
+                cost: RequestCost, exact: bool = False) -> RequestCost:
+        r = self.ratio(qid, table, sig, exact=exact)
+        return cost if r == 1.0 else cost.with_s_out(round(cost.s_out * r))
+
+    def snapshot(self) -> Dict[str, float]:
+        """Learned ratios as readable strings (benchmarks/reporting) —
+        clamped exactly like ``ratio()``, so reports show the correction
+        that is actually applied."""
+        with self._lock:
+            return {"/".join(str(p) for p in key if p is not None):
+                    float(min(self.clamp, max(1.0 / self.clamp,
+                                              math.exp(v))))
+                    for key, v in self._log.items()}
+
+    # ------------------------------------------------------------ writes
+    def observe(self, qid: str, table: str, sig: Optional[str],
+                est_s_out: float, real_s_out: float) -> None:
+        """Feed one measured (estimate, actual) pushdown-byte pair.
+        ``est_s_out`` must be the *uncorrected* estimate — the EWMA state
+        tracks the model's raw bias, so repeated observation is idempotent
+        rather than compounding."""
+        if est_s_out <= 0 or real_s_out <= 0:
+            return
+        obs = math.log(real_s_out / est_s_out)
+        with self._lock:
+            for key in ((qid, table, sig), (qid, table, None)):
+                prev = self._log.get(key)
+                self._log[key] = obs if prev is None \
+                    else (1.0 - self.alpha) * prev + self.alpha * obs
+                self._n[key] = self._n.get(key, 0) + 1
+
+    @property
+    def n_observations(self) -> int:
+        with self._lock:
+            return sum(n for (q, t, s), n in self._n.items() if s is None)

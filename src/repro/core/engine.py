@@ -30,10 +30,11 @@ import numpy as np
 
 from repro.core import optimum, runtime
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN
-from repro.core.cost import RequestCost, StorageResources
+from repro.core.cost import (CardinalityCorrector, RequestCost,
+                             StorageResources)
 from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
                                  compile_push_plan)
-from repro.core.plan import PushPlan, execute_push_plan
+from repro.core.plan import PushPlan, execute_push_plan, plan_signature
 from repro.core.simulator import (MODE_ADAPTIVE, MODE_ADAPTIVE_PA, MODE_EAGER,
                                   MODE_NO_PUSHDOWN, SimRequest, SimResult,
                                   simulate)
@@ -57,6 +58,13 @@ class EngineConfig:
     # crossover (core.executor.FILTER_GATHER_THRESHOLD). Bytes identical
     # either way — this knob is purely a performance override.
     filter_gather_threshold: Optional[float] = None
+    # online s_out cardinality correction (core.cost.CardinalityCorrector):
+    # when set, plan_requests rescales every request's estimated s_out by
+    # the measured ratios and each executed run feeds its reconciliation
+    # back — repeated runs converge the cost model (and through it the
+    # Arbitrator's decisions) toward observed bytes. Purely an estimation
+    # knob: results are byte-identical with or without it.
+    corrector: Optional[CardinalityCorrector] = None
 
 
 @dataclasses.dataclass
@@ -66,7 +74,9 @@ class PlannedRequest:
     table: str
     part: Partition
     plan: PushPlan
-    cost: RequestCost
+    cost: RequestCost      # as arbitrated (corrector-rescaled when active)
+    s_out_raw: int = 0     # uncorrected s_out estimate — what the
+    #                        corrector's feedback is measured against
 
 
 @dataclasses.dataclass
@@ -92,7 +102,8 @@ class QueryRun:
         return self.t_pushable + self.t_nonpushable
 
 
-def plan_requests(query: Query, catalog: Catalog, start_id: int = 0
+def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
+                  corrector: Optional[CardinalityCorrector] = None
                   ) -> List[PlannedRequest]:
     out: List[PlannedRequest] = []
     rid = start_id
@@ -101,9 +112,14 @@ def plan_requests(query: Query, catalog: Catalog, start_id: int = 0
         # invariants (accessed columns, selectivity closure) are shared by
         # every partition instead of recomputed ~160 times
         cplan = compile_push_plan(plan)
+        sig = plan_signature(plan)
         for part in catalog.partitions_of(table):
+            cost = cplan.estimate_cost(part)
+            raw = cost.s_out
+            if corrector is not None:
+                cost = corrector.correct(query.qid, table, sig, cost)
             out.append(PlannedRequest(rid, query.qid, table, part, plan,
-                                      cplan.estimate_cost(part)))
+                                      cost, s_out_raw=raw))
             rid += 1
     return out
 
@@ -163,6 +179,10 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
     # the real split IS the simulated split — one decision vector, two uses
     assert split.n_pushdown == sim.admitted(query.qid), \
         (query.qid, split.n_pushdown, sim.admitted(query.qid))
+    if cfg.corrector is not None:
+        # close the loop: measured pushdown bytes correct future estimates
+        runtime.feed_corrector(cfg.corrector, query.qid, reqs,
+                               split.outcomes)
     result = query.compute(split.merged)
     t_np = nonpushable_time(split.merged, cfg)
     return QueryRun(
@@ -178,7 +198,8 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
 
 def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
               requests: Optional[List[PlannedRequest]] = None) -> QueryRun:
-    reqs = requests if requests is not None else plan_requests(query, catalog)
+    reqs = requests if requests is not None \
+        else plan_requests(query, catalog, corrector=cfg.corrector)
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
                 for r in reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode)
@@ -192,7 +213,8 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     All requests share the storage nodes' wait queues and slots."""
     all_reqs: List[PlannedRequest] = []
     for q in queries:
-        all_reqs.extend(plan_requests(q, catalog, start_id=len(all_reqs)))
+        all_reqs.extend(plan_requests(q, catalog, start_id=len(all_reqs),
+                                      corrector=cfg.corrector))
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, r.query_id, r.cost)
                 for r in all_reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode)
@@ -206,10 +228,23 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
 
 
 def compile_and_run(qid: str, catalog: Catalog, cfg: EngineConfig,
-                    fact_selectivity: Optional[float] = None) -> QueryRun:
+                    fact_selectivity: Optional[float] = None,
+                    cost_based: bool = False) -> QueryRun:
     """Compiler front door: logical-plan IR -> amenability split -> run.
-    Equivalent to ``run_query(compiler.compile_query(qid), ...)``."""
-    from repro.compiler import compile_query  # deferred: avoids cycle
+    Equivalent to ``run_query(compiler.compile_query(qid), ...)``.
+    ``cost_based=True`` routes through ``compile_query_costed`` instead:
+    the frontier cut is chosen by estimated cost over this catalog (and by
+    the config's corrector, when one is set) — results are identical
+    either way."""
+    # deferred imports: the compiler imports core.plan/core.cost
+    if cost_based:
+        from repro.compiler import compile_query_costed
+        cq = compile_query_costed(qid, catalog, res=cfg.res,
+                                  corrector=cfg.corrector,
+                                  fact_selectivity=fact_selectivity,
+                                  compute_bw=cfg.compute_bw)
+        return run_query(cq.query, catalog, cfg)
+    from repro.compiler import compile_query
     return run_query(compile_query(qid, fact_selectivity), catalog, cfg)
 
 

@@ -63,6 +63,29 @@ class PushPlan:
         return tuple(sorted(cols))
 
 
+def plan_signature(plan: PushPlan, shuffle_key: Optional[str] = None) -> str:
+    """Stage signature of one pushed frontier, e.g. ``scan+filter+agg``.
+    The compiler's ``frontier_signature`` is the per-table dict of these;
+    it also keys the online ``CardinalityCorrector`` (core.cost) — two
+    candidate cuts of the same table have different signatures, so a
+    measured ``s_out`` correction learned for one cut never silently
+    applies to another."""
+    stages = ["scan"]
+    if plan.predicate is not None:
+        stages.append("filter")
+    if plan.bitmap_only:
+        stages.append("bitmap")
+    if plan.derive:
+        stages.append("derive")
+    if plan.agg is not None:
+        stages.append("agg")
+    if plan.top_k is not None:
+        stages.append("topk")
+    if plan.shuffle is not None or shuffle_key is not None:
+        stages.append("shuffle")
+    return "+".join(stages)
+
+
 def batchable_stages(plan: PushPlan, shuffle_key: Optional[str] = None
                      ) -> Tuple[str, ...]:
     """The stages of this frontier the batch executor (``core.executor``)

@@ -47,9 +47,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+from repro.core.cost import CardinalityCorrector
 from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
                                  CompiledPushPlan, compile_push_plan)
-from repro.core.plan import execute_push_plan
+from repro.core.plan import execute_push_plan, plan_signature
 from repro.queryproc.table import ColumnTable
 
 
@@ -178,12 +179,28 @@ def reconcile_net_bytes(sim, reqs, split: SplitExecution) -> Dict:
     The pushback component must match exactly (both sides count the stored
     accessed-column bytes); the pushdown component differs by exactly the
     cost model's ``s_out`` cardinality-estimation error, surfaced as
-    ``s_out_estimate_ratio`` (sim / real)."""
+    ``s_out_estimate_ratio`` (sim / real — 1.0 means the estimate was
+    spot-on) plus a per-table breakdown the ``CardinalityCorrector``
+    learns from."""
     decisions = sim.decisions()
     sim_pd = sum(r.cost.s_out for r in reqs
                  if decisions.get(r.req_id, PUSHDOWN) == PUSHDOWN)
     sim_pb = sum(r.cost.s_in for r in reqs
                  if decisions.get(r.req_id, PUSHDOWN) == PUSHBACK)
+    by_table: Dict[str, Dict[str, float]] = {}
+    real_pd_by_id = {o.req_id: o.shipped_bytes for o in split.outcomes
+                     if o.path == PUSHDOWN}
+    for r in reqs:
+        if r.req_id not in real_pd_by_id:
+            continue
+        row = by_table.setdefault(r.table, {"sim_pushdown_bytes": 0,
+                                            "real_pushdown_bytes": 0})
+        row["sim_pushdown_bytes"] += r.cost.s_out
+        row["real_pushdown_bytes"] += real_pd_by_id[r.req_id]
+    for row in by_table.values():
+        row["s_out_estimate_ratio"] = (
+            row["sim_pushdown_bytes"] / row["real_pushdown_bytes"]
+            if row["real_pushdown_bytes"] else None)
     return {
         "sim_net_bytes": sim_pd + sim_pb,
         "real_net_bytes": split.real_net_bytes,
@@ -193,7 +210,28 @@ def reconcile_net_bytes(sim, reqs, split: SplitExecution) -> Dict:
         "real_pushback_bytes": split.pushback_bytes,
         "s_out_estimate_ratio": (sim_pd / split.pushdown_bytes
                                  if split.pushdown_bytes else None),
+        "by_table": by_table,
     }
+
+
+def feed_corrector(corrector: CardinalityCorrector, qid: str, reqs,
+                   outcomes: Sequence[RequestOutcome]) -> None:
+    """Feed one executed decision split back into the corrector: per
+    (table, frontier signature), the summed *uncorrected* ``s_out``
+    estimate of the pushdown requests against the bytes they actually
+    shipped. Pushback requests are skipped — their byte estimate (stored
+    ``s_in``) is exact by construction, there is nothing to learn."""
+    real_by_id = {o.req_id: o.shipped_bytes for o in outcomes
+                  if o.path == PUSHDOWN}
+    groups: Dict[Tuple[str, str], List] = {}
+    for r in reqs:
+        if r.req_id in real_by_id:
+            groups.setdefault((r.table, plan_signature(r.plan)),
+                              []).append(r)
+    for (table, sig), rs in groups.items():
+        est = sum(r.s_out_raw or r.cost.s_out for r in rs)
+        real = sum(real_by_id[r.req_id] for r in rs)
+        corrector.observe(qid, table, sig, est, real)
 
 
 # ------------------------------------------------- concurrent stream driver
@@ -265,7 +303,8 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
     reqs_by_key: Dict[str, List] = {}
     for key, sq in zip(keys, ordered):
         reqs = _engine.plan_requests(sq.query, catalog,
-                                     start_id=len(all_reqs))
+                                     start_id=len(all_reqs),
+                                     corrector=cfg.corrector)
         for r in reqs:
             r.query_id = key   # one sim/stream identity per stream entry
         reqs_by_key[key] = reqs
@@ -341,6 +380,7 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
 
     def finish_query(key: str, sq: StreamQuery, futs) -> Dict:
         per_req: Dict[int, ColumnTable] = {}
+        outcomes: List[RequestOutcome] = []
         n_pd = n_pb = 0
         pd_b = pb_b = 0
         for (sub, path, cplan), fut in futs:
@@ -348,10 +388,21 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
                 per_req[r.req_id] = res
                 if path == PUSHDOWN:
                     n_pd += 1
-                    pd_b += result_bytes(res, aux)
+                    b = result_bytes(res, aux)
+                    pd_b += b
                 else:
                     n_pb += 1
-                    pb_b += pushback_bytes(cplan, r.part.data)
+                    b = pushback_bytes(cplan, r.part.data)
+                    pb_b += b
+                outcomes.append(RequestOutcome(
+                    r.req_id, r.table, path, len(res), b,
+                    replayed=(path == PUSHBACK)))
+        if cfg.corrector is not None:
+            # per-stream-entry feedback: repeated streams converge the
+            # estimates (the key strips the '#n' repeat suffix — the
+            # correction belongs to the query, not the stream slot)
+            feed_corrector(cfg.corrector, sq.query.qid, reqs_by_key[key],
+                           outcomes)
         by_table: Dict[str, List[ColumnTable]] = {}
         for r in reqs_by_key[key]:
             by_table.setdefault(r.table, []).append(per_req[r.req_id])
@@ -361,10 +412,13 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
             return sq.query.compute(merged)
 
         result = on_core(merge_and_compute)
+        sim_pd = sum(r.cost.s_out for r in reqs_by_key[key]
+                     if decisions.get(r.req_id, PUSHDOWN) == PUSHDOWN)
         return {"result": result,
                 "finish_s": time.perf_counter() - t0,
                 "n_pushdown": n_pd, "n_pushback": n_pb,
                 "real_net_bytes": pd_b + pb_b,
+                "s_out_estimate_ratio": (sim_pd / pd_b if pd_b else None),
                 "sim_finish": sim.finish_by_query.get(key)}
 
     finishers: Dict[str, Future] = {}

@@ -21,6 +21,14 @@ Stage chains:
 
 The same engine serves all four execution modes (the two baselines force a
 path; adaptive modes delegate to the Arbitrator).
+
+The per-request ``RequestCost`` is consumed as handed in: when the engine
+runs with a ``CardinalityCorrector`` (core.cost), ``plan_requests`` has
+already rescaled each ``s_out`` by the measured-feedback ratio, so both
+the simulated timeline and the Arbitrator's decisions arbitrate over
+corrected estimates — the correction loop needs no simulator changes, by
+construction (tests/test_runtime.py pins that corrected runs stay
+byte-identical while the estimate error shrinks).
 """
 from __future__ import annotations
 

@@ -1,0 +1,109 @@
+"""benchmarks.perf_guard: the no-comparable-prior fix.
+
+The guard compares a suite's newest trajectory entry only against a prior
+entry at the *same scale factor*. Before the fix, a newest entry with no
+same-sf prior was silently skipped — CI could print "trajectory monotone"
+having compared nothing. Now: prior history at other sfs only -> hard
+failure; a suite's genuine first entry -> loud notice, no failure.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import perf_guard  # noqa: E402
+
+
+def _doc(history, suite="executor"):
+    return {suite: {"history": history}}
+
+
+def _entry(sf, speedup, **extra):
+    return {"sf": sf, "total_speedup": speedup, "all_identical": True,
+            **extra}
+
+
+def test_same_sf_regression_fails():
+    doc = _doc([_entry(2.0, 2.5), _entry(2.0, 1.0)])
+    failures, notices = perf_guard.check(doc)
+    assert len(failures) == 1 and "fell below" in failures[0]
+    assert notices == []
+
+
+def test_same_sf_within_tolerance_passes():
+    doc = _doc([_entry(2.0, 2.5), _entry(2.0, 2.4)])
+    failures, notices = perf_guard.check(doc)
+    assert failures == [] and notices == []
+
+
+def test_no_comparable_prior_fails_loudly():
+    """History exists — but only at another sf. The old guard silently
+    passed; now it must fail and name both scale factors."""
+    doc = _doc([_entry(4.0, 2.5), _entry(4.0, 2.6), _entry(2.0, 0.1)])
+    failures, _ = perf_guard.check(doc)
+    assert len(failures) == 1
+    assert "no comparable prior" in failures[0]
+    assert "sf=2.0" in failures[0] and "4.0" in failures[0]
+
+
+def test_first_ever_entry_is_notice_not_failure():
+    doc = _doc([_entry(2.0, 2.5)])
+    failures, notices = perf_guard.check(doc)
+    assert failures == []
+    assert len(notices) == 1 and "first recorded entry" in notices[0]
+
+
+def test_mixed_history_compares_same_sf_only():
+    """sf=4 noise must not shadow the same-sf comparison: the newest sf=2
+    entry compares against the previous sf=2 entry, skipping sf=4."""
+    doc = _doc([_entry(2.0, 2.0), _entry(4.0, 9.9), _entry(2.0, 1.95)])
+    failures, notices = perf_guard.check(doc)
+    assert failures == [] and notices == []
+    doc = _doc([_entry(2.0, 2.0), _entry(4.0, 9.9), _entry(2.0, 0.5)])
+    failures, _ = perf_guard.check(doc)
+    assert len(failures) == 1 and "fell below" in failures[0]
+
+
+def test_divergence_and_adaptive_loss_still_fail():
+    doc = _doc([_entry(2.0, 2.5),
+                dict(_entry(2.0, 2.6), all_identical=False)])
+    failures, _ = perf_guard.check(doc)
+    assert any("diverged" in f for f in failures)
+    doc = _doc([_entry(2.0, 1.2), dict(_entry(2.0, 1.2),
+                                       adaptive_ok=False,
+                                       t_adaptive_ms=900,
+                                       worse_baseline_ms=700)],
+               suite="runtime")
+    failures, _ = perf_guard.check(doc)
+    assert any("lost to the worse forced baseline" in f for f in failures)
+
+
+def test_correction_suite_convergence_flag_guarded():
+    """The correction suite has no wall-clock speedup; its invariant is
+    that the feedback loop shrank the estimate error."""
+    doc = _doc([{"sf": 2.0, "converged": False, "err_first": 0.2,
+                 "err_last": 0.4}], suite="correction")
+    failures, notices = perf_guard.check(doc)
+    assert len(failures) == 1 and "did not shrink" in failures[0]
+    doc = _doc([{"sf": 2.0, "converged": True, "err_first": 0.2,
+                 "err_last": 0.001}], suite="correction")
+    failures, notices = perf_guard.check(doc)
+    assert failures == [] and notices == []  # no speedup entry: no notice
+
+
+def test_runtime_suite_uses_collapse_tolerance():
+    # 1.2 -> 0.9 is within the runtime suite's 0.60 collapse-only band
+    doc = _doc([_entry(2.0, 1.2), _entry(2.0, 0.9)], suite="runtime")
+    failures, _ = perf_guard.check(doc)
+    assert failures == []
+    doc = _doc([_entry(2.0, 1.2), _entry(2.0, 0.5)], suite="runtime")
+    failures, _ = perf_guard.check(doc)
+    assert len(failures) == 1
+
+
+def test_empty_and_malformed_histories_pass():
+    failures, notices = perf_guard.check({"x": {"history": []},
+                                          "y": {}, "z": {"history": ["?"]}})
+    assert failures == [] and notices == []

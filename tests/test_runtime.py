@@ -275,6 +275,122 @@ def test_multi_plan_request_list_byte_identical():
     assert_tables_identical(ref["lineitem"], split.merged["lineitem"])
 
 
+# ------------------------------------- online s_out correction loop
+def _ratio_err(run):
+    import math
+    r = run.net_bytes_recon["s_out_estimate_ratio"]
+    return abs(math.log(r))
+
+
+def test_corrector_error_shrinks_monotonically():
+    """K repeated runs through a shared CardinalityCorrector: the
+    s_out_estimate_ratio error is non-increasing and collapses after the
+    first observation (stationary workload, seeded catalog — no
+    wall-clock dependence anywhere)."""
+    from repro.core.cost import CardinalityCorrector
+    corr = CardinalityCorrector()
+    cfg = engine.EngineConfig(mode="eager", corrector=corr)
+    for qid in ("Q1", "Q14", "Q18"):
+        errs = [_ratio_err(engine.run_query(Q.build_query(qid), CAT, cfg))
+                for _ in range(4)]
+        assert errs[0] > 0, (qid, errs)  # the model starts biased
+        for a, b in zip(errs, errs[1:]):
+            assert b <= a + 1e-12, (qid, errs)
+        assert errs[-1] <= 0.05 * errs[0] + 1e-12, (qid, errs)
+    assert corr.n_observations >= 12
+
+
+def test_corrector_ewma_decays_geometrically():
+    """Unit-level: with smoothing, a persistent bias is approached by a
+    (1 - alpha)^k factor per observation — strictly monotone decay."""
+    import math
+    from repro.core.cost import CardinalityCorrector
+    corr = CardinalityCorrector(alpha=0.5)
+    corr.observe("Q", "t", "scan", est_s_out=100.0, real_s_out=100.0)
+    errs = []
+    for _ in range(6):
+        # true ratio is 2.0; corrected estimate approaches it
+        errs.append(abs(math.log(2.0 * 100.0 /
+                                 (100.0 * corr.ratio("Q", "t", "scan")))))
+        corr.observe("Q", "t", "scan", 100.0, 200.0)
+    assert all(b < a for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.1 * errs[0]
+
+
+def test_corrector_never_flips_results():
+    """Corrections rescale estimates — decisions may move, bytes may
+    move, the result may not: byte-identity under correction on/off, all
+    modes."""
+    from repro.core.cost import CardinalityCorrector
+    corr = CardinalityCorrector()
+    warm = engine.EngineConfig(mode="eager", corrector=corr)
+    for _ in range(2):   # learn real ratios first
+        for qid in ("Q3", "Q14", "Q18"):
+            engine.run_query(Q.build_query(qid), CAT, warm)
+    for qid in ("Q3", "Q14", "Q18"):
+        for mode in engine.MODES:
+            plain = engine.run_query(Q.build_query(qid), CAT,
+                                     engine.EngineConfig(mode=mode))
+            corrected = engine.run_query(
+                Q.build_query(qid), CAT,
+                engine.EngineConfig(mode=mode, corrector=corr))
+            assert_tables_identical(plain.result, corrected.result,
+                                    (qid, mode))
+            # the correction really reached the arbitrated costs
+            if corrected.n_admitted:
+                assert corrected.net_bytes_recon["sim_pushdown_bytes"] \
+                    != plain.net_bytes_recon["sim_pushdown_bytes"] or \
+                    corr.ratio(qid, "lineitem") == 1.0, (qid, mode)
+
+
+def test_corrector_clamps_degenerate_observations():
+    from repro.core.cost import CardinalityCorrector
+    corr = CardinalityCorrector(clamp=32.0)
+    corr.observe("Q", "t", None, est_s_out=1.0, real_s_out=1e12)
+    assert corr.ratio("Q", "t") == 32.0
+    # the report shows the applied (clamped) correction, not the raw EWMA
+    assert all(v <= 32.0 for v in corr.snapshot().values())
+    corr2 = CardinalityCorrector()
+    corr2.observe("Q", "t", None, est_s_out=0.0, real_s_out=100.0)  # no-op
+    assert corr2.ratio("Q", "t") == 1.0
+
+
+def test_reconciliation_per_table_breakdown():
+    r = engine.run_query(Q.build_query("Q14"), CAT,
+                         engine.EngineConfig(mode="eager"))
+    by_table = r.net_bytes_recon["by_table"]
+    assert set(by_table) == {"lineitem", "part"}
+    for t, row in by_table.items():
+        assert row["real_pushdown_bytes"] > 0
+        assert row["s_out_estimate_ratio"] == pytest.approx(
+            row["sim_pushdown_bytes"] / row["real_pushdown_bytes"])
+    total = sum(row["real_pushdown_bytes"] for row in by_table.values())
+    assert total == r.net_bytes_recon["real_pushdown_bytes"]
+
+
+def test_stream_driver_feeds_corrector():
+    """Two identical streams through run_stream with a shared corrector:
+    the second stream's per-query estimate error shrinks, results stay
+    byte-identical."""
+    import math
+    from repro.core.cost import CardinalityCorrector
+    corr = CardinalityCorrector()
+    cfg = engine.EngineConfig(mode="eager", corrector=corr)
+    stream = [runtime.StreamQuery(Q.build_query(qid), arrival=i * 0.002)
+              for i, qid in enumerate(("Q1", "Q14"))]
+    first = runtime.run_stream(stream, CAT, cfg)
+    assert corr.n_observations > 0
+    second = runtime.run_stream(stream, CAT, cfg)
+    for qid in ("Q1", "Q14"):
+        assert_tables_identical(first.results[qid], second.results[qid], qid)
+        e1 = abs(math.log(first.per_query[qid]["s_out_estimate_ratio"]))
+        e2 = abs(math.log(second.per_query[qid]["s_out_estimate_ratio"]))
+        assert e2 <= e1 + 1e-12, (qid, e1, e2)
+    assert any(abs(math.log(
+        second.per_query[q]["s_out_estimate_ratio"])) < 1e-6
+        for q in ("Q1", "Q14"))
+
+
 # --------------------------------------------- results_equal regression
 def test_results_equal_rejects_different_row_sets():
     """Per-column independent sorting (the old implementation) declares
