@@ -176,6 +176,66 @@ def _assert_results_identical(base, other, mode, qids):
                 a.cols[c], b.cols[c], equal_nan=True), (mode, qid, c)
 
 
+# ------------------------------------ trace-enabled smoke (CI artifacts)
+TRACE_SMOKE_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q18"), "sf": 1.0}
+
+
+def run_trace_smoke(qids=None, sf: float = 1.0, power: float = 0.375,
+                    wave_gap: float = 0.01,
+                    out_dir: str = "reports/trace") -> dict:
+    """Trace-enabled CI smoke: one traced arrival-timed stream at sf=1.
+
+    Asserts the trace reconciles EXACTLY with the driver's accounting —
+    each ``query`` span's ``real_net_bytes`` equals ``per_query``'s, and
+    the ``storage_execute``/``compute_replay`` spans under it sum to the
+    same number — then writes the three exporter artifacts (JSONL, Chrome
+    ``trace_event`` loadable in chrome://tracing or Perfetto, terse
+    summary table) for CI upload."""
+    from pathlib import Path
+
+    from repro import obs
+    from repro.core import runtime
+    from repro.core.cost import StorageResources
+    from repro.obs import export as obs_export
+    from repro.queryproc import tpch
+
+    qids = tuple(qids or Q.QUERY_IDS)
+    cat = tpch.build_catalog(sf=sf, num_nodes=2, rows_per_partition=4_000)
+    stream = _stream(qids, wave_gap)
+    cfg = engine.EngineConfig(res=StorageResources(storage_power=power),
+                              mode=MODE_ADAPTIVE)
+    with obs.tracing() as tr:
+        run = runtime.run_stream(stream, cat, cfg)
+    spans = tr.snapshot()
+    (stream_span,) = [s for s in spans if s.name == "run_stream"]
+    assert stream_span.attrs["real_net_bytes"] == run.real_net_bytes
+    qspans = {s.attrs["qid"]: s for s in spans if s.name == "query"}
+    assert set(qspans) == set(run.per_query)
+    for key, sp in qspans.items():
+        want = run.per_query[key]["real_net_bytes"]
+        assert sp.attrs["real_net_bytes"] == want, key
+        got = sum(s.attrs["shipped_bytes"] for s in spans
+                  if s.parent == sp.sid
+                  and s.name in ("storage_execute", "compute_replay"))
+        assert got == want, (key, got, want)   # EXACT, not approximate
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    meta = {"sf": sf, "mode": MODE_ADAPTIVE, "power": power,
+            "qids": list(qids)}
+    paths = {
+        "jsonl": obs_export.to_jsonl(tr, out / "stream_trace.jsonl", meta),
+        "chrome": obs_export.to_chrome_trace(
+            tr, out / "stream_trace_chrome.json", meta),
+        "summary": str(out / "stream_trace_summary.txt"),
+    }
+    summary = obs_export.summary_table(tr)
+    Path(paths["summary"]).write_text(summary + "\n")
+    return {"sf": sf, "qids": list(qids), "n_spans": len(spans),
+            "real_net_bytes": run.real_net_bytes,
+            "reconciled_exactly": True, "artifacts": paths,
+            "summary": summary}
+
+
 # ------------------------------------ online-correction A/B (correction)
 def run_correction(qids=None, rounds: int = 4, sf: float = None,
                    power: float = 1.0) -> dict:
@@ -348,11 +408,21 @@ if __name__ == "__main__":
                          "(CI smoke)")
     ap.add_argument("--correction-quick", action="store_true",
                     help="online-correction A/B only, sf=2 (CI smoke)")
+    ap.add_argument("--trace-smoke", action="store_true",
+                    help="traced sf=1 stream with exact reconciliation; "
+                         "writes JSONL + Chrome trace + summary artifacts")
     args = ap.parse_args()
     if args.real_quick:
         o = run_real(**REAL_QUICK_KWARGS)
         update_root_bench(o)
         print(render_real(o))
+    elif args.trace_smoke:
+        o = run_trace_smoke(**TRACE_SMOKE_KWARGS)
+        print(o["summary"])
+        print(f"\n{o['n_spans']} spans, real net bytes "
+              f"{o['real_net_bytes']}, reconciled exactly; artifacts:")
+        for k, p in o["artifacts"].items():
+            print(f"  {k}: {p}")
     elif args.correction_quick:
         o = run_correction(**CORRECTION_QUICK_KWARGS)
         update_root_bench_correction(o)

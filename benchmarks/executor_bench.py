@@ -26,6 +26,7 @@ from repro.core import engine
 from repro.core import executor as executor_mod
 from repro.core.executor import compile_push_plan
 from repro.core.plan import estimate_cost
+from repro.obs import trace as obs_trace
 from repro.queryproc import queries as Q
 
 ROOT_BENCH = common.ROOT_BENCH
@@ -58,10 +59,12 @@ def run(qids=None, repeats: int = 5, sf: float = None) -> Dict:
         q = Q.build_query(qid)
         reqs = engine.plan_requests(q, cat)
         ref = engine.execute_requests(reqs, engine.EXECUTOR_REFERENCE)
-        executor_mod.reset_filter_decisions()
+        channel = obs_trace.filter_decision_channel()
+        channel.clear()
         bat = engine.execute_requests(reqs, engine.EXECUTOR_BATCHED)
         # which adaptive filter branch each (table, plan) batch took
-        branches = executor_mod.filter_decision_counts()
+        counts = channel.counts("branch")
+        branches = {b: counts.get(b, 0) for b in ("gather", "concat")}
         identical = _tables_identical(ref, bat)
         assert identical, f"{qid}: batched merged tables diverge"
         t_ref = _time(lambda: engine.execute_requests(

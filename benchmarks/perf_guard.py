@@ -7,8 +7,10 @@ entry *at the same scale factor* (quick-mode sf=2 CI entries are never
 compared against full sf=4 local entries) beyond a wall-clock-noise
 tolerance, when any entry recorded a result divergence, when the
 ``runtime`` suite's newest adaptive A/B lost to the worse forced baseline
-(``adaptive_ok``), or when the ``correction`` suite's newest feedback
-loop failed to shrink the s_out estimate error (``converged``).
+(``adaptive_ok``), when the ``correction`` suite's newest feedback
+loop failed to shrink the s_out estimate error (``converged``), or when
+the ``obs`` suite's newest enabled-tracing overhead measurement blew its
+bound (``obs_overhead_ok`` — the tentpole's <2% promise).
 
 A suite whose newest entry has **no comparable prior** (prior entries
 exist, but none at the same sf) is a hard failure, not a silent pass:
@@ -25,6 +27,7 @@ after the quick benchmarks:
     PYTHONPATH=src python -m benchmarks.bitmap_compute --real-quick
     PYTHONPATH=src python -m benchmarks.adaptive --real-quick
     PYTHONPATH=src python -m benchmarks.adaptive --correction-quick
+    PYTHONPATH=src python -m benchmarks.obs_overhead --quick
     PYTHONPATH=src python -m benchmarks.perf_guard
 """
 from __future__ import annotations
@@ -71,6 +74,13 @@ def check(doc: dict, tolerance: float = TOLERANCE
                 f"{suite}: newest correction loop did not shrink the "
                 f"s_out estimate error (err {last.get('err_first')} -> "
                 f"{last.get('err_last')})")
+        if last.get("obs_overhead_ok") is False:
+            failures.append(
+                f"{suite}: enabled-tracing overhead "
+                f"{100 * last.get('overhead', 0):+.2f}% exceeded the "
+                f"{100 * last.get('bound', 0):.0f}% bound "
+                f"({last.get('t_traced_ms')}ms traced vs "
+                f"{last.get('t_untraced_ms')}ms untraced)")
         if "total_speedup" not in last:
             continue  # not a wall-clock trajectory entry
         tol = min(tolerance, SUITE_TOLERANCE.get(suite, tolerance))

@@ -35,6 +35,7 @@ from repro.compiler import (analyzer, interpreter, ir, multitable,
                             pushability, splitter, tpch_ir)
 from repro.core.cost import CardinalityCorrector, StorageResources, cut_score
 from repro.core.plan import PushPlan, plan_signature
+from repro.obs import trace as obs_trace
 from repro.queryproc import expressions as ex
 from repro.queryproc.expressions import Col
 from repro.queryproc.queries import Query
@@ -90,12 +91,15 @@ class CompiledQuery:
 
 def compile_ir(root: ir.Node, qid: str = "Q?",
                cuts: Optional[Dict[str, int]] = None,
-               bitmap_tables: Optional[frozenset] = None) -> CompiledQuery:
+               bitmap_tables: Optional[frozenset] = None,
+               clustered: Optional[Dict[str, str]] = None) -> CompiledQuery:
     """Compile an arbitrary logical plan (not just the TPC-H registry).
     ``cuts``/``bitmap_tables`` force a specific frontier cut per table
     (see ``splitter.split``) — the property harness uses this to execute
-    every enumerated candidate."""
-    sp = splitter.split(root, cuts=cuts, bitmap_tables=bitmap_tables)
+    every enumerated candidate. ``clustered`` (table -> cluster key, from
+    ``Catalog.clustered``) unlocks post-agg HAVING absorption."""
+    sp = splitter.split(root, cuts=cuts, bitmap_tables=bitmap_tables,
+                        clustered=clustered)
     residual = sp.residual
     q = Query(qid=qid.upper(), plans=sp.plans,
               compute=lambda merged: interpreter.run(residual, merged),
@@ -159,6 +163,30 @@ def compile_query_costed(qid: str, catalog,
     not pushed; tests/test_cost_split.py pins it), so this is purely a
     traffic/CPU optimization — the kind the corrector's online feedback is
     allowed to re-steer."""
+    tr = obs_trace.get_tracer()
+    with tr.span("compile", cat="compiler", qid=qid.upper(),
+                 costed=True) as sp:
+        cq = _compile_query_costed(qid, catalog, res, corrector,
+                                   fact_selectivity, multitable_lowering,
+                                   compute_bw)
+        if tr.enabled:
+            for ch in cq.cut_report or []:
+                tr.event("cut_scoring", cat="compiler", table=ch.table,
+                         chosen=ch.chosen, maximal=ch.maximal,
+                         scores=list(ch.scores),
+                         signatures=list(ch.signatures),
+                         bitmap=ch.bitmap, lowered=ch.lowered)
+            sp.set(n_tables=len(cq.cut_report or []),
+                   frontier=cq.frontier_signature())
+    return cq
+
+
+def _compile_query_costed(qid: str, catalog,
+                          res: Optional[StorageResources],
+                          corrector: Optional[CardinalityCorrector],
+                          fact_selectivity: Optional[float],
+                          multitable_lowering: bool,
+                          compute_bw: float) -> CompiledQuery:
     res = res if res is not None else StorageResources()
     root = tpch_ir.build_ir(qid)
     if fact_selectivity is not None and "lineitem" in ir.base_tables(root):
@@ -171,7 +199,11 @@ def compile_query_costed(qid: str, catalog,
     bitmap_tables = frozenset(t for t, lw in lowered_by_table.items()
                               if lw.bitmap)
 
-    probe = splitter.split(root)      # maximal split: candidate enumeration
+    # catalog-proven group-locality (clustered tables) widens the candidate
+    # set with post-agg HAVING frontiers; unclustered catalogs enumerate
+    # exactly the seed candidates
+    clustered = dict(getattr(catalog, "clustered", {}) or {})
+    probe = splitter.split(root, clustered=clustered)  # maximal split
     cuts: Dict[str, int] = {}
     report: List[CutChoice] = []
     for table in sorted(probe.candidates):
@@ -195,7 +227,8 @@ def compile_query_costed(qid: str, catalog,
             bitmap=table in bitmap_tables,
             lowered=repr(lw.predicate) if lw is not None else None))
 
-    cq = compile_ir(root, qid, cuts=cuts, bitmap_tables=bitmap_tables)
+    cq = compile_ir(root, qid, cuts=cuts, bitmap_tables=bitmap_tables,
+                    clustered=clustered)
     cq.cut_report = report
     return cq
 

@@ -72,10 +72,14 @@ class _SplitCtx:
     candidates: Dict[str, List[PushPlan]]
     chosen: Dict[str, int]
     max_cut: Dict[str, int]
+    clustered: Dict[str, str]               # table -> cluster key (catalog
+    #                                         group-locality proof; unlocks
+    #                                         post-agg HAVING absorption)
 
 
 def split(root: ir.Node, cuts: Optional[Dict[str, int]] = None,
-          bitmap_tables: Optional[frozenset] = None) -> SplitResult:
+          bitmap_tables: Optional[frozenset] = None,
+          clustered: Optional[Dict[str, str]] = None) -> SplitResult:
     """Cut the plan into storage frontier + residual.
 
     By default every chain absorbs its **maximal** amenable prefix (the
@@ -94,8 +98,16 @@ def split(root: ir.Node, cuts: Optional[Dict[str, int]] = None,
     bitwise ops instead of re-evaluating its share of a multi-table
     predicate (see compiler/multitable.py). Only applied to frontiers
     without an absorbed aggregate/top-k.
+
+    ``clustered`` maps table -> cluster key (``Catalog.clustered``): for
+    those tables a Filter *above* an absorbed group-by whose keys include
+    the cluster key may be absorbed too (storage-side HAVING over partial
+    aggregates, Q18) — sound because group-locality makes each partial
+    group final, so pruning partials prunes exactly the groups the
+    residual filter would prune.
     """
-    ctx = _SplitCtx({}, {}, cuts, frozenset(bitmap_tables or ()), {}, {}, {})
+    ctx = _SplitCtx({}, {}, cuts, frozenset(bitmap_tables or ()), {}, {}, {},
+                    dict(clustered or {}))
     residual = _rec(root, ctx, {})
     if cuts:
         unknown = set(cuts) - set(ctx.plans)
@@ -156,24 +168,44 @@ class _ChainState:
     columns: Tuple[str, ...] = ()
     agg: Optional[Tuple[Tuple[str, ...], Tuple[ir.AggSpec, ...]]] = None
     topk: Optional[Tuple[str, int, bool]] = None
+    having: Optional[ex.Expr] = None   # post-agg filter (clustered only)
 
 
-def _absorption_states(scan: ir.Scan,
-                       ops_chain: List[ir.Node]) -> List[_ChainState]:
+def _absorption_states(scan: ir.Scan, ops_chain: List[ir.Node],
+                       cluster_key: Optional[str] = None
+                       ) -> List[_ChainState]:
     """One state per cut point k = 0..M along the absorbable prefix.
 
-    The step rules are the seed's absorption loop verbatim. Note the
-    invariant the enumeration leans on: an absorbed Aggregate/TopK is
-    always the *last* absorbed operator (everything after either breaks),
-    so every non-maximal state has ``agg is None and topk is None`` — a
-    shallow cut never needs partial-merge obligations, its residual simply
-    replays the original operators over the merged raw rows."""
+    The step rules are the seed's absorption loop, with one addition: on
+    clustered tables a Filter above an absorbed Aggregate may absorb as a
+    HAVING stage. The invariant the enumeration leans on is therefore
+    relaxed from "an absorbed Aggregate/TopK is always last" to "after an
+    absorbed Aggregate only HAVING Filters may follow" — a shallow cut
+    below the agg still never needs partial-merge obligations, and a cut
+    between agg and having replays the Filter over the merged partials
+    (a no-op on survivors under group-locality)."""
     states = [_ChainState(columns=scan.columns)]
     st = states[0]
     for node in ops_chain:
         if not analyzer.classify(node).pushable:
             break
         if isinstance(node, ir.Filter):
+            if st.agg is not None or st.topk is not None:
+                # post-agg filter: HAVING absorption. Sound only when the
+                # catalog proves group-locality (cluster key is one of the
+                # group keys) and the predicate reads only the partial
+                # aggregate's output schema (keys + agg outputs).
+                if (st.agg is not None and st.topk is None
+                        and cluster_key is not None
+                        and cluster_key in st.agg[0]
+                        and ex.columns_of(node.predicate)
+                        <= set(st.agg[0]) | {o for o, _, _ in st.agg[1]}):
+                    st = dataclasses.replace(
+                        st, having=(node.predicate if st.having is None
+                                    else ex.And(st.having, node.predicate)))
+                    states.append(st)
+                    continue
+                break
             # the shared pushability rule (compiler/pushability.py): only
             # base-column predicates below any agg/top-k may be absorbed —
             # the same predicate substitute_fact_predicate uses, so the
@@ -286,7 +318,7 @@ def _plan_at(table: str, states: List[_ChainState],
         table, out_columns, predicate=st.pred, derive=st.derives,
         agg=(tuple(st.agg[0]), tuple(st.agg[1])) if st.agg is not None
         else None,
-        top_k=st.topk)
+        top_k=st.topk, having=st.having)
 
 
 def _lower_chain(chain: List[ir.Node], ctx: _SplitCtx) -> ir.Node:
@@ -304,7 +336,7 @@ def _lower_chain(chain: List[ir.Node], ctx: _SplitCtx) -> ir.Node:
             ops_chain.append(node)
 
     skey = ctx.skeys.get(table)
-    states = _absorption_states(scan, ops_chain)
+    states = _absorption_states(scan, ops_chain, ctx.clustered.get(table))
     max_k = len(states) - 1
     k = max_k if ctx.cuts is None else ctx.cuts.get(table, max_k)
     if not 0 <= k <= max_k:
@@ -329,6 +361,11 @@ def _lower_chain(chain: List[ir.Node], ctx: _SplitCtx) -> ir.Node:
         merge = tuple((out, analyzer.DECOMPOSABLE[fn], out)
                       for out, fn, _ in specs)
         residual = ir.Aggregate(residual, tuple(keys), merge)
+        if st.having is not None:
+            # re-apply the absorbed HAVING after the partial merge — a
+            # no-op on the storage-filtered survivors under group-locality,
+            # kept so the residual mirrors the original operator sequence
+            residual = ir.Filter(residual, st.having)
     if st.topk is not None:
         col, kk, asc = st.topk
         residual = ir.TopK(residual, col, kk, asc)

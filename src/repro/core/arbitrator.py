@@ -25,6 +25,7 @@ import dataclasses
 from typing import Callable, List, Optional, Tuple
 
 from repro.core.cost import RequestCost, StorageResources
+from repro.obs import trace as obs_trace
 
 PUSHDOWN, PUSHBACK = "pushdown", "pushback"
 
@@ -100,6 +101,17 @@ class Arbitrator:
         return False
 
     def _emit(self, assigned: List[Tuple[int, str]]) -> List[Tuple[int, str]]:
+        if assigned:
+            tr = obs_trace.get_tracer()
+            if tr.enabled:
+                # live load signal at the instant of the decision batch:
+                # what the Arbitrator saw (remaining queue, free slots)
+                # when it routed — one compact channel entry per batch
+                tr.decisions.record_batch(
+                    assigned, kind="arbitrate",
+                    queue_depth=len(self.queue),
+                    free_pd=self.free_pd, free_pb=self.free_pb,
+                    pa_aware=self.pa_aware, forced=self.forced_path)
         if self.on_decide is not None:
             for rid, path in assigned:
                 self.on_decide(rid, path)

@@ -178,14 +178,39 @@ def storage_side_bitmap_batched(parts, predicate, out_cols_uncached,
 
 def compute_side_apply_batched(parts, bitmaps, out_cols,
                                table: str = "lineitem") -> List[ColumnTable]:
-    """Fig-4 path over ALL partitions in one fused pass: the storage node
-    applies compute-built bitmaps (predicate columns never scanned) and
-    returns each partition's filtered output columns — byte-identical to
-    per-partition ``execute_push_plan(plan, part, bitmap=words)``."""
+    """Fig-4 path over ALL partitions: the storage node applies
+    compute-built bitmaps (predicate columns never scanned) and returns
+    each partition's filtered output columns — byte-identical to
+    per-partition ``execute_push_plan(plan, part, bitmap=words)``.
+
+    Routed through the decision-faithful ``runtime.execute_split``: each
+    partition becomes a pushdown ``PlannedRequest`` carrying its bitmap,
+    so bitmap application runs under the same fused batch executor, span
+    tree (execute_split → storage_execute → merge) and real-byte
+    accounting as every other storage request — not a side door."""
+    from repro.core import runtime
+    from repro.core.arbitrator import PUSHDOWN
+    from repro.storage.catalog import Partition
     cols = tuple(c for c in out_cols if c in parts[0].cols)
     plan = PushPlan(table, cols, apply_bitmap=True)
-    tabs, _aux = compile_push_plan(plan).execute_batch_parts(parts, bitmaps)
-    return tabs
+    cplan = compile_push_plan(plan)
+    reqs: List[PlannedRequest] = []
+    bms: Dict[int, np.ndarray] = {}
+    for i, (p, words) in enumerate(zip(parts, bitmaps)):
+        part = Partition(table, i, 0, p)
+        reqs.append(PlannedRequest(i, "BITMAP", table, part, plan,
+                                   cplan.estimate_cost(part)))
+        bms[i] = words
+    split = runtime.execute_split(reqs, {i: PUSHDOWN for i in bms},
+                                  bitmaps=bms)
+    merged = split.merged[table]
+    out: List[ColumnTable] = []
+    off = 0
+    for o in split.outcomes:
+        out.append(ColumnTable({c: v[off:off + o.rows_out]
+                                for c, v in merged.cols.items()}))
+        off += o.rows_out
+    return out
 
 
 def combine_bitmaps(a: np.ndarray, b: np.ndarray) -> np.ndarray:

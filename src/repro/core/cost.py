@@ -193,6 +193,26 @@ class CardinalityCorrector:
                     else (1.0 - self.alpha) * prev + self.alpha * obs
                 self._n[key] = self._n.get(key, 0) + 1
 
+    def state(self, qid: Optional[str] = None) -> Dict[str, Dict]:
+        """EWMA state (applied ratio + observation count) per learned key —
+        what the tracer captures at decision time so a trace shows exactly
+        which correction steered each arbitration. ``qid`` filters to one
+        query's keys."""
+        with self._lock:
+            items = list(self._log.items())
+            counts = dict(self._n)
+        out: Dict[str, Dict] = {}
+        for key, log_r in items:
+            if qid is not None and key[0] != qid:
+                continue
+            name = "/".join(str(p) for p in key if p is not None)
+            out[name] = {
+                "ratio": float(min(self.clamp,
+                                   max(1.0 / self.clamp, math.exp(log_r)))),
+                "n": counts.get(key, 0),
+            }
+        return out
+
     @property
     def n_observations(self) -> int:
         with self._lock:

@@ -30,6 +30,8 @@ import numpy as np
 
 from repro.core import optimum, runtime
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import get_metrics
 from repro.core.cost import (CardinalityCorrector, RequestCost,
                              StorageResources)
 from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
@@ -105,22 +107,31 @@ class QueryRun:
 def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
                   corrector: Optional[CardinalityCorrector] = None
                   ) -> List[PlannedRequest]:
-    out: List[PlannedRequest] = []
-    rid = start_id
-    for table, plan in query.plans.items():
-        # compile once per (query, table): the cost model's plan-level
-        # invariants (accessed columns, selectivity closure) are shared by
-        # every partition instead of recomputed ~160 times
-        cplan = compile_push_plan(plan)
-        sig = plan_signature(plan)
-        for part in catalog.partitions_of(table):
-            cost = cplan.estimate_cost(part)
-            raw = cost.s_out
-            if corrector is not None:
-                cost = corrector.correct(query.qid, table, sig, cost)
-            out.append(PlannedRequest(rid, query.qid, table, part, plan,
-                                      cost, s_out_raw=raw))
-            rid += 1
+    tr = obs_trace.get_tracer()
+    with tr.span("plan_requests", qid=query.qid) as sp:
+        out: List[PlannedRequest] = []
+        rid = start_id
+        for table, plan in query.plans.items():
+            # compile once per (query, table): the cost model's plan-level
+            # invariants (accessed columns, selectivity closure) are shared
+            # by every partition instead of recomputed ~160 times
+            cplan = compile_push_plan(plan)
+            sig = plan_signature(plan)
+            for part in catalog.partitions_of(table):
+                cost = cplan.estimate_cost(part)
+                raw = cost.s_out
+                if corrector is not None:
+                    cost = corrector.correct(query.qid, table, sig, cost)
+                out.append(PlannedRequest(rid, query.qid, table, part, plan,
+                                          cost, s_out_raw=raw))
+                rid += 1
+        if tr.enabled:
+            sp.set(n_requests=len(out), n_tables=len(query.plans),
+                   est_s_out=sum(r.cost.s_out for r in out),
+                   # the corrector's EWMA state *as used* for these
+                   # estimates — decision-time provenance in the trace
+                   corrector_state=(corrector.state(query.qid)
+                                    if corrector is not None else None))
     return out
 
 
@@ -170,12 +181,16 @@ def nonpushable_time(merged: Dict[str, ColumnTable], cfg: EngineConfig) -> float
 
 
 def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
-                 cfg: EngineConfig, t_pushable: float, net_bytes: float
+                 cfg: EngineConfig, t_pushable: float, net_bytes: float,
+                 bitmaps: Optional[Dict[int, np.ndarray]] = None
                  ) -> QueryRun:
     """Real execution routed by the simulator's decision vector
-    (``core.runtime.execute_split``), plus the net-bytes reconciliation."""
+    (``core.runtime.execute_split``), plus the net-bytes reconciliation.
+    ``bitmaps`` (req_id -> packed words) feeds apply_bitmap plans."""
+    tr = obs_trace.get_tracer()
     split = runtime.execute_split(reqs, sim.decisions(), cfg.executor,
-                                  cfg.filter_gather_threshold)
+                                  cfg.filter_gather_threshold,
+                                  bitmaps=bitmaps)
     # the real split IS the simulated split — one decision vector, two uses
     assert split.n_pushdown == sim.admitted(query.qid), \
         (query.qid, split.n_pushdown, sim.admitted(query.qid))
@@ -183,8 +198,14 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
         # close the loop: measured pushdown bytes correct future estimates
         runtime.feed_corrector(cfg.corrector, query.qid, reqs,
                                split.outcomes)
-    result = query.compute(split.merged)
+    with tr.span("residual_compute", qid=query.qid):
+        result = query.compute(split.merged)
     t_np = nonpushable_time(split.merged, cfg)
+    m = get_metrics()
+    m.counter("engine.queries").inc()
+    m.counter("engine.requests.pushdown").inc(split.n_pushdown)
+    m.counter("engine.requests.pushback").inc(len(reqs) - split.n_pushdown)
+    m.counter("engine.net_bytes.real").inc(split.real_net_bytes)
     return QueryRun(
         qid=query.qid, result=result, sim=sim,
         t_pushable=t_pushable, t_nonpushable=t_np, requests=reqs,
@@ -197,14 +218,32 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
 
 
 def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
-              requests: Optional[List[PlannedRequest]] = None) -> QueryRun:
-    reqs = requests if requests is not None \
-        else plan_requests(query, catalog, corrector=cfg.corrector)
-    sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
-                for r in reqs]
-    sim = simulate(sim_reqs, cfg.res, cfg.mode)
-    return _run_decided(query, reqs, sim, cfg,
-                        t_pushable=sim.makespan, net_bytes=sim.net_bytes)
+              requests: Optional[List[PlannedRequest]] = None,
+              bitmaps: Optional[Dict[int, np.ndarray]] = None) -> QueryRun:
+    tr = obs_trace.get_tracer()
+    with tr.span("query", qid=query.qid, mode=cfg.mode) as qs:
+        reqs = requests if requests is not None \
+            else plan_requests(query, catalog, corrector=cfg.corrector)
+        sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
+                    for r in reqs]
+        sim = simulate(sim_reqs, cfg.res, cfg.mode)
+        run = _run_decided(query, reqs, sim, cfg,
+                           t_pushable=sim.makespan, net_bytes=sim.net_bytes,
+                           bitmaps=bitmaps)
+        if tr.enabled:
+            _set_query_attrs(qs, run)
+    return run
+
+
+def _set_query_attrs(qs, run: "QueryRun") -> None:
+    """Roll the run's accounting up onto its ``query`` span."""
+    recon = run.net_bytes_recon or {}
+    qs.set(real_net_bytes=float(run.real_net_bytes),
+           sim_net_bytes=float(run.net_bytes),
+           n_pushdown=run.n_admitted, n_pushback=run.n_pushed_back,
+           t_pushable=run.t_pushable, t_nonpushable=run.t_nonpushable,
+           s_out_est_ratio=recon.get("s_out_estimate_ratio"),
+           net_bytes_recon=recon)
 
 
 def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
@@ -218,12 +257,18 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, r.query_id, r.cost)
                 for r in all_reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode)
+    tr = obs_trace.get_tracer()
     out: Dict[str, QueryRun] = {}
     for q in queries:
         reqs = [r for r in all_reqs if r.query_id == q.qid]
-        out[q.qid] = _run_decided(
-            q, reqs, sim, cfg, t_pushable=sim.finish_by_query[q.qid],
-            net_bytes=sim.net_bytes_by_query[q.qid])
+        with tr.span("query", qid=q.qid, mode=cfg.mode,
+                     concurrent=True) as qs:
+            run = _run_decided(
+                q, reqs, sim, cfg, t_pushable=sim.finish_by_query[q.qid],
+                net_bytes=sim.net_bytes_by_query[q.qid])
+            if tr.enabled:
+                _set_query_attrs(qs, run)
+        out[q.qid] = run
     return out
 
 

@@ -39,9 +39,10 @@ selective) and concatenating whole columns then applying one big mask
 gather overhead for nothing). The crossover threshold is micro-calibrated
 at import time (``calibrate_gather_threshold``), overridable via
 ``EngineConfig.filter_gather_threshold`` or ``REPRO_GATHER_THRESHOLD``;
-each batch's decision lands in ``FILTER_DECISIONS`` for the benchmarks to
-report. Both branches produce the same bytes — the choice is purely a
-performance one.
+each batch's decision lands in the observability subsystem's bounded
+filter-decision channel (``repro.obs.filter_decision_channel``) for the
+benchmarks and traces to report. Both branches produce the same bytes —
+the choice is purely a performance one.
 
 Bitwise contract: the batch path returns **byte-identical** merged tables
 and aux products to the per-partition reference. The load-bearing facts:
@@ -70,6 +71,7 @@ import numpy as np
 
 from repro.core.cost import RequestCost
 from repro.core.plan import _AGG_OUT_ROWS, PushPlan
+from repro.obs import trace as obs_trace
 from repro.core.plan import batchable_stages  # noqa: F401 re-export
 from repro.queryproc import expressions as ex
 from repro.queryproc import operators as ops
@@ -154,28 +156,34 @@ def _init_threshold() -> float:
 
 FILTER_GATHER_THRESHOLD = _init_threshold()
 
-# every batch filter-stage decision, for the benchmarks to report
-FILTER_DECISIONS: List[Dict] = []
-_DECISION_CAP = 8192
+# Batch filter-stage decisions now live in the observability subsystem's
+# bounded, thread-safe channel (repro.obs.filter_decision_channel) — the
+# old FILTER_DECISIONS module list grew without bound across runs and
+# raced under run_stream's thread pools. These wrappers keep the public
+# surface; FILTER_DECISIONS itself survives one release as a deprecated
+# read-only snapshot via the module __getattr__ below.
 
 
 def reset_filter_decisions() -> None:
-    FILTER_DECISIONS.clear()
+    obs_trace.filter_decision_channel().clear()
 
 
 def filter_decision_counts() -> Dict[str, int]:
-    out = {"gather": 0, "concat": 0}
-    for d in FILTER_DECISIONS:
-        out[d["branch"]] += 1
-    return out
+    counts = obs_trace.filter_decision_channel().counts("branch")
+    return {"gather": counts.get("gather", 0),
+            "concat": counts.get("concat", 0)}
 
 
 def _record_decision(table: str, est: Optional[float], branch: str,
                      n_parts: int, rows: int) -> None:
-    if len(FILTER_DECISIONS) < _DECISION_CAP:
-        FILTER_DECISIONS.append({"table": table, "est_selectivity": est,
-                                 "branch": branch, "n_parts": n_parts,
-                                 "rows": rows})
+    obs_trace.record_filter_decision(table, est, branch, n_parts, rows)
+
+
+def __getattr__(name: str):
+    if name == "FILTER_DECISIONS":
+        # deprecated alias (one release): read-only snapshot of the channel
+        return obs_trace.filter_decision_channel().snapshot()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -187,6 +195,8 @@ class CompiledPushPlan:
     pred_cols: Tuple[str, ...]              # columns the predicate reads
     sel_fn: Optional[Callable]              # compiled selectivity estimator
     agg_spec: Optional[Dict[str, Tuple[str, str]]]  # out -> (fn, col)
+    having_fn: Optional[Callable] = None    # post-agg filter kernel
+    having_sel_fn: Optional[Callable] = None  # its selectivity estimator
     # cost-model per-plan constants (plan.estimate_cost recomputes these
     # per partition; only the stats lookups actually vary across partitions)
     _n_derived_out: int = 0
@@ -332,6 +342,12 @@ class CompiledPushPlan:
             # aggregation collapses rows: seg is re-derived at group level
             # so a downstream top-k segments the agg *output*, not the input
             out, seg = self._batched_agg(t, seg, n_parts)
+            if self.having_fn is not None:
+                # post-agg filter over the partial aggregate's output; seg
+                # stays sorted under the mask so bounds/top-k still apply
+                hm = self.having_fn(out.cols)
+                out = ColumnTable({c: v[hm] for c, v in out.cols.items()})
+                seg = np.asarray(seg)[hm]
         elif plan.columns:
             out = t.select([c for c in plan.columns if c in t.cols])
         else:
@@ -491,6 +507,8 @@ class CompiledPushPlan:
                               else _AGG_OUT_ROWS)
             groups = min(groups, _AGG_OUT_ROWS, len(data))
             s_out = groups * 8 * (len(self._agg_keys) + len(self.agg_spec))
+            if self.having_sel_fn is not None:
+                s_out *= self.having_sel_fn(stats)
         else:
             out_cols = [c for c in plan.columns if c in data.cols]
             s_out = (data.nbytes(out_cols, stored=False)
@@ -527,6 +545,10 @@ def compile_push_plan(plan: PushPlan) -> CompiledPushPlan:
                 if plan.predicate is not None else None),
         agg_spec=({o: (f, c) for o, f, c in plan.agg[1]}
                   if plan.agg is not None else None),
+        having_fn=(ex.compile_expr(plan.having)
+                   if plan.having is not None else None),
+        having_sel_fn=(ex.compile_selectivity(plan.having)
+                       if plan.having is not None else None),
         _n_derived_out=len(derived & set(plan.columns)),
         _agg_keys=tuple(plan.agg[0]) if plan.agg is not None else (),
     )

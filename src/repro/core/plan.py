@@ -45,6 +45,12 @@ class PushPlan:
     bitmap_only: bool = False                      # return the selection bitmap
     apply_bitmap: bool = False                     # storage filters with a
     #                                                compute-layer bitmap
+    having: Optional[ex.Expr] = None               # post-agg filter over the
+    #                                                partial aggregate's output
+    #                                                (sound only when groups
+    #                                                are partition-local — the
+    #                                                splitter absorbs it only
+    #                                                on clustered catalogs)
 
     def accessed_columns(self) -> Tuple[str, ...]:
         derived = {name for name, _, _ in self.derive}
@@ -56,6 +62,10 @@ class PushPlan:
         if self.agg:
             keys, aggs = self.agg
             cols |= (set(keys) | {c for _, _, c in aggs if c}) - derived
+            if self.having is not None:
+                agg_out = {o for o, _, _ in aggs}
+                cols |= (ex.columns_of(self.having) - agg_out
+                         - set(keys) - derived)
         if self.top_k:
             cols.add(self.top_k[0])
         if self.shuffle:
@@ -79,6 +89,8 @@ def plan_signature(plan: PushPlan, shuffle_key: Optional[str] = None) -> str:
         stages.append("derive")
     if plan.agg is not None:
         stages.append("agg")
+        if plan.having is not None:
+            stages.append("having")
     if plan.top_k is not None:
         stages.append("topk")
     if plan.shuffle is not None or shuffle_key is not None:
@@ -105,6 +117,8 @@ def batchable_stages(plan: PushPlan, shuffle_key: Optional[str] = None
         stages.append("derive")
     if plan.agg is not None:
         stages.append("agg")
+        if plan.having is not None:
+            stages.append("having")
     if plan.top_k is not None:
         stages.append("topk")
     if plan.shuffle is not None or shuffle_key is not None:
@@ -136,6 +150,8 @@ def execute_push_plan(plan: PushPlan, data: ColumnTable,
     if plan.agg is not None:
         keys, aggs = plan.agg
         t = ops.grouped_agg(t, list(keys), {o: (f, c) for o, f, c in aggs})
+        if plan.having is not None:
+            t = ops.filter_table(t, plan.having)
     elif plan.columns:
         t = t.select([c for c in plan.columns if c in t.cols])
     if plan.top_k is not None:
@@ -177,6 +193,10 @@ def estimate_cost(plan: PushPlan, part: Partition) -> RequestCost:
             groups *= max(1, stats[k].ndv if k in stats else _AGG_OUT_ROWS)
         groups = min(groups, _AGG_OUT_ROWS, len(data))
         s_out = groups * 8 * (len(keys) + len(aggs))
+        if plan.having is not None:
+            # agg outputs have no stored stats -> estimate_selectivity's
+            # missing-stats fallback (0.5) applies per comparison
+            s_out *= ex.estimate_selectivity(plan.having, stats)
     else:
         out_cols = [c for c in plan.columns if c in data.cols]
         s_out = (data.nbytes(out_cols, stored=False)

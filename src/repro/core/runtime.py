@@ -51,6 +51,8 @@ from repro.core.cost import CardinalityCorrector
 from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
                                  CompiledPushPlan, compile_push_plan)
 from repro.core.plan import execute_push_plan, plan_signature
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import get_metrics
 from repro.queryproc.table import ColumnTable
 
 
@@ -124,6 +126,33 @@ def _exec_group(cplan: CompiledPushPlan, sub, path: str, executor: str,
     return list(zip(parts, aux))
 
 
+def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
+                       executor: str, threshold: Optional[float],
+                       bitmaps: Optional[Dict[int, np.ndarray]] = None,
+                       shipped: Optional[List[ColumnTable]] = None,
+                       parent: Optional[obs_trace.Span] = None,
+                       node: Optional[int] = None
+                       ) -> Tuple[List[Tuple[ColumnTable, Dict]],
+                                  obs_trace.Span]:
+    """``_exec_group`` under a span: ``storage_execute`` for pushdown
+    batches, ``compute_replay`` for pushed-back ones. Returns the (closed)
+    span alongside the results so the caller can attach ``shipped_bytes``
+    from the **same** per-request accounting it computes anyway
+    (``result_bytes`` / ``pushback_bytes``) — traces reconcile with
+    ``SplitExecution.real_net_bytes`` *exactly*, and the bytes are never
+    computed twice."""
+    tr = obs_trace.get_tracer()
+    name = "storage_execute" if path == PUSHDOWN else "compute_replay"
+    with tr.span(name, parent=parent, table=sub[0].table,
+                 n_parts=len(sub), node=node) as sp:
+        out = _exec_group(cplan, sub, path, executor, threshold,
+                          bitmaps=bitmaps, shipped=shipped)
+        if tr.enabled:
+            sp.set(rows_out=int(sum(len(res) for res, _ in out)),
+                   signature=plan_signature(cplan.plan))
+    return out, sp
+
+
 def execute_split(reqs, decisions: Dict[int, str],
                   executor: str = EXECUTOR_BATCHED,
                   threshold: Optional[float] = None,
@@ -138,39 +167,55 @@ def execute_split(reqs, decisions: Dict[int, str],
     request order**, so the merged tables are byte-identical to
     all-pushdown execution for any decision vector.
     """
-    per_req: Dict[int, ColumnTable] = {}
-    out_by_id: Dict[int, RequestOutcome] = {}
-    n_pd = n_pb = 0
-    pd_bytes = pb_bytes = 0
-    groups: Dict[Tuple[str, int], List] = {}
-    for r in reqs:
-        groups.setdefault((r.table, id(r.plan)), []).append(r)
-    for (_table, _pid), rs in groups.items():
-        cplan = compile_push_plan(rs[0].plan)
-        for path in (PUSHDOWN, PUSHBACK):
-            sub = [r for r in rs if decisions.get(r.req_id, PUSHDOWN) == path]
-            if not sub:
-                continue
-            for r, (res, aux) in zip(sub, _exec_group(
-                    cplan, sub, path, executor, threshold, bitmaps)):
-                per_req[r.req_id] = res
-                if path == PUSHDOWN:
-                    b = result_bytes(res, aux)
-                    pd_bytes += b
-                    n_pd += 1
-                else:
-                    b = pushback_bytes(cplan, r.part.data)
-                    pb_bytes += b
-                    n_pb += 1
-                out_by_id[r.req_id] = RequestOutcome(
-                    r.req_id, r.table, path, len(res), b,
-                    replayed=(path == PUSHBACK))
-    by_table: Dict[str, List[ColumnTable]] = {}
-    for r in reqs:
-        by_table.setdefault(r.table, []).append(per_req[r.req_id])
-    merged = {t: ColumnTable.concat(parts) for t, parts in by_table.items()}
-    return SplitExecution(merged, [out_by_id[r.req_id] for r in reqs],
-                          n_pd, n_pb, pd_bytes, pb_bytes)
+    tr = obs_trace.get_tracer()
+    with tr.span("execute_split", n_requests=len(reqs)) as es:
+        per_req: Dict[int, ColumnTable] = {}
+        out_by_id: Dict[int, RequestOutcome] = {}
+        n_pd = n_pb = 0
+        pd_bytes = pb_bytes = 0
+        groups: Dict[Tuple[str, int], List] = {}
+        for r in reqs:
+            groups.setdefault((r.table, id(r.plan)), []).append(r)
+        for (_table, _pid), rs in groups.items():
+            cplan = compile_push_plan(rs[0].plan)
+            for path in (PUSHDOWN, PUSHBACK):
+                sub = [r for r in rs
+                       if decisions.get(r.req_id, PUSHDOWN) == path]
+                if not sub:
+                    continue
+                out, gsp = _exec_group_traced(cplan, sub, path, executor,
+                                              threshold, bitmaps=bitmaps)
+                g_bytes = 0
+                for r, (res, aux) in zip(sub, out):
+                    per_req[r.req_id] = res
+                    if path == PUSHDOWN:
+                        b = result_bytes(res, aux)
+                        pd_bytes += b
+                        n_pd += 1
+                    else:
+                        b = pushback_bytes(cplan, r.part.data)
+                        pb_bytes += b
+                        n_pb += 1
+                    g_bytes += b
+                    out_by_id[r.req_id] = RequestOutcome(
+                        r.req_id, r.table, path, len(res), b,
+                        replayed=(path == PUSHBACK))
+                gsp.set(shipped_bytes=int(g_bytes))
+        by_table: Dict[str, List[ColumnTable]] = {}
+        for r in reqs:
+            by_table.setdefault(r.table, []).append(per_req[r.req_id])
+        with tr.span("merge", tables=sorted(by_table)):
+            merged = {t: ColumnTable.concat(parts)
+                      for t, parts in by_table.items()}
+        outs = [out_by_id[r.req_id] for r in reqs]
+        if tr.enabled:
+            # the RequestOutcome list rides along by reference; exporters
+            # coerce dataclasses to dicts at export time
+            es.set(n_pushdown=n_pd, n_pushback=n_pb,
+                   pushdown_bytes=int(pd_bytes),
+                   pushback_bytes=int(pb_bytes),
+                   outcomes=outs)
+    return SplitExecution(merged, outs, n_pd, n_pb, pd_bytes, pb_bytes)
 
 
 def reconcile_net_bytes(sim, reqs, split: SplitExecution) -> Dict:
@@ -271,6 +316,22 @@ def _ship(cplan: CompiledPushPlan, parts_data: List[ColumnTable]
     return shipped
 
 
+def _ship_traced(cplan: CompiledPushPlan, parts_data: List[ColumnTable],
+                 parent: Optional[obs_trace.Span] = None,
+                 node: Optional[int] = None) -> List[ColumnTable]:
+    """``_ship`` under a ``pushback_ship`` span (its ``ship_bytes`` is the
+    stored ``s_in`` the transfer moves — the same bytes ``pushback_bytes``
+    charges, counted once by the matching ``compute_replay`` span)."""
+    tr = obs_trace.get_tracer()
+    with tr.span("pushback_ship", parent=parent,
+                 n_parts=len(parts_data), node=node) as sp:
+        out = _ship(cplan, parts_data)
+        if tr.enabled:
+            sp.set(ship_bytes=int(sum(pushback_bytes(cplan, d)
+                                      for d in parts_data)))
+    return out
+
+
 def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
                time_scale: float = 1.0) -> StreamRun:
     """Drive an arrival-timed multi-query stream through real split
@@ -288,6 +349,20 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
     from repro.core import engine as _engine  # deferred: engine imports us
     from repro.core.simulator import SimRequest, simulate
 
+    tr = obs_trace.get_tracer()
+    metrics = get_metrics()
+    stream_cm = tr.span("run_stream", mode=cfg.mode, n_queries=len(stream))
+    stream_span = stream_cm.__enter__()
+    try:
+        return _run_stream_body(stream, catalog, cfg, time_scale, tr,
+                                metrics, stream_span, _engine, SimRequest,
+                                simulate)
+    finally:
+        stream_cm.__exit__(None, None, None)
+
+
+def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
+                     stream_span, _engine, SimRequest, simulate) -> StreamRun:
     t_plan0 = time.perf_counter()
     ordered = sorted(stream, key=lambda s: s.arrival)
     # each stream entry gets a unique key so the same query id may appear
@@ -348,8 +423,27 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
         with cores:
             return fn(*args, **kw)
 
-    def submit_query(key: str) -> List[Tuple[object, Future]]:
+    def sample_wave(qspan) -> None:
+        """Per-wave load signals: slot-pool queue depths + free cores —
+        written to the metrics gauges every dispatch wave (the live
+        signals a distributed Arbitrator polls) and, when tracing, stamped
+        on the query as a ``wave_sample`` instant."""
+        exec_q = {n: exec_pools[n]._work_queue.qsize() for n in nodes}
+        ship_q = {n: ship_pools[n]._work_queue.qsize() for n in nodes}
+        cores_free = getattr(cores, "_value", None)
+        for n in nodes:
+            metrics.gauge(f"stream.node{n}.exec_queue").set(exec_q[n])
+            metrics.gauge(f"stream.node{n}.ship_queue").set(ship_q[n])
+        if cores_free is not None:
+            metrics.gauge("stream.cores_free").set(cores_free)
+        if tr.enabled:
+            tr.event("wave_sample", parent=qspan,
+                     exec_queue=exec_q, ship_queue=ship_q,
+                     cores_free=cores_free)
+
+    def submit_query(key: str, qspan) -> List[Tuple[object, Future]]:
         """Fan the query's requests out as (req-group, future) chunks."""
+        sample_wave(qspan)
         chunks: Dict[Tuple[str, int, int, str], List] = {}
         for r in reqs_by_key[key]:
             path = decisions.get(r.req_id, PUSHDOWN)
@@ -363,28 +457,32 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
             cplan = compile_push_plan(sub[0].plan)
             if path == PUSHDOWN:
                 fut = exec_pools[node].submit(
-                    on_core, _exec_group, cplan, sub, path, cfg.executor,
-                    threshold)
+                    on_core, _exec_group_traced, cplan, sub, path,
+                    cfg.executor, threshold, parent=qspan, node=node)
             else:
                 ship_fut = ship_pools[node].submit(
-                    on_core, _ship, cplan, [r.part.data for r in sub])
+                    on_core, _ship_traced, cplan,
+                    [r.part.data for r in sub], parent=qspan, node=node)
                 # wait for the transfer OUTSIDE the core gate, replay inside
                 fut = compute_pool.submit(
-                    lambda cp=cplan, s=sub, sf=ship_fut: on_core(
-                        _exec_group, cp, s, PUSHBACK, cfg.executor,
-                        threshold, shipped=sf.result()))
+                    lambda cp=cplan, s=sub, sf=ship_fut, qs=qspan, nd=node:
+                    on_core(_exec_group_traced, cp, s, PUSHBACK,
+                            cfg.executor, threshold, shipped=sf.result(),
+                            parent=qs, node=nd))
             futs.append(((sub, path, cplan), fut))
         return futs
 
     t0 = time.perf_counter()
 
-    def finish_query(key: str, sq: StreamQuery, futs) -> Dict:
+    def finish_query(key: str, sq: StreamQuery, futs, qspan) -> Dict:
         per_req: Dict[int, ColumnTable] = {}
         outcomes: List[RequestOutcome] = []
         n_pd = n_pb = 0
         pd_b = pb_b = 0
         for (sub, path, cplan), fut in futs:
-            for r, (res, aux) in zip(sub, fut.result()):
+            out, gsp = fut.result()
+            g_bytes = 0
+            for r, (res, aux) in zip(sub, out):
                 per_req[r.req_id] = res
                 if path == PUSHDOWN:
                     n_pd += 1
@@ -394,9 +492,11 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
                     n_pb += 1
                     b = pushback_bytes(cplan, r.part.data)
                     pb_b += b
+                g_bytes += b
                 outcomes.append(RequestOutcome(
                     r.req_id, r.table, path, len(res), b,
                     replayed=(path == PUSHBACK)))
+            gsp.set(shipped_bytes=int(g_bytes))
         if cfg.corrector is not None:
             # per-stream-entry feedback: repeated streams converge the
             # estimates (the key strips the '#n' repeat suffix — the
@@ -408,14 +508,30 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
             by_table.setdefault(r.table, []).append(per_req[r.req_id])
 
         def merge_and_compute():
-            merged = {t: ColumnTable.concat(p) for t, p in by_table.items()}
-            return sq.query.compute(merged)
+            with tr.span("merge", parent=qspan, tables=sorted(by_table)):
+                merged = {t: ColumnTable.concat(p)
+                          for t, p in by_table.items()}
+            with tr.span("residual_compute", parent=qspan):
+                return sq.query.compute(merged)
 
         result = on_core(merge_and_compute)
         sim_pd = sum(r.cost.s_out for r in reqs_by_key[key]
                      if decisions.get(r.req_id, PUSHDOWN) == PUSHDOWN)
+        finish_s = time.perf_counter() - t0
+        metrics.counter("stream.requests.pushdown").inc(n_pd)
+        metrics.counter("stream.requests.pushback").inc(n_pb)
+        metrics.counter("stream.net_bytes.real").inc(pd_b + pb_b)
+        metrics.histogram("stream.query_finish_s").observe(finish_s)
+        if tr.enabled:
+            sim_pb = sum(r.cost.s_in for r in reqs_by_key[key]
+                         if decisions.get(r.req_id, PUSHDOWN) == PUSHBACK)
+            tr.end(qspan, real_net_bytes=int(pd_b + pb_b),
+                   sim_net_bytes=int(sim_pd + sim_pb),
+                   n_pushdown=n_pd, n_pushback=n_pb,
+                   s_out_est_ratio=(sim_pd / pd_b if pd_b else None),
+                   finish_s=finish_s)
         return {"result": result,
-                "finish_s": time.perf_counter() - t0,
+                "finish_s": finish_s,
                 "n_pushdown": n_pd, "n_pushback": n_pb,
                 "real_net_bytes": pd_b + pb_b,
                 "s_out_estimate_ratio": (sim_pd / pd_b if pd_b else None),
@@ -427,8 +543,12 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
             delay = t0 + sq.arrival * time_scale - time.perf_counter()
             if delay > 0:
                 time.sleep(delay)
+            # detached span: opened at dispatch in this thread, closed by
+            # the finish-pool worker (explicit parent, no stack propagation)
+            qspan = tr.start("query", parent=stream_span,
+                             qid=key, mode=cfg.mode, arrival=sq.arrival)
             finishers[key] = finish_pool.submit(
-                finish_query, key, sq, submit_query(key))
+                finish_query, key, sq, submit_query(key, qspan), qspan)
         per_query = {qid: f.result() for qid, f in finishers.items()}
     finally:
         for p in (*exec_pools.values(), *ship_pools.values(),
@@ -436,6 +556,13 @@ def run_stream(stream: Sequence[StreamQuery], catalog, cfg,
             p.shutdown(wait=False)
     wall = time.perf_counter() - t0
     results = {qid: d.pop("result") for qid, d in per_query.items()}
+    if tr.enabled:
+        stream_span.set(
+            wall_clock=wall, t_decide=t_decide,
+            n_pushdown=sum(d["n_pushdown"] for d in per_query.values()),
+            n_pushback=sum(d["n_pushback"] for d in per_query.values()),
+            real_net_bytes=sum(d["real_net_bytes"]
+                               for d in per_query.values()))
     return StreamRun(
         mode=cfg.mode, wall_clock=wall, t_decide=t_decide,
         per_query=per_query, results=results, sim=sim,

@@ -29,6 +29,7 @@ from repro.core.engine import EngineConfig, PlannedRequest, plan_requests
 from repro.core.executor import compile_push_plan
 from repro.core.plan import PushPlan
 from repro.core.simulator import SimRequest, simulate
+from repro.obs import trace as obs_trace
 from repro.queryproc import operators as ops
 from repro.queryproc.queries import Query
 from repro.queryproc.table import ColumnTable
@@ -59,6 +60,7 @@ def _exec_table_bytes(reqs: List[PlannedRequest],
     """Actually run each request's plan and record (node, out_bytes).
     ``batched`` runs one fused pass per (table, plan) and splits the result
     back per partition — identical bytes to the per-request reference loop."""
+    tr = obs_trace.get_tracer()
     by_table: Dict[str, List[Tuple[int, int]]] = {}
     if executor == engine.EXECUTOR_REFERENCE:
         from repro.core.plan import execute_push_plan
@@ -71,11 +73,17 @@ def _exec_table_bytes(reqs: List[PlannedRequest],
     for r in reqs:
         groups.setdefault((r.table, id(r.plan)), []).append(r)
     for (table, _pid), rs in groups.items():
-        parts, _aux = compile_push_plan(rs[0].plan).execute_batch_parts(
-            [r.part.data for r in rs])
-        for r, res in zip(rs, parts):
-            b = res.nbytes(stored=False) if len(res) else 0
-            by_table.setdefault(table, []).append((r.part.node_id, b))
+        with tr.span("storage_execute", cat="shuffle", table=table,
+                     n_parts=len(rs)) as sp:
+            parts, _aux = compile_push_plan(rs[0].plan).execute_batch_parts(
+                [r.part.data for r in rs])
+            total = 0
+            for r, res in zip(rs, parts):
+                b = res.nbytes(stored=False) if len(res) else 0
+                total += b
+                by_table.setdefault(table, []).append((r.part.node_id, b))
+            if tr.enabled:
+                sp.set(shipped_bytes=int(total))
     return by_table
 
 

@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN, Arbitrator
 from repro.core.cost import RequestCost, StorageResources
+from repro.obs import trace as obs_trace
 
 EPS = 1e-12
 
@@ -141,6 +142,16 @@ class _ForcedArbitrator:
                 else:
                     self.pushed_back += 1
                 out.append((self.q[path].pop(0), path))
+        if out:
+            tr = obs_trace.get_tracer()
+            if tr.enabled:
+                tr.decisions.record_batch(
+                    out, kind="arbitrate",
+                    queue_depth=len(self.q[PUSHDOWN])
+                    + len(self.q[PUSHBACK]),
+                    free_pd=self.free[PUSHDOWN],
+                    free_pb=self.free[PUSHBACK],
+                    pa_aware=False, forced="oracle")
         if self.on_decide is not None:
             for rid, path in out:
                 self.on_decide(rid, path)
@@ -154,6 +165,29 @@ def simulate(requests: List[SimRequest],
              decisions: Optional[Dict[int, str]] = None,
              on_decision: Optional[Callable[[int, str], None]] = None
              ) -> SimResult:
+    tr = obs_trace.get_tracer()
+    with tr.span("arbitrate", mode=mode, n_requests=len(requests)) as sp:
+        result = _simulate(requests, res, mode, num_nodes, decisions,
+                           on_decision)
+        if tr.enabled:
+            # per_request is attached by reference (complete and immutable
+            # once _simulate returns) — the exporters coerce it to JSON at
+            # export time, so the hot path never copies it
+            sp.set(makespan=result.makespan,
+                   sim_net_bytes=float(result.net_bytes),
+                   n_pushdown=result.admitted(),
+                   n_pushback=sum(result.pushed_back_by_query.values()),
+                   decisions=result.per_request)
+    return result
+
+
+def _simulate(requests: List[SimRequest],
+              res: StorageResources,
+              mode: str,
+              num_nodes: Optional[int],
+              decisions: Optional[Dict[int, str]],
+              on_decision: Optional[Callable[[int, str], None]]
+              ) -> SimResult:
     nodes = sorted({r.node_id for r in requests}) if num_nodes is None \
         else list(range(num_nodes))
     forced = {MODE_NO_PUSHDOWN: PUSHBACK, MODE_EAGER: PUSHDOWN}.get(mode)

@@ -1,0 +1,178 @@
+"""Trace exporters: JSONL, Chrome ``trace_event`` (Perfetto), summary table.
+
+- :func:`to_jsonl` / :func:`from_jsonl` — one span per line, lossless
+  round-trip (``from_jsonl`` + :func:`build_tree` reproduce the tracer's
+  own ``tree()``).
+- :func:`to_chrome_trace` — ``{"traceEvents": [...]}`` with complete
+  ("X") events, microsecond timestamps, one Chrome "thread" per real
+  Python thread; loadable in chrome://tracing or https://ui.perfetto.dev.
+- :func:`summary_table` — terse per-query text table (duration, request
+  split, real vs simulated net bytes, s_out estimate accuracy).
+
+Span attributes may hold numpy scalars, tuples, and runtime dataclasses
+(the hot path stores references — e.g. ``execute_split`` attaches its
+``RequestOutcome`` list as-is rather than copying into JSON shapes, so
+tracing never rebuilds data the engine already has); the single JSON
+encoder here coerces them at export time (numpy -> Python scalars,
+tuples -> lists, dataclasses -> dicts, anything else -> ``str``) so
+every exporter stays dependency-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.obs.trace import Span, Tracer
+
+__all__ = ["span_to_dict", "to_jsonl", "from_jsonl", "build_tree",
+           "to_chrome_trace", "summary_table"]
+
+
+def _coerce(obj):
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return dataclasses.asdict(obj)
+    # numpy scalars expose .item(); arrays expose .tolist()
+    item = getattr(obj, "item", None)
+    if item is not None and getattr(obj, "ndim", 0) == 0:
+        return item()
+    tolist = getattr(obj, "tolist", None)
+    if tolist is not None:
+        return tolist()
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    return str(obj)
+
+
+def _dumps(obj) -> str:
+    return json.dumps(obj, default=_coerce)
+
+
+def span_to_dict(span: Span) -> Dict:
+    return {"sid": span.sid, "parent": span.parent, "name": span.name,
+            "cat": span.cat, "t0": span.t0, "dur": span.dur,
+            "tid": span.tid, "attrs": span.attrs}
+
+
+def _spans_of(source: Union[Tracer, Sequence[Span]]) -> List[Span]:
+    if isinstance(source, Tracer):
+        return source.snapshot()
+    return list(source)
+
+
+# ------------------------------------------------------------------ JSONL
+def to_jsonl(source: Union[Tracer, Sequence[Span]], path,
+             meta: Optional[Dict] = None) -> str:
+    """Write one ``{"type": "meta"}`` header line then one span per line."""
+    spans = _spans_of(source)
+    with open(path, "w") as fh:
+        header = {"type": "meta", "format": "repro-trace-v1",
+                  "n_spans": len(spans)}
+        if meta:
+            header.update(meta)
+        fh.write(_dumps(header) + "\n")
+        for sp in spans:
+            rec = span_to_dict(sp)
+            rec["type"] = "span"
+            fh.write(_dumps(rec) + "\n")
+    return str(path)
+
+
+def from_jsonl(path) -> Tuple[Dict, List[Dict]]:
+    """Parse a JSONL trace back into ``(meta, span dicts)``."""
+    meta: Dict = {}
+    spans: List[Dict] = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("type") == "meta":
+                meta = rec
+            elif rec.get("type") == "span":
+                rec.pop("type")
+                spans.append(rec)
+    return meta, spans
+
+
+def build_tree(spans: Sequence[Dict]) -> List[Dict]:
+    """Nest parsed span dicts into the same forest ``Tracer.tree()`` builds."""
+    nodes = {s["sid"]: {"name": s["name"], "cat": s["cat"], "t0": s["t0"],
+                        "dur": s["dur"], "attrs": dict(s["attrs"]),
+                        "children": []}
+             for s in spans}
+    roots: List[Dict] = []
+    for s in spans:
+        pid = s.get("parent")
+        if pid is not None and pid in nodes:
+            nodes[pid]["children"].append(nodes[s["sid"]])
+        else:
+            roots.append(nodes[s["sid"]])
+    return roots
+
+
+# ----------------------------------------------------------- Chrome trace
+def to_chrome_trace(source: Union[Tracer, Sequence[Span]], path,
+                    meta: Optional[Dict] = None) -> str:
+    """Write Chrome ``trace_event`` JSON (complete "X" events, ts/dur µs)."""
+    spans = _spans_of(source)
+    tids = {}
+    events: List[Dict] = [{
+        "ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+        "args": {"name": "repro-engine"},
+    }]
+    for sp in spans:
+        tid = tids.setdefault(sp.tid, len(tids))
+        events.append({
+            "ph": "X",
+            "pid": 0,
+            "tid": tid,
+            "name": sp.name,
+            "cat": sp.cat,
+            "ts": sp.t0 * 1e6,
+            "dur": (sp.dur or 0.0) * 1e6,
+            "args": sp.attrs,
+        })
+    doc = {"traceEvents": events, "displayTimeUnit": "ms",
+           "otherData": meta or {}}
+    with open(path, "w") as fh:
+        fh.write(_dumps(doc))
+    return str(path)
+
+
+# ---------------------------------------------------------- summary table
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    n = float(n)
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GB"
+
+
+def summary_table(source: Union[Tracer, Sequence[Span]]) -> str:
+    """Per-query one-liners from the trace's ``query`` spans."""
+    spans = _spans_of(source)
+    rows = [("query", "ms", "pd", "pb", "net(real)", "net(sim)", "s_out r")]
+    for sp in spans:
+        if sp.name != "query":
+            continue
+        a = sp.attrs
+        ratio = a.get("s_out_est_ratio")
+        rows.append((
+            str(a.get("qid", "?")),
+            f"{(sp.dur or 0.0) * 1e3:.1f}",
+            str(a.get("n_pushdown", "-")),
+            str(a.get("n_pushback", "-")),
+            _fmt_bytes(a.get("real_net_bytes")),
+            _fmt_bytes(a.get("sim_net_bytes")),
+            f"{ratio:.2f}" if isinstance(ratio, float) else "-",
+        ))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)

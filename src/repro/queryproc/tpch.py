@@ -13,7 +13,7 @@ observation). Dates are int days since 1992-01-01.
 from __future__ import annotations
 
 import datetime
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -109,15 +109,23 @@ def generate_tables(sf: float = 1.0, seed: int = 0) -> Dict[str, ColumnTable]:
 
 
 def build_catalog(sf: float = 1.0, seed: int = 0, num_nodes: int = 1,
-                  rows_per_partition: int = 6_000) -> Catalog:
+                  rows_per_partition: int = 6_000,
+                  cluster: Optional[Dict[str, str]] = None) -> Catalog:
     """Partition sizes follow the paper's ~fixed-size objects: the fact
-    table ends up with ~10*sf partitions -> 10*sf pushdown requests/query."""
+    table ends up with ~10*sf partitions -> 10*sf pushdown requests/query.
+
+    ``cluster`` maps table -> cluster key (e.g. ``{"lineitem":
+    "l_orderkey"}``): those tables are sorted by the key with partition
+    boundaries aligned to key runs (``Catalog.add_table(cluster_key=)``),
+    which makes group-by-key partials partition-local and unlocks
+    storage-side HAVING pushdown (Q18)."""
     tables = generate_tables(sf, seed)
     cat = Catalog(num_nodes)
+    cluster = cluster or {}
     for name, data in tables.items():
         # dimension tables split too (4 objects/node) so a single large
         # object transfer never serializes the pushdown phase
         rpp = rows_per_partition if name == "lineitem" else max(
             len(data) // max(1, num_nodes * 4), 1)
-        cat.add_table(name, data, rpp)
+        cat.add_table(name, data, rpp, cluster_key=cluster.get(name))
     return cat

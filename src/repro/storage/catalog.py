@@ -45,23 +45,62 @@ class Catalog:
     def __init__(self, num_nodes: int = 1):
         self.nodes: List[StorageNode] = [StorageNode(i) for i in range(num_nodes)]
         self.tables: Dict[str, List[Partition]] = {}
+        # table -> cluster key: partition boundaries are aligned to runs of
+        # this key, so every key value is wholly inside one partition
+        # (group-locality — what makes storage-side HAVING over partial
+        # aggregates sound; see compiler/splitter.py)
+        self.clustered: Dict[str, str] = {}
 
     @property
     def num_nodes(self) -> int:
         return len(self.nodes)
 
-    def add_table(self, name: str, data: ColumnTable, rows_per_partition: int):
+    def add_table(self, name: str, data: ColumnTable, rows_per_partition: int,
+                  cluster_key: Optional[str] = None):
+        """Shard ``data`` into ~fixed-row partitions.
+
+        With ``cluster_key`` the table is first stably sorted by that key
+        and each partition boundary is pushed forward to the end of the
+        key run it lands in — partitions stay ~rows_per_partition rows but
+        no key value straddles two partitions."""
         parts: List[Partition] = []
-        n = len(data)
-        num_parts = max(1, -(-n // rows_per_partition))
-        for i in range(num_parts):
-            sl = slice(i * rows_per_partition, min(n, (i + 1) * rows_per_partition))
+        if cluster_key is not None:
+            order = np.argsort(np.asarray(data.cols[cluster_key]),
+                               kind="stable")
+            data = ColumnTable({k: np.asarray(v)[order]
+                                for k, v in data.cols.items()})
+            self.clustered[name] = cluster_key
+            sk = np.asarray(data.cols[cluster_key])
+            n = len(data)
+            bounds = [0]
+            while bounds[-1] < n:
+                j = min(n, bounds[-1] + rows_per_partition)
+                if j < n:
+                    # extend to the end of the run of sk[j-1]
+                    j = int(np.searchsorted(sk, sk[j - 1], side="right"))
+                bounds.append(j)
+            slices = [slice(bounds[i], bounds[i + 1])
+                      for i in range(len(bounds) - 1)]
+        else:
+            n = len(data)
+            num_parts = max(1, -(-n // rows_per_partition))
+            slices = [slice(i * rows_per_partition,
+                            min(n, (i + 1) * rows_per_partition))
+                      for i in range(num_parts)]
+        for i, sl in enumerate(slices):
             chunk = ColumnTable({k: v[sl] for k, v in data.cols.items()})
             node = self.nodes[i % self.num_nodes]
             part = Partition(name, i, node.node_id, chunk)
             node.partitions.append(part)
             parts.append(part)
         self.tables[name] = parts
+
+    def group_local(self, table: str, keys) -> bool:
+        """True iff a group-by over ``keys`` cannot straddle partitions —
+        i.e. the table is clustered and its cluster key is one of the
+        group keys."""
+        ck = self.clustered.get(table)
+        return ck is not None and ck in tuple(keys)
 
     def partitions_of(self, table: str) -> List[Partition]:
         return self.tables[table]

@@ -1,0 +1,176 @@
+"""Storage-side HAVING pushdown over partial aggregates (Q18).
+
+Soundness hinges on catalog-proven *group locality*: a merge-monotone
+HAVING filter may only run at the storage layer when the table is
+clustered on a group key — then every group is partition-local, partials
+equal finals, and filtering partials drops no group that would survive
+the merge. Unclustered catalogs must enumerate exactly the seed's
+candidates (no behavior change), and the residual re-applies the filter
+so results stay byte-equal either way.
+"""
+import numpy as np
+import pytest
+
+from repro.compiler import compile as C
+from repro.compiler import splitter, tpch_ir
+from repro.core import engine
+from repro.core.plan import execute_push_plan, plan_signature
+from repro.core.executor import compile_push_plan
+from repro.queryproc import tpch
+from repro.queryproc.expressions import Col
+
+CAT = tpch.build_catalog(sf=1.0, num_nodes=2, rows_per_partition=4_000)
+CCAT = tpch.build_catalog(sf=1.0, num_nodes=2, rows_per_partition=4_000,
+                          cluster={"lineitem": "l_orderkey"})
+
+
+# ------------------------------------------------------ catalog clustering
+def test_clustered_partitions_align_to_key_runs():
+    parts = [p.data for p in CCAT.partitions_of("lineitem")]
+    keys = [p.cols["l_orderkey"] for p in parts]
+    for k in keys:
+        assert np.all(np.diff(k) >= 0)            # sorted within partition
+    for a, b in zip(keys, keys[1:]):
+        assert a[-1] < b[0]                       # no key spans a boundary
+    # same multiset of rows as the unclustered catalog
+    rows_c = sum(len(p) for p in parts)
+    rows_u = sum(len(p.data) for p in CAT.partitions_of("lineitem"))
+    assert rows_c == rows_u
+
+
+def test_group_local_predicate():
+    assert CCAT.group_local("lineitem", ("l_orderkey",))
+    assert CCAT.group_local("lineitem", ("l_orderkey", "l_returnflag"))
+    assert not CCAT.group_local("lineitem", ("l_partkey",))
+    assert not CAT.group_local("lineitem", ("l_orderkey",))
+    assert not CCAT.group_local("orders", ("o_orderkey",))
+
+
+# ----------------------------------------------------- candidate frontiers
+def test_unclustered_candidates_unchanged():
+    sp = splitter.split(tpch_ir.build_ir("q18"))
+    sigs = tuple(plan_signature(p) for p in sp.candidates["lineitem"])
+    assert sigs == ("scan", "scan+agg")
+    assert all(p.having is None for p in sp.candidates["lineitem"])
+
+
+def test_clustered_adds_having_candidate():
+    sp = splitter.split(tpch_ir.build_ir("q18"),
+                        clustered={"lineitem": "l_orderkey"})
+    sigs = tuple(plan_signature(p) for p in sp.candidates["lineitem"])
+    assert sigs == ("scan", "scan+agg", "scan+agg+having")
+    having_plan = sp.candidates["lineitem"][-1]
+    assert having_plan.having is not None
+    assert having_plan.agg is not None
+
+
+def test_wrong_cluster_key_does_not_absorb():
+    sp = splitter.split(tpch_ir.build_ir("q18"),
+                        clustered={"lineitem": "l_partkey"})
+    sigs = tuple(plan_signature(p) for p in sp.candidates["lineitem"])
+    assert sigs == ("scan", "scan+agg")
+
+
+# ----------------------------------------------------------- correctness
+def _sorted_rows(t):
+    cols = sorted(t.columns)
+    order = np.lexsort([t.cols[c] for c in cols])
+    return {c: t.cols[c][order] for c in cols}
+
+
+def assert_results_equal(a, b, ctx=""):
+    assert set(a.columns) == set(b.columns) and len(a) == len(b), ctx
+    ra, rb = _sorted_rows(a), _sorted_rows(b)
+    for c in ra:
+        assert np.allclose(ra[c], rb[c], equal_nan=True), (ctx, c)
+
+
+@pytest.mark.parametrize("mode", ["no_pushdown", "eager", "adaptive",
+                                  "adaptive_pa"])
+def test_q18_having_cut_byte_equal_to_maximal(mode):
+    """Costed compile on the clustered catalog picks the HAVING frontier
+    and still produces the same rows as the maximal (seed) frontier —
+    under every engine mode (pushback replays the having plan too)."""
+    cfg = engine.EngineConfig(mode=mode)
+    cq = C.compile_query_costed("q18", CCAT)
+    (choice,) = [c for c in cq.cut_report if c.table == "lineitem"]
+    assert choice.signatures[choice.chosen] == "scan+agg+having"
+    got = engine.run_query(cq.query, CCAT, cfg).result
+    want = engine.run_query(C.compile_query("q18"), CCAT,
+                            engine.EngineConfig(mode="adaptive")).result
+    assert_results_equal(got, want, mode)
+
+
+def test_q18_unclustered_choice_unchanged():
+    cq = C.compile_query_costed("q18", CAT)
+    (choice,) = [c for c in cq.cut_report if c.table == "lineitem"]
+    assert "having" not in choice.signatures[choice.chosen]
+
+
+def test_every_forced_cut_equal_on_clustered_catalog():
+    """Each enumerated candidate (including the new having cut) executes
+    to the same final rows when forced."""
+    root = tpch_ir.build_ir("q18")
+    clustered = {"lineitem": "l_orderkey"}
+    probe = splitter.split(root, clustered=clustered)
+    n = len(probe.candidates["lineitem"])
+    assert n == 3
+    base = None
+    for k in range(n):
+        cq = C.compile_ir(root, "q18", cuts={"lineitem": k},
+                          clustered=clustered)
+        run = engine.run_query(cq.query, CCAT,
+                               engine.EngineConfig(mode="adaptive"))
+        if base is None:
+            base = run.result
+        else:
+            assert_results_equal(base, run.result, f"cut={k}")
+
+
+def test_having_plan_batched_matches_reference():
+    """The fused batch executor applies the HAVING filter identically to
+    the per-partition reference interpreter."""
+    sp = splitter.split(tpch_ir.build_ir("q18"),
+                        clustered={"lineitem": "l_orderkey"})
+    plan = sp.candidates["lineitem"][-1]
+    assert plan.having is not None
+    parts = [p.data for p in CCAT.partitions_of("lineitem")]
+    want = [execute_push_plan(plan, p)[0] for p in parts]
+    got, _aux = compile_push_plan(plan).execute_batch_parts(parts)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.columns == w.columns
+        for c in g.columns:
+            assert np.array_equal(g.cols[c], w.cols[c]), c
+
+
+def test_having_reduces_estimated_s_out():
+    sp = splitter.split(tpch_ir.build_ir("q18"),
+                        clustered={"lineitem": "l_orderkey"})
+    agg_plan, having_plan = sp.candidates["lineitem"][1:]
+    part = CCAT.partitions_of("lineitem")[0]
+    c_agg = compile_push_plan(agg_plan).estimate_cost(part)
+    c_hav = compile_push_plan(having_plan).estimate_cost(part)
+    assert c_hav.s_out < c_agg.s_out
+    assert c_hav.s_in == c_agg.s_in
+
+
+def test_having_filters_partials_at_storage():
+    """Executed storage-side output really is HAVING-filtered: every
+    shipped partial satisfies the predicate."""
+    sp = splitter.split(tpch_ir.build_ir("q18"),
+                        clustered={"lineitem": "l_orderkey"})
+    plan = sp.candidates["lineitem"][-1]
+    parts = [p.data for p in CCAT.partitions_of("lineitem")]
+    merged = compile_push_plan(plan).execute_batch(parts)
+    assert len(merged) > 0
+    assert np.all(merged.cols["sum_qty"] > 150.0)
+    # and the shipped groups equal the HAVING-filtered global aggregate
+    # (clustered => partition-local groups => partials ARE finals)
+    import collections
+    totals = collections.defaultdict(float)
+    for p in parts:
+        for k, v in zip(p.cols["l_orderkey"], p.cols["l_quantity"]):
+            totals[int(k)] += float(v)
+    want = sorted(k for k, v in totals.items() if v > 150.0)
+    assert sorted(int(k) for k in merged.cols["l_orderkey"]) == want
