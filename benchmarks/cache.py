@@ -1,0 +1,182 @@
+"""Pushed-result cache A/B: warm repeated-query mix vs cold adaptive.
+
+The ``cache`` suite measures what the semantic pushed-result cache
+(``core.result_cache``) buys under repeated-query traffic — the
+FlexPushdownDB-style workload the tier targets:
+
+- **cold** arm: the adaptive engine with no cache runs a storage-heavy
+  query mix end to end (REAL wall-clock, best-of-N, GC paused),
+- **warm** arm: the same mix against a cache pre-filled by one untimed
+  eager pass — every pushdown partition is served from the cache and the
+  storage-side operator work disappears.
+
+Byte-identity of every arm against the uncached eager reference is
+asserted OUTSIDE the timed region, every query. A separate verification
+pass (also untimed) re-runs the warm mix collecting per-query
+``QueryRun``s to compute the hit rate (served partitions / admitted
+pushdown requests) — ``cache_ok`` demands a fully-warm serve.
+
+``run_flip`` is the decision integration check: under starved storage
+compute (``storage_power=0.01``) cold adaptive pushes every Q6 partition
+back; after an eager fill the warm ``plan_requests`` cost hints collapse
+``compute_in`` and arbitration flips all partitions to pushdown, served
+entirely from cache with ``cache_hits == n_admitted``.
+
+Headline lands in ``BENCH_engine.json`` under the ``cache`` suite;
+``benchmarks.perf_guard`` keeps the warm/cold speedup trajectory monotone
+and hard-fails on ``cache_ok`` regressions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.cost import StorageResources
+from repro.core.result_cache import ResultCache
+from repro.queryproc import queries as Q
+
+from benchmarks import common
+
+# storage-heavy, cache-friendly mix (no apply_bitmap plans — those are
+# deliberately uncacheable); the CI perf smoke shares this configuration
+REAL_QUICK_KWARGS = {"qids": ("Q1", "Q6", "Q14"), "repeats": 3, "sf": 2.0}
+QIDS = ("Q1", "Q6", "Q12", "Q14")
+
+
+def _assert_identical(a, b, ctx):
+    assert a.columns == b.columns, (ctx, a.columns, b.columns)
+    for c in a.columns:
+        assert a.cols[c].dtype == b.cols[c].dtype and np.array_equal(
+            a.cols[c], b.cols[c], equal_nan=True), (ctx, c)
+
+
+def run_real(qids=QIDS, repeats: int = 3, sf: float = None,
+             power: float = 0.25) -> dict:
+    sf = sf or common.SF
+    cat = common.catalog(num_nodes=2, sf=sf)
+    qids = tuple(qids)
+    res = StorageResources(storage_power=power)
+    queries = [Q.build_query(qid) for qid in qids]
+    refs = [engine.run_query(q, cat, engine.EngineConfig(mode="eager")).result
+            for q in queries]
+
+    cold_cfg = engine.EngineConfig(res=res, mode="adaptive")
+    cache = ResultCache()
+    warm_cfg = engine.EngineConfig(res=res, mode="adaptive",
+                                   result_cache=cache)
+    # identity of the cold arm, asserted before anything is timed
+    for q, ref in zip(queries, refs):
+        _assert_identical(ref, engine.run_query(q, cat, cold_cfg).result,
+                          ("cold", q.qid))
+    # untimed eager pass fills every partition's entry (cold adaptive may
+    # push back; eager guarantees full coverage for the warm arm)
+    for q in queries:
+        engine.run_query(q, cat, engine.EngineConfig(
+            res=res, mode="eager", result_cache=cache))
+    # untimed warm verification pass: identity + hit accounting
+    hits = admitted = 0
+    for q, ref in zip(queries, refs):
+        r = engine.run_query(q, cat, warm_cfg)
+        _assert_identical(ref, r.result, ("warm", q.qid))
+        hits += r.cache_hits
+        admitted += r.n_admitted
+    hit_rate = hits / max(1, admitted)
+
+    def run_mix(cfg):
+        for q in queries:
+            engine.run_query(q, cat, cfg)
+
+    t_cold = common.best_time(lambda: run_mix(cold_cfg), repeats)
+    t_warm = common.best_time(lambda: run_mix(warm_cfg), repeats)
+
+    flip = run_flip(sf=sf)
+    cache_ok = (hit_rate >= 0.99 and flip["reconciled"]
+                and flip["flipped"] > 0)
+    return {
+        "sf": sf, "power": power, "repeats": repeats, "qids": list(qids),
+        "t_cold_ms": 1e3 * t_cold, "t_warm_ms": 1e3 * t_warm,
+        "total_speedup": t_cold / max(t_warm, 1e-9),
+        "all_identical": True,           # asserted per arm above
+        "warm_hits": hits, "warm_admitted": admitted,
+        "hit_rate": hit_rate, "flip": flip, "cache_ok": cache_ok,
+        "cache_stats": cache.stats(),
+    }
+
+
+def run_flip(sf: float = None) -> dict:
+    """Cold adaptive pushes back; a warm cache flips the same partitions
+    to pushdown, fully served, with hits == admitted."""
+    sf = sf or common.SF
+    cat = common.catalog(num_nodes=2, sf=sf)
+    res = StorageResources(storage_power=0.01)
+    q = Q.build_query("Q6")
+    n_parts = len(engine.plan_requests(q, cat))
+    ref = engine.run_query(q, cat, engine.EngineConfig(mode="eager")).result
+    cache = ResultCache()
+    cold = engine.run_query(q, cat, engine.EngineConfig(
+        res=res, mode="adaptive", result_cache=cache))
+    engine.run_query(q, cat, engine.EngineConfig(
+        res=res, mode="eager", result_cache=cache))
+    warm = engine.run_query(q, cat, engine.EngineConfig(
+        res=res, mode="adaptive", result_cache=cache))
+    _assert_identical(ref, cold.result, "flip-cold")
+    _assert_identical(ref, warm.result, "flip-warm")
+    return {
+        "n_parts": n_parts,
+        "cold_admitted": cold.n_admitted, "warm_admitted": warm.n_admitted,
+        "flipped": warm.n_admitted - cold.n_admitted,
+        "warm_hits": warm.cache_hits,
+        "reconciled": warm.cache_hits == warm.n_admitted,
+    }
+
+
+def run(qids=QIDS, repeats: int = 3, sf: float = None) -> dict:
+    return {"real": run_real(qids=qids, repeats=repeats, sf=sf)}
+
+
+QUICK_KWARGS = dict(REAL_QUICK_KWARGS)
+
+
+def _headline(real: dict) -> dict:
+    return {"sf": real["sf"], "power": real["power"],
+            "total_speedup": round(real["total_speedup"], 3),
+            "t_cold_ms": round(real["t_cold_ms"], 2),
+            "t_warm_ms": round(real["t_warm_ms"], 2),
+            "hit_rate": round(real["hit_rate"], 4),
+            "flipped": real["flip"]["flipped"],
+            "cache_ok": real["cache_ok"],
+            "all_identical": real["all_identical"]}
+
+
+def update_root_bench(out: dict):
+    return common.update_root_bench_real("cache", out, headline_fn=_headline)
+
+
+def render(out: dict) -> str:
+    real = out.get("real", out)
+    f = real["flip"]
+    rows = [["cold adaptive", f'{real["t_cold_ms"]:.1f}', "-", "-"],
+            ["warm adaptive", f'{real["t_warm_ms"]:.1f}',
+             real["warm_hits"], real["warm_admitted"]]]
+    hdr = ["arm", "wall_ms", "hits", "pushdown"]
+    return common.table(rows, hdr) + (
+        f'\ncache (sf={real["sf"]}, power={real["power"]}, '
+        f'mix={",".join(real["qids"])}): warm {real["total_speedup"]:.2f}x '
+        f'over cold, hit rate {100 * real["hit_rate"]:.1f}%, '
+        f'identical={real["all_identical"]}\n'
+        f'decision flip (power=0.01): {f["cold_admitted"]}/{f["n_parts"]} '
+        f'cold pushdown -> {f["warm_admitted"]}/{f["n_parts"]} warm '
+        f'({f["flipped"]} flipped), warm hits {f["warm_hits"]} '
+        f'reconciled={f["reconciled"]}, ok={real["cache_ok"]}')
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real-quick", action="store_true",
+                    help="3-query mix at sf=2 (CI smoke)")
+    args = ap.parse_args()
+    o = run_real(**REAL_QUICK_KWARGS) if args.real_quick else run_real()
+    update_root_bench(o)
+    print(render(o))

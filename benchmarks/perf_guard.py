@@ -8,9 +8,12 @@ compared against full sf=4 local entries) beyond a wall-clock-noise
 tolerance, when any entry recorded a result divergence, when the
 ``runtime`` suite's newest adaptive A/B lost to the worse forced baseline
 (``adaptive_ok``), when the ``correction`` suite's newest feedback
-loop failed to shrink the s_out estimate error (``converged``), or when
+loop failed to shrink the s_out estimate error (``converged``), when
 the ``obs`` suite's newest enabled-tracing overhead measurement blew its
-bound (``obs_overhead_ok`` — the tentpole's <2% promise).
+bound (``obs_overhead_ok`` — the tentpole's <2% promise), or when the
+``cache`` suite's newest warm arm failed its serve contract
+(``cache_ok`` — fully-warm hit rate, warm arbitration flipping
+partitions to pushdown, ``cache_hits`` reconciled with admits).
 
 A suite whose newest entry has **no comparable prior** (prior entries
 exist, but none at the same sf) is a hard failure, not a silent pass:
@@ -28,6 +31,7 @@ after the quick benchmarks:
     PYTHONPATH=src python -m benchmarks.adaptive --real-quick
     PYTHONPATH=src python -m benchmarks.adaptive --correction-quick
     PYTHONPATH=src python -m benchmarks.obs_overhead --quick
+    PYTHONPATH=src python -m benchmarks.cache --real-quick
     PYTHONPATH=src python -m benchmarks.perf_guard
 """
 from __future__ import annotations
@@ -46,8 +50,10 @@ TOLERANCE = 0.85
 # the runtime suite's speedup is adaptive-vs-worse-baseline — structurally
 # ~1.0-1.3 and wall-clock-noisy (thread scheduling on shared runners), so
 # its monotone guard only catches collapses; the hard per-run invariant is
-# ``adaptive_ok`` (adaptive must not lose to the worse forced baseline)
-SUITE_TOLERANCE = {"runtime": 0.60}
+# ``adaptive_ok`` (adaptive must not lose to the worse forced baseline).
+# The cache warm/cold ratio is likewise wall-clock-noisy on shared
+# runners; its hard per-run invariant is ``cache_ok``
+SUITE_TOLERANCE = {"runtime": 0.60, "cache": 0.60}
 
 
 def check(doc: dict, tolerance: float = TOLERANCE
@@ -81,6 +87,17 @@ def check(doc: dict, tolerance: float = TOLERANCE
                 f"{100 * last.get('bound', 0):.0f}% bound "
                 f"({last.get('t_traced_ms')}ms traced vs "
                 f"{last.get('t_untraced_ms')}ms untraced)")
+        if last.get("cache_ok") is False:
+            failures.append(
+                f"{suite}: newest warm-cache arm broke its serve contract "
+                f"(hit rate {last.get('hit_rate')}, "
+                f"{last.get('flipped')} decisions flipped)")
+        hr = last.get("hit_rate")
+        if hr is not None and hr < 0.99:
+            failures.append(
+                f"{suite}: warm hit rate {hr} below the fully-warm bound "
+                "(every pushdown partition of a pre-filled mix must serve "
+                "from cache)")
         if "total_speedup" not in last:
             continue  # not a wall-clock trajectory entry
         tol = min(tolerance, SUITE_TOLERANCE.get(suite, tolerance))

@@ -13,8 +13,9 @@ import time
 import traceback
 
 from benchmarks import (adaptive, bitmap_compute, bitmap_storage, breakdown,
-                        common, compiler_bench, executor_bench, kernels_bench,
-                        network, optimal_gap, pa_aware, roofline, shuffle)
+                        cache, common, compiler_bench, executor_bench,
+                        kernels_bench, network, optimal_gap, pa_aware,
+                        roofline, shuffle)
 
 SUITES = {
     "fig6_adaptive": adaptive,
@@ -29,6 +30,7 @@ SUITES = {
     "roofline": roofline,
     "compiler": compiler_bench,
     "executor": executor_bench,
+    "cache": cache,
 }
 
 
@@ -116,6 +118,15 @@ def check_claims(results: dict) -> list:
               r["all_identical"])
         claim("Executor: >= 2x total wall-clock over per-partition reference",
               r["total_speedup"] >= 2.0)
+    r = results.get("cache")
+    if r:
+        real = r.get("real", r)
+        claim("Cache: warm repeated-query mix >= 2x wall-clock over cold "
+              "adaptive", real["total_speedup"] >= 2.0)
+        claim("Cache: every arm byte-identical to the uncached reference",
+              real["all_identical"])
+        claim("Cache: warm arbitration flips partitions to pushdown with "
+              "hits reconciled", real["cache_ok"])
     return warns
 
 
@@ -140,6 +151,8 @@ def main() -> int:
                           "qids": ("Q1", "Q6", "Q12", "Q14", "Q19")}
             if args.quick and name == "executor":
                 kwargs = executor_bench.QUICK_KWARGS
+            if args.quick and name == "cache":
+                kwargs = cache.QUICK_KWARGS
             out = mod.run(**kwargs)
             results[name] = out
             common.save_report(name, out)

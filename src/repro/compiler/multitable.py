@@ -36,9 +36,11 @@ design-space discussion):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
-from repro.compiler import ir
+import numpy as np
+
+from repro.compiler import ir, pushability
 from repro.core.cost import StorageResources
 from repro.queryproc import expressions as ex
 
@@ -58,30 +60,193 @@ class Lowering:
 
 
 # ------------------------------------------------------------ implication
-def implied_predicate(expr: ex.Expr, owned: Set[str]) -> Optional[ex.Expr]:
+def implied_predicate(expr: ex.Expr, owned: Set[str],
+                      domains: Optional[Dict[str, FrozenSet]] = None
+                      ) -> Optional[ex.Expr]:
     """Strongest predicate over ``owned`` columns implied by ``expr``
     (None when nothing is implied). ``And`` keeps whichever side implies;
     ``Or`` weakens — both branches must imply, else nothing does. A
     column-column compare within one table qualifies; across tables it
-    implies nothing."""
+    implies nothing *on its own* — but when ``domains`` carries the value
+    domain of the far column (derived from a restricted dimension table and
+    propagated over inner equi-joins by :func:`lower`), a cross-table
+    equality translates into an ``In`` over the owned column: Q5's
+    ``c_nationkey == s_nationkey`` under ``s_nationkey ∈ region-2 nations``
+    implies ``In(c_nationkey, region-2 nations)``."""
     if isinstance(expr, ex.And):
-        left = implied_predicate(expr.left, owned)
-        right = implied_predicate(expr.right, owned)
+        left = implied_predicate(expr.left, owned, domains)
+        right = implied_predicate(expr.right, owned, domains)
         if left is None:
             return right
         if right is None:
             return left
         return ex.And(left, right)
     if isinstance(expr, ex.Or):
-        left = implied_predicate(expr.left, owned)
-        right = implied_predicate(expr.right, owned)
+        left = implied_predicate(expr.left, owned, domains)
+        right = implied_predicate(expr.right, owned, domains)
         if left is None or right is None:
             return None
         return ex.Or(left, right)
     cols = ex.columns_of(expr)
     if cols and cols <= owned:
         return expr
+    if (domains and isinstance(expr, ex.Cmp) and expr.op == "=="
+            and isinstance(expr.value, ex.Col)):
+        for mine, other in ((expr.col.name, expr.value.name),
+                            (expr.value.name, expr.col.name)):
+            dom = domains.get(other)
+            if mine in owned and other not in owned and dom:
+                return ex.In(ex.Col(mine), tuple(sorted(dom)))
     return None
+
+
+# ------------------------------------------------------- value domains
+#: tables larger than this are never evaluated for domains (dimension
+#: tables only — the derivation scans the real data once)
+DOMAIN_MAX_ROWS = 4096
+#: a domain wider than this cannot win as an In-filter
+DOMAIN_MAX_VALUES = 512
+
+
+def _chain_domains(node: ir.Node, catalog,
+                   memo: Dict[int, Dict[str, FrozenSet]]
+                   ) -> Dict[str, FrozenSet]:
+    """Per-column value domains of the rows a unary chain over a *small*
+    Scan produces: evaluate the chain's absorbable filters against the
+    base table and collect each base column's surviving distinct values.
+    Only domains *strictly narrower* than the column's full NDV qualify —
+    an ``In`` over every value is vacuous and would pollute frontiers."""
+    if id(node) in memo:
+        return memo[id(node)]
+    out: Dict[str, FrozenSet] = {}
+    preds: List[ex.Expr] = []
+    cur = node
+    ok = True
+    while isinstance(cur, ir.UNARY_TYPES):
+        if isinstance(cur, (ir.Aggregate, ir.TopK)):
+            ok = False  # output rows are groups, not base rows
+            break
+        if isinstance(cur, ir.Filter):
+            if not pushability.filter_absorbable(cur):
+                ok = False
+                break
+            preds.append(cur.predicate)
+        cur = cur.child
+    if ok and isinstance(cur, ir.Scan) and preds:
+        data = catalog.scan_table(cur.table)
+        base = set(data.columns)
+        if (len(data) <= DOMAIN_MAX_ROWS
+                and all(ex.columns_of(p) <= base for p in preds)):
+            mask = np.ones(len(data), dtype=bool)
+            for p in preds:
+                mask &= np.asarray(ex.evaluate(p, data), dtype=bool)
+            for c in data.columns:
+                col = np.asarray(data.cols[c])
+                vals = np.unique(col[mask])
+                if 0 < len(vals) <= DOMAIN_MAX_VALUES \
+                        and len(vals) < len(np.unique(col)):
+                    out[c] = frozenset(v.item() for v in vals)
+    memo[id(node)] = out
+    return out
+
+
+def _equality_atoms(pred: ex.Expr):
+    """Top-level ``a == b`` column-column conjuncts of an And-tree."""
+    if isinstance(pred, ex.And):
+        yield from _equality_atoms(pred.left)
+        yield from _equality_atoms(pred.right)
+    elif (isinstance(pred, ex.Cmp) and pred.op == "=="
+          and isinstance(pred.value, ex.Col)):
+        yield pred.col.name, pred.value.name
+
+
+def _output_facts(root: ir.Node, parents: Dict[int, int], catalog
+                  ) -> Dict[int, Dict[str, FrozenSet]]:
+    """For every node, the column-domain facts that hold for each of its
+    rows *that contributes to the final output* — the license to drop the
+    violating rows early.
+
+    Facts are born at inner equi-joins whose other side is a restricted
+    small-table chain (a row only survives the join if its key matches a
+    surviving dimension value) and at equality filter conjuncts (a
+    surviving row carries equal values, so a domain transfers across the
+    atom). They flow *down* the plan, because a child row that reaches the
+    output does so through its parent — gated by the same soundness rules
+    as the multi-table walk: a shared (DAG) subtree resets (the other
+    consumer sees all rows), Aggregate/TopK/PyOp reset (removed rows fold
+    into surviving outputs), a Map drops facts on columns it shadows, and
+    a SemiJoin's membership side never receives facts (removing its rows
+    flips matches)."""
+    facts_at: Dict[int, Dict[str, FrozenSet]] = {}
+    domains_memo: Dict[int, Dict[str, FrozenSet]] = {}
+
+    def visit(node: ir.Node, facts: Dict[str, FrozenSet]) -> None:
+        if parents.get(id(node), 0) > 1:
+            facts = {}
+        prev = facts_at.get(id(node))
+        if prev is not None:
+            facts = {c: d for c, d in prev.items() if facts.get(c) == d}
+            if facts == prev:
+                return  # fixpoint for this node
+        facts_at[id(node)] = facts
+        if isinstance(node, (ir.Aggregate, ir.TopK, ir.PyOp, ir.Merged)):
+            down: Dict[str, FrozenSet] = {}
+        elif isinstance(node, ir.Map):
+            shadowed = {n for n, _, _ in node.derives}
+            down = {c: d for c, d in facts.items() if c not in shadowed}
+        elif isinstance(node, ir.Filter):
+            down = dict(facts)
+            for a, b in _equality_atoms(node.predicate):
+                if a in down and b not in down:
+                    down[b] = down[a]
+                elif b in down and a not in down:
+                    down[a] = down[b]
+        else:
+            down = facts
+        if isinstance(node, ir.Join):
+            lfacts, rfacts = dict(down), dict(down)
+            dom = _chain_domains(node.right, catalog, domains_memo
+                                 ).get(node.rkey)
+            if dom:
+                lfacts[node.lkey] = (lfacts[node.lkey] & dom
+                                     if node.lkey in lfacts else dom)
+            dom = _chain_domains(node.left, catalog, domains_memo
+                                 ).get(node.lkey)
+            if dom:
+                rfacts[node.rkey] = (rfacts[node.rkey] & dom
+                                     if node.rkey in rfacts else dom)
+            visit(node.left, lfacts)
+            visit(node.right, rfacts)
+            return
+        if isinstance(node, ir.SemiJoin):
+            lfacts = dict(down)
+            if not node.anti:
+                dom = _chain_domains(node.right, catalog, domains_memo
+                                     ).get(node.rkey)
+                if dom:
+                    lfacts[node.lkey] = (lfacts[node.lkey] & dom
+                                         if node.lkey in lfacts else dom)
+            visit(node.left, lfacts)
+            visit(node.right, {})
+            return
+        for child in node.inputs():
+            visit(child, down)
+
+    visit(root, {})
+    # close the facts *at* each Filter node over its own equality atoms —
+    # a row surviving the output passed the filter, so the transfer holds
+    # at the node too (implied_predicate consumes these as `domains`)
+    for node in ir.walk(root):
+        if not isinstance(node, ir.Filter):
+            continue
+        facts = dict(facts_at.get(id(node), {}))
+        for a, b in _equality_atoms(node.predicate):
+            if a in facts and b not in facts:
+                facts[b] = facts[a]
+            elif b in facts and a not in facts:
+                facts[a] = facts[b]
+        facts_at[id(node)] = facts
+    return facts_at
 
 
 # --------------------------------------------------------- soundness walk
@@ -184,9 +349,21 @@ def lower(root: ir.Node, catalog, res: StorageResources,
     owner: Dict[str, str] = {c: t for t, cols in owned_by_table.items()
                              for c in cols}
     parents = _parent_counts(root)
+    facts_at = _output_facts(root, parents, catalog)
 
     implied_by_table: Dict[str, ex.Expr] = {}
+    seen_conjuncts: Dict[str, Set[str]] = {}
     source_by_table: Dict[str, List[str]] = {}
+
+    def _add(table: str, implied: ex.Expr, source: str) -> None:
+        if repr(implied) in seen_conjuncts.setdefault(table, set()):
+            return  # same conjunct from filter- and domain-derivation
+        seen_conjuncts[table].add(repr(implied))
+        prev = implied_by_table.get(table)
+        implied_by_table[table] = (implied if prev is None
+                                   else ex.And(prev, implied))
+        source_by_table.setdefault(table, []).append(source)
+
     for node in ir.walk(root):
         if not isinstance(node, ir.Filter):
             continue
@@ -195,17 +372,35 @@ def lower(root: ir.Node, catalog, res: StorageResources,
         if len(span) < 2:
             continue
         for table in sorted(span):
-            implied = implied_predicate(node.predicate, owned_by_table[table])
+            implied = implied_predicate(node.predicate,
+                                        owned_by_table[table],
+                                        facts_at.get(id(node)))
             if implied is None:
                 continue
             path = _path_to_scan(node.child, table)
             if path is None or not _path_sound(path, pred_cols, parents):
                 continue
-            prev = implied_by_table.get(table)
-            implied_by_table[table] = (implied if prev is None
-                                       else ex.And(prev, implied))
-            source_by_table.setdefault(table, []).append(
-                repr(node.predicate))
+            _add(table, implied, repr(node.predicate))
+
+    # scan-level domain lowerings: a fact that survived the gated descent
+    # all the way to a Scan is directly an implied In-filter on that table
+    # (Q8's region-restricted nation join narrows customer without any
+    # multi-table filter in between). Tables scanned more than once are
+    # skipped — _insert_filters keys by table name, so a fact proven for
+    # one scan instance must not leak onto the other.
+    all_scans = ir.scans(root)
+    scan_count: Dict[str, int] = {}
+    for s in all_scans:
+        scan_count[s.table] = scan_count.get(s.table, 0) + 1
+    for s in all_scans:
+        if scan_count[s.table] > 1:
+            continue
+        facts = facts_at.get(id(s)) or {}
+        for col in sorted(facts):
+            if owner.get(col) != s.table:
+                continue
+            _add(s.table, ex.In(ex.Col(col), tuple(sorted(facts[col]))),
+                 f"domain[{col}]")
     if not implied_by_table:
         return root, []
 

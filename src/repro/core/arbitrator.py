@@ -22,16 +22,49 @@ bytes across repeated runs without any change here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cost import RequestCost, StorageResources
 from repro.obs import trace as obs_trace
+from repro.obs.metrics import Metrics, get_metrics
 
 PUSHDOWN, PUSHBACK = "pushdown", "pushback"
 
 # a live decision hook: called once per request the moment the Arbitrator
 # assigns it a path — the runtime uses it to route (and order) real work
 DecisionHook = Callable[[int, str], None]
+
+
+class MeasuredLoad:
+    """Measured-signal feedback port for the backlog guard (flag-gated via
+    ``EngineConfig.measured_feedback``; default off).
+
+    Instead of the fluid model's own wait queue, the Arbitrator can gauge
+    backlog from the *live* occupancy signals ``runtime.run_stream``
+    publishes every dispatch wave: the ``stream.node{n}.exec_queue`` /
+    ``stream.node{n}.ship_queue`` gauges and ``stream.cores_free`` — the
+    same numbers stamped on ``wave_sample`` trace events. One instance is
+    shared by every node's Arbitrator in a ``simulate()`` call; each
+    ``drain()`` refreshes the snapshot through ``metrics.epoch()`` (delta
+    semantics advance the shared epoch marker, matching how a distributed
+    poller would consume the registry). When a node's gauges have never
+    been published, ``queue_depth`` returns None and the Arbitrator falls
+    back to its fluid queue — the port degrades to exact PR-6 behavior."""
+
+    def __init__(self, metrics: Optional[Metrics] = None):
+        self._m = metrics
+        self._gauges: Dict[str, float] = {}
+
+    def refresh(self) -> None:
+        m = self._m if self._m is not None else get_metrics()
+        self._gauges = dict(m.epoch().get("gauges", {}))
+
+    def queue_depth(self, node_id: int, path: str) -> Optional[float]:
+        kind = "exec" if path == PUSHDOWN else "ship"
+        return self._gauges.get(f"stream.node{node_id}.{kind}_queue")
+
+    def cores_free(self) -> Optional[float]:
+        return self._gauges.get("stream.cores_free")
 
 
 @dataclasses.dataclass
@@ -45,11 +78,15 @@ class Arbitrator:
     def __init__(self, res: StorageResources, pa_aware: bool = False,
                  forced_path: Optional[str] = None,
                  backlog_guard: bool = True,
-                 on_decide: Optional[DecisionHook] = None):
+                 on_decide: Optional[DecisionHook] = None,
+                 measured: Optional[MeasuredLoad] = None,
+                 node_id: int = 0):
         self.res = res
         self.pa_aware = pa_aware
         self.forced_path = forced_path  # "pushdown"/"pushback" for the baselines
         self.on_decide = on_decide      # live callback: (req_id, path)
+        self.measured = measured        # measured-signal backlog source
+        self.node_id = node_id
         # Alg 1 lines 7/10 assign to the SLOWER path whenever the faster
         # pool is full. Verbatim, that turns end-of-queue requests into
         # stragglers (the slower path outlives the fast pool's backlog).
@@ -120,6 +157,8 @@ class Arbitrator:
     def drain(self) -> List[Tuple[int, str]]:
         """Assign queued requests to slots; returns [(req_id, path), ...]."""
         out: List[Tuple[int, str]] = []
+        if self.measured is not None:
+            self.measured.refresh()  # one snapshot per drain batch
         if self.forced_path is not None:
             while self.queue and self._try(self.forced_path):
                 out.append((self.queue.pop(0).req_id, self.forced_path))
@@ -145,7 +184,11 @@ class Arbitrator:
             return True
         slots = self.res.pd_slots if fast == PUSHDOWN else self.res.pb_slots
         t_fast, t_slow = (t_pd, t_pb) if fast == PUSHDOWN else (t_pb, t_pd)
-        backlog = len(self.queue) / max(1, slots) * t_fast
+        depth = (self.measured.queue_depth(self.node_id, fast)
+                 if self.measured is not None else None)
+        if depth is None:
+            depth = len(self.queue)  # fluid fallback (exact prior behavior)
+        backlog = depth / max(1, slots) * t_fast
         return t_slow <= backlog
 
     def _drain_pa(self, out: List[Tuple[int, str]]) -> List[Tuple[int, str]]:

@@ -91,7 +91,7 @@ class RequestCost:
 
 # ------------------------------------------------------ frontier-cut score
 def cut_score(cost: RequestCost, res: StorageResources,
-              has_operator_work: bool) -> float:
+              has_operator_work: bool, cache_hit: bool = False) -> float:
     """Objective the cost-based frontier chooser minimizes per request:
     predicted storage-side operator CPU plus the result-ship time
     (``s_out`` over the per-stream share). The scan term is identical for
@@ -103,8 +103,17 @@ def cut_score(cost: RequestCost, res: StorageResources,
     without running any operator, so it is charged ship time only — that
     is what makes pushing a partial aggregate over a high-NDV group key
     (Q18-style: partials ~ input rows, CPU spent for no reduction) lose to
-    cutting at the scan."""
-    cpu = cost.t_compute(res) if has_operator_work else 0.0
+    cutting at the scan.
+
+    ``cache_hit`` zeroes the CPU term: a warm pushed-result cache entry
+    (core.result_cache) means the storage node ships the cached bytes
+    without re-running the operator chain, so only the ship time remains
+    — pushdown on a warm partition is nearly free. The engine applies the
+    same collapse at request level (``plan_requests`` sets
+    ``compute_in=0`` and the known entry bytes as ``s_out``), which is
+    what flips warm arbitration toward pushdown."""
+    cpu = (cost.t_compute(res)
+           if has_operator_work and not cache_hit else 0.0)
     return cpu + cost.s_out / res.stream_bw
 
 

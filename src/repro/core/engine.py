@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import optimum, runtime
-from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+from repro.core.arbitrator import PUSHBACK, PUSHDOWN, MeasuredLoad
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import get_metrics
 from repro.core.cost import (CardinalityCorrector, RequestCost,
@@ -67,6 +67,19 @@ class EngineConfig:
     # Arbitrator's decisions) toward observed bytes. Purely an estimation
     # knob: results are byte-identical with or without it.
     corrector: Optional[CardinalityCorrector] = None
+    # semantic pushed-result cache (core.result_cache.ResultCache): when
+    # set, storage-side pushdown execution serves/fills it per partition,
+    # and plan_requests probes it so warm partitions arbitrate with
+    # compute_in=0 and the *known* result bytes as s_out — a cache hit
+    # makes pushdown nearly free, flipping warm decisions toward pushdown.
+    # Results stay byte-identical with or without it (the cache's core
+    # contract; tests/test_cache.py).
+    result_cache: Optional[object] = None
+    # arbitrate over *measured* occupancy signals (the stream.* gauges
+    # run_stream publishes every dispatch wave) instead of the fluid
+    # model's own wait queues — see arbitrator.MeasuredLoad. Default off:
+    # the fluid model remains the reference behavior.
+    measured_feedback: bool = False
 
 
 @dataclasses.dataclass
@@ -103,14 +116,20 @@ class QueryRun:
     def t_total(self) -> float:
         return self.t_pushable + self.t_nonpushable
 
+    @property
+    def cache_hits(self) -> int:
+        """Pushdown partitions served by the pushed-result cache."""
+        return sum(1 for o in (self.outcomes or ()) if o.cache)
+
 
 def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
-                  corrector: Optional[CardinalityCorrector] = None
-                  ) -> List[PlannedRequest]:
+                  corrector: Optional[CardinalityCorrector] = None,
+                  cache=None) -> List[PlannedRequest]:
     tr = obs_trace.get_tracer()
     with tr.span("plan_requests", qid=query.qid) as sp:
         out: List[PlannedRequest] = []
         rid = start_id
+        n_warm = 0
         for table, plan in query.plans.items():
             # compile once per (query, table): the cost model's plan-level
             # invariants (accessed columns, selectivity closure) are shared
@@ -120,7 +139,16 @@ def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
             for part in catalog.partitions_of(table):
                 cost = cplan.estimate_cost(part)
                 raw = cost.s_out
-                if corrector is not None:
+                hint = (cache.cost_hint(cplan, part)
+                        if cache is not None else None)
+                if hint is not None:
+                    # warm partition: the pushed result already exists, so
+                    # pushdown pays no storage CPU and ships a *known* byte
+                    # count — the corrector is skipped (nothing estimated)
+                    cost = dataclasses.replace(cost, compute_in=0,
+                                               s_out=max(64, int(hint)))
+                    n_warm += 1
+                elif corrector is not None:
                     cost = corrector.correct(query.qid, table, sig, cost)
                 out.append(PlannedRequest(rid, query.qid, table, part, plan,
                                           cost, s_out_raw=raw))
@@ -128,11 +156,17 @@ def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
         if tr.enabled:
             sp.set(n_requests=len(out), n_tables=len(query.plans),
                    est_s_out=sum(r.cost.s_out for r in out),
+                   n_cache_warm=n_warm,
                    # the corrector's EWMA state *as used* for these
                    # estimates — decision-time provenance in the trace
                    corrector_state=(corrector.state(query.qid)
                                     if corrector is not None else None))
     return out
+
+
+def _measured_of(cfg: EngineConfig) -> Optional[MeasuredLoad]:
+    """The measured-signal port, when the config opts in (default off)."""
+    return MeasuredLoad() if cfg.measured_feedback else None
 
 
 def execute_requests(reqs: List[PlannedRequest],
@@ -190,7 +224,7 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
     tr = obs_trace.get_tracer()
     split = runtime.execute_split(reqs, sim.decisions(), cfg.executor,
                                   cfg.filter_gather_threshold,
-                                  bitmaps=bitmaps)
+                                  bitmaps=bitmaps, cache=cfg.result_cache)
     # the real split IS the simulated split — one decision vector, two uses
     assert split.n_pushdown == sim.admitted(query.qid), \
         (query.qid, split.n_pushdown, sim.admitted(query.qid))
@@ -206,6 +240,9 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
     m.counter("engine.requests.pushdown").inc(split.n_pushdown)
     m.counter("engine.requests.pushback").inc(len(reqs) - split.n_pushdown)
     m.counter("engine.net_bytes.real").inc(split.real_net_bytes)
+    n_hit = sum(1 for o in split.outcomes if o.cache)
+    if n_hit:
+        m.counter("engine.cache_hits").inc(n_hit)
     return QueryRun(
         qid=query.qid, result=result, sim=sim,
         t_pushable=t_pushable, t_nonpushable=t_np, requests=reqs,
@@ -223,10 +260,12 @@ def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
     tr = obs_trace.get_tracer()
     with tr.span("query", qid=query.qid, mode=cfg.mode) as qs:
         reqs = requests if requests is not None \
-            else plan_requests(query, catalog, corrector=cfg.corrector)
+            else plan_requests(query, catalog, corrector=cfg.corrector,
+                               cache=cfg.result_cache)
         sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
                     for r in reqs]
-        sim = simulate(sim_reqs, cfg.res, cfg.mode)
+        sim = simulate(sim_reqs, cfg.res, cfg.mode,
+                       measured=_measured_of(cfg))
         run = _run_decided(query, reqs, sim, cfg,
                            t_pushable=sim.makespan, net_bytes=sim.net_bytes,
                            bitmaps=bitmaps)
@@ -243,6 +282,7 @@ def _set_query_attrs(qs, run: "QueryRun") -> None:
            n_pushdown=run.n_admitted, n_pushback=run.n_pushed_back,
            t_pushable=run.t_pushable, t_nonpushable=run.t_nonpushable,
            s_out_est_ratio=recon.get("s_out_estimate_ratio"),
+           cache_hits=run.cache_hits,
            net_bytes_recon=recon)
 
 
@@ -253,10 +293,12 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     all_reqs: List[PlannedRequest] = []
     for q in queries:
         all_reqs.extend(plan_requests(q, catalog, start_id=len(all_reqs),
-                                      corrector=cfg.corrector))
+                                      corrector=cfg.corrector,
+                                      cache=cfg.result_cache))
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, r.query_id, r.cost)
                 for r in all_reqs]
-    sim = simulate(sim_reqs, cfg.res, cfg.mode)
+    sim = simulate(sim_reqs, cfg.res, cfg.mode,
+                   measured=_measured_of(cfg))
     tr = obs_trace.get_tracer()
     out: Dict[str, QueryRun] = {}
     for q in queries:

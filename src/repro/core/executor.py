@@ -222,47 +222,66 @@ class CompiledPushPlan:
 
     def execute_batch(self, tables: Sequence[ColumnTable],
                       bitmaps: Optional[Sequence[np.ndarray]] = None,
-                      threshold: Optional[float] = None) -> ColumnTable:
+                      threshold: Optional[float] = None,
+                      cache=None, parts: Optional[Sequence] = None
+                      ) -> ColumnTable:
         """All partitions sharing this plan in one vectorized pass.
         Returns the merged table — byte-identical to
         ``ColumnTable.concat([execute_push_plan(plan, t)[0] for t in tables])``.
-        """
+
+        With ``cache`` (a ``core.result_cache.ResultCache``) and ``parts``
+        (the matching catalog ``Partition`` per table), cached partitions
+        are served and *skipped* in the vectorized pass; only the misses
+        run, and their outputs are spliced back in original partition
+        order — byte-identical because the fused pass's per-partition
+        outputs are batch-composition-invariant (pinned by
+        tests/test_executor.py)."""
         out, _, _ = self._run_batch(tables, bitmaps, threshold,
-                                    want_aux=False)
+                                    want_aux=False, cache=cache, parts=parts)
         return out
 
     def execute_batch_aux(self, tables: Sequence[ColumnTable],
                           bitmaps: Optional[Sequence[np.ndarray]] = None,
-                          threshold: Optional[float] = None
+                          threshold: Optional[float] = None,
+                          cache=None, parts: Optional[Sequence] = None
                           ) -> Tuple[ColumnTable, List[Dict]]:
         """(merged table, per-partition aux dicts) — each aux dict is
         byte-identical to ``execute_push_plan(plan, tables[i])[1]``:
         ``bitmap`` (packed uint32 words) for bitmap_only plans,
-        ``shuffle_parts`` + ``position_vector`` for shuffle plans."""
+        ``shuffle_parts`` + ``position_vector`` for shuffle plans. A
+        cache-served partition's aux additionally carries a ``"cache"``
+        marker (``"exact"``/``"containment"``)."""
         out, _, aux = self._run_batch(tables, bitmaps, threshold,
-                                      want_aux=True)
+                                      want_aux=True, cache=cache,
+                                      parts=parts)
         return out, aux
 
     def execute_batch_parts(self, tables: Sequence[ColumnTable],
                             bitmaps: Optional[Sequence[np.ndarray]] = None,
-                            threshold: Optional[float] = None
+                            threshold: Optional[float] = None,
+                            cache=None, parts: Optional[Sequence] = None
                             ) -> Tuple[List[ColumnTable], List[Dict]]:
         """(per-partition result tables, per-partition aux dicts) — each
         entry byte-identical to ``execute_push_plan(plan, tables[i])``. The
         per-partition views slice one fused pass; nothing is re-executed."""
         out, bounds, aux = self._run_batch(tables, bitmaps, threshold,
-                                           want_aux=True)
-        parts = [ColumnTable({c: v[bounds[p]:bounds[p + 1]]
-                              for c, v in out.cols.items()})
-                 for p in range(len(tables))]
-        return parts, aux
+                                           want_aux=True, cache=cache,
+                                           parts=parts)
+        out_parts = [ColumnTable({c: v[bounds[p]:bounds[p + 1]]
+                                  for c, v in out.cols.items()})
+                     for p in range(len(tables))]
+        return out_parts, aux
 
     def _run_batch(self, tables: Sequence[ColumnTable],
                    bitmaps: Optional[Sequence[np.ndarray]],
-                   threshold: Optional[float], want_aux: bool
+                   threshold: Optional[float], want_aux: bool,
+                   cache=None, parts: Optional[Sequence] = None
                    ) -> Tuple[ColumnTable, np.ndarray, List[Dict]]:
         """The fused pass. Returns (merged, per-partition output-row bounds
         (n_parts+1,), per-partition aux dicts)."""
+        if cache is not None and parts is not None \
+                and not self.plan.apply_bitmap:
+            return self._run_batch_cached(tables, threshold, cache, parts)
         plan = self.plan
         assert plan.columns or plan.agg is not None, \
             "plans must declare output columns (the splitter guarantees it)"
@@ -363,6 +382,45 @@ class CompiledPushPlan:
         if want_aux:
             self._emit_aux(out, bounds, masks, aux)
         return out, bounds, aux
+
+    def _run_batch_cached(self, tables: Sequence[ColumnTable],
+                          threshold: Optional[float], cache,
+                          parts: Sequence
+                          ) -> Tuple[ColumnTable, np.ndarray, List[Dict]]:
+        """Serve cached partitions, run the fused pass over the misses
+        only, fill the cache from their bounds-sliced outputs, and splice
+        everything back in original partition order.
+
+        ``merged == concat(per-partition outputs)`` holds for every plan
+        type (the batch path's contract vs the per-partition reference),
+        so the spliced merge is byte-identical to the uncached batch —
+        including when the miss subset runs as its own smaller batch,
+        because per-partition outputs are batch-composition-invariant."""
+        assert len(parts) == len(tables)
+        n = len(tables)
+        res: List[Optional[ColumnTable]] = [None] * n
+        auxs: List[Dict] = [{} for _ in range(n)]
+        miss: List[int] = []
+        for i, part in enumerate(parts):
+            hit = cache.serve(self, part)
+            if hit is None:
+                miss.append(i)
+            else:
+                res[i], auxs[i] = hit[0], hit[1]
+        if miss:
+            sub = [tables[i] for i in miss]
+            out, bounds, aux = self._run_batch(sub, None, threshold,
+                                               want_aux=True)
+            for j, i in enumerate(miss):
+                r = ColumnTable({c: v[bounds[j]:bounds[j + 1]]
+                                 for c, v in out.cols.items()})
+                res[i] = r
+                auxs[i] = aux[j]
+                cache.put(self, parts[i], r, aux[j])
+        merged = ColumnTable.concat(res) if n > 1 else res[0]
+        out_bounds = np.concatenate(
+            [[0], np.cumsum([len(r) for r in res])]).astype(np.int64)
+        return merged, out_bounds, auxs
 
     def _emit_aux(self, out: ColumnTable, bounds: np.ndarray,
                   masks: Optional[List[np.ndarray]], aux: List[Dict]) -> None:

@@ -1,0 +1,366 @@
+"""Semantic pushed-result cache: storage-layer partial results as a
+first-class, cost-aware cache tier.
+
+The paper's adaptive pushdown decides *where* a pushed task runs; under
+repeated-query traffic the bigger win is not re-running it at all. This
+module caches each partition's pushed output — the merged-table slice plus
+its §4.2 aux by-products (packed selection bitmaps, shuffle slices,
+position vectors) — keyed by the partition's identity and a semantic plan
+key, merging the paper's adaptive mechanism with the FlexPushdownDB line
+of caching work (see PAPERS.md).
+
+Keying
+------
+An entry is keyed ``(table, partition index, plan key)`` where the plan
+key is derived from the *semantics* of the ``PushPlan`` (predicate repr,
+output columns, derive closures' bytecode, agg/top-k/shuffle/having
+specs) — two plan objects with equal semantics share entries across
+queries and compiles. Each entry also records the partition's monotone
+``version`` stamp from the storage catalog; append/update bumps the stamp
+and stale entries are evicted lazily at their next lookup, so the cache
+never serves rows derived from overwritten bytes.
+
+Semantic containment
+--------------------
+For pure filter/project(+derive) plans — no agg/top-k/shuffle/bitmap, the
+predicate's columns all present in the output and untouched by derives —
+a cached entry whose predicate A is *looser* than a request's predicate B
+(``expressions.implies(B, A)``) is a superset of the rows B selects, in
+partition order. Re-filtering the cached columns with B's compiled kernel
+then yields exactly the bytes the uncached path produces: subsetting
+commutes with elementwise derives, and filtering a partition-ordered
+superset by B leaves B's rows in the same order. Entries with the same
+key shape but different predicates are indexed together so a tighter
+request can find its looser donors.
+
+Eviction & concurrency
+----------------------
+The cache is byte-budgeted: inserts evict from the LRU end, weighted by
+observed hit counts (among the ``evict_window`` least-recent entries the
+least-hit one goes first), so a once-written-never-read entry cannot
+outlive a hot one merely by being touched recently. A single lock guards
+the index — the wave driver (``runtime.run_stream``) hammers it from
+many threads — while the served arrays themselves are immutable copies,
+so re-filtering for containment happens outside the lock.
+
+Everything is metered through ``obs.metrics``: ``cache.hit`` /
+``cache.hit.containment`` / ``cache.miss`` / ``cache.evict`` /
+``cache.evict.stale`` counters plus ``cache.bytes`` / ``cache.entries``
+gauges. Cost probes (``cost_hint``) are deliberately silent so that
+plan-time probing never masquerades as serving — the acceptance contract
+is ``cache.hit`` == partitions actually skipped by the executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.obs.metrics import Metrics, get_metrics
+from repro.queryproc import expressions as ex
+from repro.queryproc.table import ColumnTable
+from repro.storage.catalog import Partition
+
+DEFAULT_BUDGET_BYTES = 256 << 20
+
+
+# ------------------------------------------------------------- plan keying
+def _fn_key(fn) -> str:
+    """Semantic identity of a derive closure: bytecode + consts + captured
+    cell values (repr'd best-effort). Two lambdas computing the same thing
+    from the same captures key identically even across compiles."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return repr(fn)
+    cells = getattr(fn, "__closure__", None)
+    closure = tuple(repr(c.cell_contents) for c in cells) if cells else ()
+    return f"{code.co_code.hex()}/{code.co_consts!r}/{closure!r}"
+
+
+def plan_cache_key(plan, with_predicate: bool = True) -> str:
+    """The semantic cache key of a PushPlan. With ``with_predicate=False``
+    the predicate slot is blanked — that is the *shape* key under which
+    containment donors with different predicates are indexed together."""
+    return "|".join([
+        plan.table,
+        ",".join(plan.columns),
+        repr(plan.predicate) if with_predicate else "<pred>",
+        ";".join(f"{n}({','.join(ic)})#{_fn_key(fn)}"
+                 for n, ic, fn in plan.derive),
+        repr(plan.agg), repr(plan.top_k), repr(plan.shuffle),
+        f"bm{int(plan.bitmap_only)}ab{int(plan.apply_bitmap)}",
+        repr(plan.having),
+    ])
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKeys:
+    exact: str               # full semantic key
+    shape: Optional[str]     # predicate-blanked key; None = containment-
+    #                          ineligible (see module docstring)
+    cacheable: bool          # apply_bitmap plans depend on an external
+    #                          bitmap, so their outputs are never cached
+
+
+_KEYS_MEMO: "OrderedDict[int, Tuple[object, PlanKeys]]" = OrderedDict()
+_KEYS_CAP = 512
+_KEYS_LOCK = threading.Lock()
+
+
+def plan_keys(plan) -> PlanKeys:
+    """Memoized per plan object (same id-guard idiom as the executor's
+    compile cache)."""
+    with _KEYS_LOCK:
+        hit = _KEYS_MEMO.get(id(plan))
+        if hit is not None and hit[0] is plan:
+            _KEYS_MEMO.move_to_end(id(plan))
+            return hit[1]
+    shape = None
+    if (plan.predicate is not None and plan.agg is None
+            and plan.top_k is None and plan.shuffle is None
+            and not plan.bitmap_only and not plan.apply_bitmap):
+        pred_cols = ex.columns_of(plan.predicate)
+        derived = {n for n, _, _ in plan.derive}
+        if pred_cols <= set(plan.columns) and not (pred_cols & derived):
+            shape = plan_cache_key(plan, with_predicate=False)
+    keys = PlanKeys(exact=plan_cache_key(plan), shape=shape,
+                    cacheable=not plan.apply_bitmap)
+    with _KEYS_LOCK:
+        _KEYS_MEMO[id(plan)] = (plan, keys)
+        while len(_KEYS_MEMO) > _KEYS_CAP:
+            _KEYS_MEMO.popitem(last=False)
+    return keys
+
+
+# ----------------------------------------------------------------- entries
+def _copy_table(t: ColumnTable) -> ColumnTable:
+    # own the bytes: batch results are views into the fused pass's arrays;
+    # caching a view would pin the whole batch allocation
+    return ColumnTable({c: np.array(v, copy=True) for c, v in t.cols.items()})
+
+
+def _copy_aux(aux: Dict) -> Tuple[Dict, int]:
+    out: Dict = {}
+    extra = 0
+    if "bitmap" in aux:
+        out["bitmap"] = np.array(aux["bitmap"], copy=True)
+        extra += int(out["bitmap"].nbytes)
+    if "shuffle_parts" in aux:
+        out["shuffle_parts"] = [_copy_table(p) for p in aux["shuffle_parts"]]
+        extra += sum(int(np.asarray(v).nbytes)
+                     for p in out["shuffle_parts"] for v in p.cols.values())
+    if "position_vector" in aux:
+        out["position_vector"] = np.array(aux["position_vector"], copy=True)
+        extra += int(out["position_vector"].nbytes)
+    return out, extra
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: Tuple[str, int, str]        # (table, partition index, exact key)
+    version: int                     # partition version at fill time
+    result: ColumnTable              # this partition's output slice
+    aux: Dict                        # its aux by-products (owned copies)
+    nbytes: int
+    predicate: Optional[ex.Expr]     # for containment donor checks
+    shape: Optional[str]
+    hits: int = 0
+
+    def ship_bytes(self) -> int:
+        """Same arithmetic as ``runtime.result_bytes``: what serving this
+        entry would put on the wire (the warm ``s_out``)."""
+        n = sum(int(np.asarray(v).nbytes) for v in self.result.cols.values())
+        if "bitmap" in self.aux:
+            n += int(self.aux["bitmap"].nbytes)
+        return max(64, n)
+
+
+class ResultCache:
+    """Thread-safe, byte-budgeted cache of per-(partition, plan) pushed
+    outputs. See the module docstring for semantics."""
+
+    def __init__(self, budget_bytes: int = DEFAULT_BUDGET_BYTES,
+                 evict_window: int = 8,
+                 metrics: Optional[Metrics] = None):
+        self.budget_bytes = int(budget_bytes)
+        self.evict_window = int(evict_window)
+        self._m = metrics  # None -> resolve the live registry per call, so
+        #                    obs.set_metrics() swaps apply to the cache too
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Tuple[str, int, str], CacheEntry]" = \
+            OrderedDict()
+        self._by_shape: Dict[Tuple[str, int, str],
+                             List[Tuple[str, int, str]]] = {}
+        self.bytes = 0
+
+    # ------------------------------------------------------------ plumbing
+    def _metrics(self) -> Metrics:
+        return self._m if self._m is not None else get_metrics()
+
+    def _drop(self, key: Tuple[str, int, str]) -> Optional[CacheEntry]:
+        e = self._entries.pop(key, None)
+        if e is None:
+            return None
+        self.bytes -= e.nbytes
+        if e.shape is not None:
+            sk = (key[0], key[1], e.shape)
+            lst = self._by_shape.get(sk)
+            if lst is not None:
+                try:
+                    lst.remove(key)
+                except ValueError:
+                    pass
+                if not lst:
+                    del self._by_shape[sk]
+        return e
+
+    def _evict_one(self) -> None:
+        """Hit-rate-weighted LRU: among the ``evict_window`` least-recently
+        used entries, evict the least-hit one (ties -> oldest)."""
+        window = []
+        for key, e in self._entries.items():
+            window.append((key, e))
+            if len(window) >= self.evict_window:
+                break
+        victim = min(window, key=lambda kv: kv[1].hits)[0]
+        self._drop(victim)
+
+    def _publish_gauges(self) -> None:
+        m = self._metrics()
+        m.gauge("cache.bytes").set(float(self.bytes))
+        m.gauge("cache.entries").set(float(len(self._entries)))
+
+    # ------------------------------------------------------------- serving
+    def serve(self, cplan, part: Partition
+              ) -> Optional[Tuple[ColumnTable, Dict, str]]:
+        """Try to serve one partition's pushed output for ``cplan``.
+
+        Returns ``(result, aux, kind)`` with kind ``"exact"`` or
+        ``"containment"``, or None on a miss. The returned aux dict carries
+        a ``"cache"`` marker so the runtime's per-request outcomes reconcile
+        exactly with the ``cache.hit`` counter. Counters move only here —
+        ``cost_hint`` probes are silent."""
+        keys = plan_keys(cplan.plan)
+        if not keys.cacheable:
+            return None
+        m = self._metrics()
+        key = (part.table, part.index, keys.exact)
+        donor: Optional[CacheEntry] = None
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and e.version != part.version:
+                self._drop(key)
+                m.counter("cache.evict.stale").inc()
+                self._publish_gauges()
+                e = None
+            if e is not None:
+                self._entries.move_to_end(key)
+                e.hits += 1
+            elif keys.shape is not None:
+                sk = (part.table, part.index, keys.shape)
+                # newest donors first: they survived eviction longest
+                for ck in reversed(self._by_shape.get(sk, ())):
+                    c = self._entries.get(ck)
+                    if c is None:
+                        continue
+                    if c.version != part.version:
+                        self._drop(ck)
+                        m.counter("cache.evict.stale").inc()
+                        self._publish_gauges()
+                        continue
+                    if ck != key and ex.implies(cplan.plan.predicate,
+                                                c.predicate):
+                        donor = c
+                        self._entries.move_to_end(ck)
+                        c.hits += 1
+                        break
+        if e is not None:
+            m.counter("cache.hit").inc()
+            return e.result, dict(e.aux, cache="exact"), "exact"
+        if donor is not None:
+            # the cached looser-predicate superset, re-filtered by the
+            # request's tighter predicate — outside the lock over immutable
+            # copies; byte-identical per the module docstring argument
+            mask = cplan.pred_fn(donor.result.cols)
+            res = ColumnTable({c: v[mask]
+                               for c, v in donor.result.cols.items()})
+            m.counter("cache.hit").inc()
+            m.counter("cache.hit.containment").inc()
+            return res, {"cache": "containment"}, "containment"
+        m.counter("cache.miss").inc()
+        return None
+
+    def put(self, cplan, part: Partition, result: ColumnTable,
+            aux: Dict) -> None:
+        """Install one partition's freshly computed pushed output."""
+        keys = plan_keys(cplan.plan)
+        if not keys.cacheable:
+            return
+        res = _copy_table(result)
+        nbytes = sum(int(np.asarray(v).nbytes) for v in res.cols.values())
+        stored_aux, extra = _copy_aux(aux)
+        nbytes = max(64, nbytes + extra)
+        if nbytes > self.budget_bytes:
+            return  # larger than the whole budget: not worth thrashing for
+        entry = CacheEntry(key=(part.table, part.index, keys.exact),
+                           version=part.version, result=res, aux=stored_aux,
+                           nbytes=nbytes, predicate=cplan.plan.predicate,
+                           shape=keys.shape)
+        n_evicted = 0
+        with self._lock:
+            self._drop(entry.key)  # replace-in-place keeps accounting exact
+            self._entries[entry.key] = entry
+            self.bytes += entry.nbytes
+            if keys.shape is not None:
+                sk = (part.table, part.index, keys.shape)
+                self._by_shape.setdefault(sk, []).append(entry.key)
+            while self.bytes > self.budget_bytes and len(self._entries) > 1:
+                self._evict_one()
+                n_evicted += 1
+            if self.bytes > self.budget_bytes:
+                self._drop(entry.key)
+                n_evicted += 1
+            self._publish_gauges()
+        if n_evicted:
+            self._metrics().counter("cache.evict").inc(n_evicted)
+
+    # ------------------------------------------------------- cost probing
+    def cost_hint(self, cplan, part: Partition) -> Optional[int]:
+        """The bytes a warm serve of ``(cplan, part)`` would ship, or None
+        when cold. Read-only and silent: no counters, no LRU motion — the
+        engine probes every request at plan time (``plan_requests``), and
+        probes must not be mistaken for hits. A containment donor's size is
+        an upper bound on the re-filtered ship size, which keeps the hint
+        conservative for the pushdown-vs-pushback comparison."""
+        keys = plan_keys(cplan.plan)
+        if not keys.cacheable:
+            return None
+        with self._lock:
+            e = self._entries.get((part.table, part.index, keys.exact))
+            if e is not None and e.version == part.version:
+                return e.ship_bytes()
+            if keys.shape is not None:
+                sk = (part.table, part.index, keys.shape)
+                for ck in reversed(self._by_shape.get(sk, ())):
+                    c = self._entries.get(ck)
+                    if (c is not None and c.version == part.version
+                            and ex.implies(cplan.plan.predicate,
+                                           c.predicate)):
+                        return c.ship_bytes()
+        return None
+
+    # ------------------------------------------------------- introspection
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            return {"entries": len(self._entries), "bytes": self.bytes,
+                    "hits": sum(e.hits for e in self._entries.values())}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._by_shape.clear()
+            self.bytes = 0
+            self._publish_gauges()

@@ -67,6 +67,8 @@ class RequestOutcome:
     shipped_bytes: int   # pushdown: actual result(+aux) bytes;
     #                      pushback: stored accessed-column bytes (s_in)
     replayed: bool       # True when the plan ran at the compute layer
+    cache: Optional[str] = None  # "exact" | "containment" when the result
+    #                              was served by the pushed-result cache
 
 
 @dataclasses.dataclass
@@ -105,11 +107,16 @@ def pushback_bytes(cplan: CompiledPushPlan, data: ColumnTable) -> int:
 def _exec_group(cplan: CompiledPushPlan, sub, path: str, executor: str,
                 threshold: Optional[float],
                 bitmaps: Optional[Dict[int, np.ndarray]] = None,
-                shipped: Optional[List[ColumnTable]] = None
-                ) -> List[Tuple[ColumnTable, Dict]]:
+                shipped: Optional[List[ColumnTable]] = None,
+                cache=None) -> List[Tuple[ColumnTable, Dict]]:
     """Execute one same-(table, plan, path) request group. Pushback groups
     run the same compiled plan over raw projections (``shipped`` lets the
     stream driver pass transfer-copied batches instead of in-place views).
+
+    ``cache`` (a ``core.result_cache.ResultCache``) applies to the
+    storage-side batched pushdown path only: pushback replays run at the
+    compute layer over already-shipped bytes (nothing storage-side to
+    save), and the per-partition reference stays the uncached oracle.
     """
     if shipped is not None:
         tabs = shipped
@@ -122,7 +129,12 @@ def _exec_group(cplan: CompiledPushPlan, sub, path: str, executor: str,
         return [execute_push_plan(cplan.plan, t,
                                   None if bms is None else bms[i])
                 for i, t in enumerate(tabs)]
-    parts, aux = cplan.execute_batch_parts(tabs, bms, threshold)
+    cache_parts = ([r.part for r in sub]
+                   if cache is not None and path == PUSHDOWN
+                   and shipped is None else None)
+    parts, aux = cplan.execute_batch_parts(
+        tabs, bms, threshold,
+        cache=cache if cache_parts is not None else None, parts=cache_parts)
     return list(zip(parts, aux))
 
 
@@ -131,7 +143,8 @@ def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
                        bitmaps: Optional[Dict[int, np.ndarray]] = None,
                        shipped: Optional[List[ColumnTable]] = None,
                        parent: Optional[obs_trace.Span] = None,
-                       node: Optional[int] = None
+                       node: Optional[int] = None,
+                       cache=None
                        ) -> Tuple[List[Tuple[ColumnTable, Dict]],
                                   obs_trace.Span]:
     """``_exec_group`` under a span: ``storage_execute`` for pushdown
@@ -146,18 +159,19 @@ def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
     with tr.span(name, parent=parent, table=sub[0].table,
                  n_parts=len(sub), node=node) as sp:
         out = _exec_group(cplan, sub, path, executor, threshold,
-                          bitmaps=bitmaps, shipped=shipped)
+                          bitmaps=bitmaps, shipped=shipped, cache=cache)
         if tr.enabled:
             sp.set(rows_out=int(sum(len(res) for res, _ in out)),
-                   signature=plan_signature(cplan.plan))
+                   signature=plan_signature(cplan.plan),
+                   cache_hits=sum(1 for _res, a in out if a.get("cache")))
     return out, sp
 
 
 def execute_split(reqs, decisions: Dict[int, str],
                   executor: str = EXECUTOR_BATCHED,
                   threshold: Optional[float] = None,
-                  bitmaps: Optional[Dict[int, np.ndarray]] = None
-                  ) -> SplitExecution:
+                  bitmaps: Optional[Dict[int, np.ndarray]] = None,
+                  cache=None) -> SplitExecution:
     """Route every request down its decided path and merge.
 
     ``reqs`` is a list of ``engine.PlannedRequest``; ``decisions`` maps
@@ -184,7 +198,8 @@ def execute_split(reqs, decisions: Dict[int, str],
                 if not sub:
                     continue
                 out, gsp = _exec_group_traced(cplan, sub, path, executor,
-                                              threshold, bitmaps=bitmaps)
+                                              threshold, bitmaps=bitmaps,
+                                              cache=cache)
                 g_bytes = 0
                 for r, (res, aux) in zip(sub, out):
                     per_req[r.req_id] = res
@@ -199,7 +214,8 @@ def execute_split(reqs, decisions: Dict[int, str],
                     g_bytes += b
                     out_by_id[r.req_id] = RequestOutcome(
                         r.req_id, r.table, path, len(res), b,
-                        replayed=(path == PUSHBACK))
+                        replayed=(path == PUSHBACK),
+                        cache=aux.get("cache"))
                 gsp.set(shipped_bytes=int(g_bytes))
         by_table: Dict[str, List[ColumnTable]] = {}
         for r in reqs:
@@ -214,6 +230,7 @@ def execute_split(reqs, decisions: Dict[int, str],
             es.set(n_pushdown=n_pd, n_pushback=n_pb,
                    pushdown_bytes=int(pd_bytes),
                    pushback_bytes=int(pb_bytes),
+                   cache_hits=sum(1 for o in outs if o.cache),
                    outcomes=outs)
     return SplitExecution(merged, outs, n_pd, n_pb, pd_bytes, pb_bytes)
 
@@ -376,10 +393,12 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         keys.append(sq.query.qid if n == 0 else f"{sq.query.qid}#{n}")
     all_reqs: List = []
     reqs_by_key: Dict[str, List] = {}
+    cache = getattr(cfg, "result_cache", None)
     for key, sq in zip(keys, ordered):
         reqs = _engine.plan_requests(sq.query, catalog,
                                      start_id=len(all_reqs),
-                                     corrector=cfg.corrector)
+                                     corrector=cfg.corrector,
+                                     cache=cache)
         for r in reqs:
             r.query_id = key   # one sim/stream identity per stream entry
         reqs_by_key[key] = reqs
@@ -391,7 +410,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
     decision_pos: Dict[int, int] = {}
     sim = simulate(sim_reqs, cfg.res, cfg.mode,
                    on_decision=lambda rid, _path: decision_pos.setdefault(
-                       rid, len(decision_pos)))
+                       rid, len(decision_pos)),
+                   measured=_engine._measured_of(cfg))
     decisions = sim.decisions()
     t_decide = time.perf_counter() - t_plan0
 
@@ -458,7 +478,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
             if path == PUSHDOWN:
                 fut = exec_pools[node].submit(
                     on_core, _exec_group_traced, cplan, sub, path,
-                    cfg.executor, threshold, parent=qspan, node=node)
+                    cfg.executor, threshold, parent=qspan, node=node,
+                    cache=cache)
             else:
                 ship_fut = ship_pools[node].submit(
                     on_core, _ship_traced, cplan,
@@ -477,7 +498,7 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
     def finish_query(key: str, sq: StreamQuery, futs, qspan) -> Dict:
         per_req: Dict[int, ColumnTable] = {}
         outcomes: List[RequestOutcome] = []
-        n_pd = n_pb = 0
+        n_pd = n_pb = n_hit = 0
         pd_b = pb_b = 0
         for (sub, path, cplan), fut in futs:
             out, gsp = fut.result()
@@ -493,9 +514,12 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                     b = pushback_bytes(cplan, r.part.data)
                     pb_b += b
                 g_bytes += b
+                kind = aux.get("cache")
+                if kind:
+                    n_hit += 1
                 outcomes.append(RequestOutcome(
                     r.req_id, r.table, path, len(res), b,
-                    replayed=(path == PUSHBACK)))
+                    replayed=(path == PUSHBACK), cache=kind))
             gsp.set(shipped_bytes=int(g_bytes))
         if cfg.corrector is not None:
             # per-stream-entry feedback: repeated streams converge the
@@ -521,6 +545,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         metrics.counter("stream.requests.pushdown").inc(n_pd)
         metrics.counter("stream.requests.pushback").inc(n_pb)
         metrics.counter("stream.net_bytes.real").inc(pd_b + pb_b)
+        if n_hit:
+            metrics.counter("stream.cache_hits").inc(n_hit)
         metrics.histogram("stream.query_finish_s").observe(finish_s)
         if tr.enabled:
             sim_pb = sum(r.cost.s_in for r in reqs_by_key[key]
@@ -528,11 +554,13 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
             tr.end(qspan, real_net_bytes=int(pd_b + pb_b),
                    sim_net_bytes=int(sim_pd + sim_pb),
                    n_pushdown=n_pd, n_pushback=n_pb,
+                   cache_hits=n_hit,
                    s_out_est_ratio=(sim_pd / pd_b if pd_b else None),
                    finish_s=finish_s)
         return {"result": result,
                 "finish_s": finish_s,
                 "n_pushdown": n_pd, "n_pushback": n_pb,
+                "cache_hits": n_hit,
                 "real_net_bytes": pd_b + pb_b,
                 "s_out_estimate_ratio": (sim_pd / pd_b if pd_b else None),
                 "sim_finish": sim.finish_by_query.get(key)}

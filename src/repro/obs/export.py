@@ -153,15 +153,59 @@ def _fmt_bytes(n) -> str:
     return f"{n:.1f}GB"
 
 
-def summary_table(source: Union[Tracer, Sequence[Span]]) -> str:
-    """Per-query one-liners from the trace's ``query`` spans."""
+def _render(rows: List[Tuple[str, ...]]) -> List[str]:
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return lines
+
+
+def span_attribution(source: Union[Tracer, Sequence[Span]]
+                     ) -> List[Dict]:
+    """Per span-name timing attribution over a whole trace: wall time a
+    span held (*total*) split into *self* time (the span's own work) and
+    *child* time (wall covered by its direct sub-spans). Self-time is
+    where an optimization lands — a span whose total is all child time is
+    just an umbrella. Sorted by self-time, descending."""
     spans = _spans_of(source)
-    rows = [("query", "ms", "pd", "pb", "net(real)", "net(sim)", "s_out r")]
+    child_by_parent: Dict[int, float] = {}
+    for sp in spans:
+        if sp.parent is not None:
+            child_by_parent[sp.parent] = (child_by_parent.get(sp.parent, 0.0)
+                                          + (sp.dur or 0.0))
+    acc: Dict[Tuple[str, str], Dict] = {}
+    for sp in spans:
+        dur = sp.dur or 0.0
+        child = min(dur, child_by_parent.get(sp.sid, 0.0))
+        row = acc.setdefault((sp.name, sp.cat), {
+            "name": sp.name, "cat": sp.cat, "count": 0,
+            "total_s": 0.0, "self_s": 0.0, "child_s": 0.0})
+        row["count"] += 1
+        row["total_s"] += dur
+        row["child_s"] += child
+        row["self_s"] += dur - child
+    return sorted(acc.values(), key=lambda r: -r["self_s"])
+
+
+def summary_table(source: Union[Tracer, Sequence[Span]],
+                  attribution: bool = True) -> str:
+    """Per-query one-liners from the trace's ``query`` spans, followed by
+    the span-level self-vs-child timing attribution (suppressed with
+    ``attribution=False``)."""
+    spans = _spans_of(source)
+    rows = [("query", "ms", "pd", "pb", "net(real)", "net(sim)", "s_out r",
+             "cache")]
     for sp in spans:
         if sp.name != "query":
             continue
         a = sp.attrs
         ratio = a.get("s_out_est_ratio")
+        hits, n_pd = a.get("cache_hits"), a.get("n_pushdown")
+        cache = "-"
+        if isinstance(hits, int) and hits > 0:
+            cache = (f"{hits}/{n_pd}" if isinstance(n_pd, int) and n_pd
+                     else str(hits))
         rows.append((
             str(a.get("qid", "?")),
             f"{(sp.dur or 0.0) * 1e3:.1f}",
@@ -170,9 +214,21 @@ def summary_table(source: Union[Tracer, Sequence[Span]]) -> str:
             _fmt_bytes(a.get("real_net_bytes")),
             _fmt_bytes(a.get("sim_net_bytes")),
             f"{ratio:.2f}" if isinstance(ratio, float) else "-",
+            cache,
         ))
-    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
-    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
-             for r in rows]
-    lines.insert(1, "  ".join("-" * w for w in widths))
+    lines = _render(rows)
+    if attribution:
+        att = span_attribution(spans)
+        if att:
+            arows = [("span", "cat", "n", "total ms", "self ms", "child ms",
+                      "self%")]
+            for r in att:
+                pct = (100.0 * r["self_s"] / r["total_s"]
+                       if r["total_s"] > 0 else 0.0)
+                arows.append((r["name"], r["cat"], str(r["count"]),
+                              f"{r['total_s'] * 1e3:.1f}",
+                              f"{r['self_s'] * 1e3:.1f}",
+                              f"{r['child_s'] * 1e3:.1f}",
+                              f"{pct:.0f}%"))
+            lines += ["", *_render(arows)]
     return "\n".join(lines)

@@ -129,6 +129,79 @@ def compile_expr(expr: Expr) -> Callable[[Dict[str, np.ndarray]], np.ndarray]:
     raise TypeError(expr)
 
 
+def implies(a, b) -> bool:
+    """Conservative syntactic implication check: True means every row
+    satisfying ``a`` also satisfies ``b``; False means "could not prove"
+    (never "definitely not"). ``None`` stands for the vacuous predicate
+    (all rows), so anything implies ``None`` and ``None`` implies only
+    ``None``.
+
+    This is the semantic-containment twin of
+    ``compiler.multitable.implied_predicate``: the same ``And``/``Or``
+    decomposition (an ``And`` antecedent proves through either side, an
+    ``Or`` antecedent must prove through both), grounded in interval /
+    membership arithmetic at the leaves. The storage-layer result cache
+    (``core.result_cache``) uses it to decide when a cached
+    looser-predicate result is a superset that can serve a tighter
+    request after re-filtering."""
+    if b is None:
+        return True
+    if a is None:
+        return False
+    if repr(a) == repr(b):
+        return True
+    if isinstance(b, And):
+        return implies(a, b.left) and implies(a, b.right)
+    if isinstance(a, And):
+        # either conjunct alone proving b suffices (both hold on a's rows)
+        if implies(a.left, b) or implies(a.right, b):
+            return True
+    if isinstance(a, Or):
+        return implies(a.left, b) and implies(a.right, b)
+    if isinstance(b, Or):
+        return implies(a, b.left) or implies(a, b.right)
+    return _atom_implies(a, b)
+
+
+def _atom_implies(a: Expr, b: Expr) -> bool:
+    """Leaf-level implication between two atoms over the *same* column."""
+    if isinstance(a, And) or isinstance(b, And):
+        return False  # composites were handled above; an And here is a's
+        #               unproven conjunct pair reaching a leaf b — give up
+    col_a = a.col.name if isinstance(a, (Cmp, In)) else None
+    col_b = b.col.name if isinstance(b, (Cmp, In)) else None
+    if col_a is None or col_a != col_b:
+        return False
+    # column-column compares carry no interval: repr equality (done) only
+    if (isinstance(a, Cmp) and isinstance(a.value, Col)) or \
+            (isinstance(b, Cmp) and isinstance(b.value, Col)):
+        return False
+    if isinstance(a, In) and isinstance(b, In):
+        return set(a.values) <= set(b.values)
+    if isinstance(a, In) and isinstance(b, Cmp):
+        op = _OPS[b.op]
+        return all(bool(op(v, b.value)) for v in a.values)
+    if isinstance(a, Cmp) and isinstance(b, In):
+        return a.op == "==" and a.value in b.values
+    if isinstance(a, Cmp) and isinstance(b, Cmp):
+        va, vb = a.value, b.value
+        if b.op in ("<", "<="):
+            if a.op == "<" and va <= vb:
+                return True
+            if a.op == "<=" and (va < vb if b.op == "<" else va <= vb):
+                return True
+            return a.op == "==" and bool(_OPS[b.op](va, vb))
+        if b.op in (">", ">="):
+            if a.op == ">" and va >= vb:
+                return True
+            if a.op == ">=" and (va > vb if b.op == ">" else va >= vb):
+                return True
+            return a.op == "==" and bool(_OPS[b.op](va, vb))
+        if b.op == "==":
+            return a.op == "==" and va == vb
+    return False
+
+
 def columns_of(expr: Expr) -> set:
     if isinstance(expr, Cmp):
         if isinstance(expr.value, Col):

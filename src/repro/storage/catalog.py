@@ -25,6 +25,10 @@ class Partition:
     index: int          # partition number within the table
     node_id: int        # storage node that owns it
     data: ColumnTable
+    # monotone version stamp: every append/update bumps it, so any cached
+    # derivation of this partition's bytes (core.result_cache keys entries
+    # by it) can detect staleness without content hashing
+    version: int = 0
 
     def bytes_stored(self, columns: Optional[Sequence[str]] = None) -> int:
         return self.data.nbytes(columns, stored=True)
@@ -94,6 +98,31 @@ class Catalog:
             node.partitions.append(part)
             parts.append(part)
         self.tables[name] = parts
+
+    def append_to_partition(self, table: str, index: int,
+                            rows: ColumnTable) -> Partition:
+        """Append ``rows`` to one partition and bump its version stamp.
+
+        Cached results derived from the old bytes go stale and are evicted
+        lazily on their next lookup (core.result_cache). Callers are
+        responsible for respecting a clustered table's group-locality
+        invariant — appended rows must not introduce cluster-key values
+        owned by another partition."""
+        part = self.tables[table][index]
+        part.data = ColumnTable({
+            c: np.concatenate([np.asarray(v), np.asarray(rows.cols[c])])
+            for c, v in part.data.cols.items()})
+        part.version += 1
+        return part
+
+    def update_partition(self, table: str, index: int,
+                         data: ColumnTable) -> Partition:
+        """Replace one partition's bytes wholesale; bumps the version stamp
+        (same staleness contract as ``append_to_partition``)."""
+        part = self.tables[table][index]
+        part.data = data
+        part.version += 1
+        return part
 
     def group_local(self, table: str, keys) -> bool:
         """True iff a group-by over ``keys`` cannot straddle partitions —

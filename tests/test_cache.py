@@ -1,0 +1,446 @@
+"""Semantic pushed-result cache (core.result_cache): the byte-identity
+contract across all 15 queries and all four arms — cold, warm (exact),
+containment-served, and post-invalidation — plus the cost/decision
+integration (a warm cache flips adaptive arbitration toward pushdown with
+exact metric reconciliation), concurrent stream hammering of hot
+partitions, eviction/keying/probing unit behavior, and the flag-gated
+measured-signal Arbitrator port that rides along in this change."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (breaks the queries<->engine import cycle)
+from repro.core import engine, result_cache, runtime
+from repro.core.arbitrator import PUSHBACK, PUSHDOWN, Arbitrator, MeasuredLoad
+from repro.core.cost import RequestCost, StorageResources, cut_score
+from repro.core.executor import compile_push_plan
+from repro.core.plan import PushPlan
+from repro.core.result_cache import ResultCache, plan_keys
+from repro.obs import metrics as om
+from repro.queryproc import expressions as ex
+from repro.queryproc import queries as Q
+from repro.queryproc import tpch
+from repro.queryproc.expressions import Col, implies
+from repro.queryproc.table import ColumnTable
+
+CAT = tpch.build_catalog(sf=0.5, num_nodes=2, rows_per_partition=2_000)
+# a separate catalog for the invalidation sweep: its partitions are
+# mutated (appended to) test by test, so it must never back the
+# read-only identity sweeps above
+MUT_CAT = tpch.build_catalog(sf=0.5, num_nodes=2, rows_per_partition=2_000)
+
+EAGER = engine.EngineConfig(mode="eager")
+
+
+@pytest.fixture(autouse=True)
+def fresh_metrics():
+    """Every test reads counters from its own registry."""
+    prev = om.get_metrics()
+    m = om.Metrics()
+    om.set_metrics(m)
+    yield m
+    om.set_metrics(prev)
+
+
+def assert_tables_identical(a: ColumnTable, b: ColumnTable, ctx=""):
+    assert a.columns == b.columns, (ctx, a.columns, b.columns)
+    for c in a.columns:
+        x, y = a.cols[c], b.cols[c]
+        assert x.dtype == y.dtype, (ctx, c, x.dtype, y.dtype)
+        assert np.array_equal(x, y, equal_nan=True), (ctx, c)
+
+
+def _cached_cfg(cache, mode="eager", **kw):
+    return engine.EngineConfig(mode=mode, result_cache=cache, **kw)
+
+
+# ------------------------------------------------ cold / warm, all queries
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_cold_then_warm_byte_identical(qid, fresh_metrics):
+    """Cold fills, warm serves — both byte-identical to the uncached run,
+    and the warm run's served-partition count reconciles with the
+    ``cache.hit`` counter (probes are silent, so the counter IS the number
+    of partitions the executor skipped)."""
+    ref = engine.run_query(Q.build_query(qid), CAT, EAGER).result
+    cache = ResultCache()
+    cfg = _cached_cfg(cache)
+    cold = engine.run_query(Q.build_query(qid), CAT, cfg)
+    assert_tables_identical(ref, cold.result, (qid, "cold"))
+    assert cold.cache_hits == 0
+    hits_before = fresh_metrics.counter("cache.hit").value
+    warm = engine.run_query(Q.build_query(qid), CAT, cfg)
+    assert_tables_identical(ref, warm.result, (qid, "warm"))
+    assert warm.cache_hits > 0
+    assert fresh_metrics.counter("cache.hit").value - hits_before \
+        == warm.cache_hits
+
+
+def _tightened(q):
+    """A variant of ``q`` whose containment-eligible plans carry the same
+    predicate tightened by a data-vacuous conjunct (``col >= column min``):
+    strictly tighter syntactically (the donor must be found via
+    ``implies`` + re-filter), identical row set semantically (so the
+    reference result is the original's)."""
+    plans = {}
+    n_eligible = 0
+    for table, plan in q.plans.items():
+        keys = plan_keys(plan)
+        if keys.shape is None:
+            plans[table] = plan
+            continue
+        col = sorted(ex.columns_of(plan.predicate))[0]
+        lo = CAT.scan_table(table).stats()[col].min
+        plans[table] = dataclasses.replace(
+            plan, predicate=ex.And(plan.predicate,
+                                   ex.Cmp(">=", Col(col), lo)))
+        n_eligible += 1
+    return dataclasses.replace(q, plans=plans), n_eligible
+
+
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_containment_served_byte_identical(qid, fresh_metrics):
+    """A tighter-predicate variant is served from the original's cached
+    entries via predicate implication + re-filter, byte-identical to its
+    own uncached run."""
+    q = Q.build_query(qid)
+    variant, n_eligible = _tightened(q)
+    ref = engine.run_query(variant, CAT, EAGER).result
+    cache = ResultCache()
+    cfg = _cached_cfg(cache)
+    engine.run_query(q, CAT, cfg)  # fill with the looser originals
+    got = engine.run_query(variant, CAT, cfg)
+    assert_tables_identical(ref, got.result, (qid, "containment"))
+    contained = fresh_metrics.counter("cache.hit.containment").value
+    if n_eligible:
+        assert contained > 0, (qid, "expected containment serves")
+    else:
+        assert contained == 0
+
+
+def test_containment_refilters_a_real_delta():
+    """Containment with a *non-vacuous* delta: the tighter predicate
+    selects strictly fewer rows than the cached donor, and the re-filtered
+    serve still matches the uncached run bit for bit."""
+    loose = PushPlan("lineitem", ("l_quantity", "l_extendedprice"),
+                     predicate=ex.Cmp("<", Col("l_quantity"), 40))
+    tight = dataclasses.replace(
+        loose, predicate=ex.And(loose.predicate,
+                                ex.Cmp("<", Col("l_quantity"), 20)))
+    cache = ResultCache()
+    cpl_loose, cpl_tight = compile_push_plan(loose), compile_push_plan(tight)
+    m = om.get_metrics()
+    for part in CAT.partitions_of("lineitem"):
+        res, aux = cpl_loose.execute(part.data)
+        cache.put(cpl_loose, part, res, aux)
+        ref, _ = cpl_tight.execute(part.data)
+        served = cache.serve(cpl_tight, part)
+        assert served is not None and served[2] == "containment"
+        assert_tables_identical(ref, served[0], part.index)
+        assert 0 < len(served[0]) < len(res)
+    assert m.counter("cache.hit.containment").value \
+        == len(CAT.partitions_of("lineitem"))
+
+
+# ----------------------------------------------------------- invalidation
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_append_invalidates_never_serves_stale(qid, fresh_metrics):
+    """Version-stamped invalidation: after an append to a partition the
+    cache must not serve its pre-mutation rows — the post-mutation cached
+    run equals a fresh uncached run on the mutated catalog."""
+    q = Q.build_query(qid)
+    cache = ResultCache()
+    cfg = _cached_cfg(cache)
+    engine.run_query(q, MUT_CAT, cfg)  # fill at the current versions
+    table = sorted(q.plans)[0]
+    part = MUT_CAT.tables[table][0]
+    v0 = part.version
+    last_row = ColumnTable({c: np.asarray(v)[-1:]
+                            for c, v in part.data.cols.items()})
+    MUT_CAT.append_to_partition(table, 0, last_row)
+    assert part.version == v0 + 1
+    ref = engine.run_query(Q.build_query(qid), MUT_CAT, EAGER).result
+    got = engine.run_query(Q.build_query(qid), MUT_CAT, cfg)
+    assert_tables_identical(ref, got.result, (qid, "post-append"))
+    assert fresh_metrics.counter("cache.evict.stale").value >= 1
+    # and the refreshed entry serves the *new* bytes afterwards
+    again = engine.run_query(Q.build_query(qid), MUT_CAT, cfg)
+    assert_tables_identical(ref, again.result, (qid, "refilled"))
+
+
+def test_update_partition_bumps_version():
+    cat = tpch.build_catalog(sf=0.1, num_nodes=1, rows_per_partition=2_000)
+    part = cat.tables["nation"][0]
+    v0 = part.version
+    cat.update_partition("nation", 0, part.data)
+    assert cat.tables["nation"][0].version == v0 + 1
+
+
+# ------------------------------------------------- decision-flip (cost)
+def test_warm_cache_flips_adaptive_decisions_to_pushdown(fresh_metrics):
+    """The acceptance scenario: under starved storage compute
+    (storage_power=0.01) cold adaptive pushes everything back; once the
+    cache is warm, plan_requests collapses compute_in to 0 with the known
+    entry bytes as s_out, and adaptive flips every partition to pushdown —
+    served entirely from cache, byte-identical, with
+    ``cache.hit == engine.cache_hits == partitions skipped``."""
+    res = StorageResources(storage_power=0.01)
+    q = Q.build_query("Q6")
+    n_parts = len(engine.plan_requests(q, CAT))
+    ref = engine.run_query(q, CAT, EAGER).result
+
+    cache = ResultCache()
+    cold = engine.run_query(Q.build_query("Q6"), CAT,
+                            _cached_cfg(cache, mode="adaptive", res=res))
+    assert cold.n_admitted == 0 and cold.n_pushed_back == n_parts
+    assert_tables_identical(ref, cold.result, "cold-adaptive")
+
+    fill = engine.run_query(Q.build_query("Q6"), CAT,
+                            _cached_cfg(cache, mode="eager", res=res))
+    assert fill.n_admitted == n_parts
+    assert_tables_identical(ref, fill.result, "eager-fill")
+
+    m = om.get_metrics()
+    hits0 = m.counter("cache.hit").value
+    warm = engine.run_query(Q.build_query("Q6"), CAT,
+                            _cached_cfg(cache, mode="adaptive", res=res))
+    assert warm.n_admitted == n_parts and warm.n_pushed_back == 0
+    assert warm.cache_hits == n_parts
+    assert_tables_identical(ref, warm.result, "warm-adaptive")
+    assert m.counter("cache.hit").value - hits0 == n_parts
+    assert m.counter("engine.cache_hits").value >= n_parts
+
+
+def test_cut_score_cache_hit_zeroes_cpu_term():
+    res = StorageResources()
+    cost = RequestCost(s_in=1_000_000, s_out=10_000, compute_in=1_000_000)
+    full = cut_score(cost, res, has_operator_work=True)
+    warm = cut_score(cost, res, has_operator_work=True, cache_hit=True)
+    assert warm == pytest.approx(cost.s_out / res.stream_bw)
+    assert warm < full
+
+
+def test_cost_hint_probe_is_silent(fresh_metrics):
+    """plan-time probing must not masquerade as serving: cost_hint moves
+    no counters, so cache.hit stays equal to partitions actually skipped."""
+    plan = PushPlan("nation", ("n_nationkey",),
+                    predicate=ex.Cmp("<", Col("n_nationkey"), 20))
+    cplan = compile_push_plan(plan)
+    cache = ResultCache()
+    part = CAT.partitions_of("nation")[0]
+    assert cache.cost_hint(cplan, part) is None  # cold probe
+    res, aux = cplan.execute(part.data)
+    cache.put(cplan, part, res, aux)
+    m = om.get_metrics()
+    before = {n: m.counter(f"cache.{n}").value
+              for n in ("hit", "miss", "evict", "evict.stale")}
+    hint = cache.cost_hint(cplan, part)
+    assert hint is not None and hint >= 64
+    after = {n: m.counter(f"cache.{n}").value
+             for n in ("hit", "miss", "evict", "evict.stale")}
+    assert before == after
+
+
+# ------------------------------------------------------ concurrent stream
+def test_concurrent_stream_hammers_hot_partitions(fresh_metrics):
+    """Eight simultaneous instances of the same query share one cache from
+    many worker threads: first wave races fills against serves, second
+    wave is fully warm — every instance byte-identical to the solo run,
+    and the warm wave's serves reconcile with its pushdown count."""
+    solo = engine.run_query(Q.build_query("Q6"), CAT, EAGER).result
+    cache = ResultCache()
+    cfg = _cached_cfg(cache, mode="eager")
+    stream = [runtime.StreamQuery(Q.build_query("Q6"), arrival=0.0)
+              for _ in range(8)]
+    first = runtime.run_stream(stream, CAT, cfg)
+    for key, res in first.results.items():
+        assert_tables_identical(solo, res, ("first", key))
+    m = om.get_metrics()
+    hits0 = m.counter("cache.hit").value
+    second = runtime.run_stream(stream, CAT, cfg)
+    for key, res in second.results.items():
+        assert_tables_identical(solo, res, ("second", key))
+    warm_hits = sum(pq["cache_hits"] for pq in second.per_query.values())
+    assert warm_hits == second.n_pushdown  # fully warm: every request served
+    assert m.counter("cache.hit").value - hits0 == warm_hits
+    assert m.counter("stream.cache_hits").value >= warm_hits
+
+
+# ------------------------------------------------------------ unit: keying
+def test_plan_keys_eligibility():
+    pred = ex.Cmp("<", Col("l_quantity"), 30)
+    base = PushPlan("lineitem", ("l_quantity", "l_tax"), predicate=pred)
+    assert plan_keys(base).shape is not None
+    assert plan_keys(base).cacheable
+    # no predicate: nothing to contain
+    assert plan_keys(PushPlan("lineitem", ("l_quantity",))).shape is None
+    # agg / top_k / shuffle / bitmap plans never containment-serve
+    assert plan_keys(dataclasses.replace(
+        base, agg=((), (("n", "count", "l_quantity"),)))).shape is None
+    assert plan_keys(dataclasses.replace(
+        base, top_k=("l_tax", 5, False))).shape is None
+    assert plan_keys(dataclasses.replace(base, bitmap_only=True)).shape \
+        is None
+    # predicate column missing from the output: the re-filter cannot run
+    assert plan_keys(PushPlan("lineitem", ("l_tax",),
+                              predicate=pred)).shape is None
+    # derive shadowing a predicate column: cached column != base column
+    shadow = dataclasses.replace(
+        base, derive=(("l_quantity", ("l_tax",), lambda t: t * 2.0),))
+    assert plan_keys(shadow).shape is None
+    # apply_bitmap output depends on an external bitmap: never cacheable
+    ab = dataclasses.replace(base, apply_bitmap=True)
+    assert not plan_keys(ab).cacheable
+
+
+def test_plan_key_is_semantic_across_objects():
+    """Two equal-semantics plan objects share one key (cross-query reuse);
+    different constants key apart."""
+    p1 = PushPlan("lineitem", ("l_quantity",),
+                  predicate=ex.Cmp("<", Col("l_quantity"), 30),
+                  derive=(("d", ("l_quantity",), lambda v: v * 2.0),))
+    p2 = PushPlan("lineitem", ("l_quantity",),
+                  predicate=ex.Cmp("<", Col("l_quantity"), 30),
+                  derive=(("d", ("l_quantity",), lambda v: v * 2.0),))
+    p3 = dataclasses.replace(
+        p2, derive=(("d", ("l_quantity",), lambda v: v * 3.0),))
+    assert result_cache.plan_cache_key(p1) == result_cache.plan_cache_key(p2)
+    assert result_cache.plan_cache_key(p1) != result_cache.plan_cache_key(p3)
+
+
+# --------------------------------------------------------- unit: eviction
+def test_budget_eviction_is_hit_weighted(fresh_metrics):
+    plan = PushPlan("lineitem", ("l_quantity",),
+                    predicate=ex.Cmp("<", Col("l_quantity"), 100))
+    cplan = compile_push_plan(plan)
+    parts = CAT.partitions_of("lineitem")[:3]
+    outs = [cplan.execute(p.data) for p in parts]
+    one = sum(int(np.asarray(v).nbytes) for v in outs[0][0].cols.values())
+    cache = ResultCache(budget_bytes=int(one * 2.5))  # room for two entries
+    for p, (res, aux) in zip(parts[:2], outs[:2]):
+        cache.put(cplan, p, res, aux)
+    for _ in range(3):  # make partition 0 hot
+        assert cache.serve(cplan, parts[0]) is not None
+    cache.put(cplan, parts[2], *outs[2])
+    assert cache.bytes <= cache.budget_bytes
+    m = om.get_metrics()
+    assert m.counter("cache.evict").value >= 1
+    # the cold entry (partition 1) went first; the hot one survived
+    assert cache.serve(cplan, parts[0]) is not None
+    assert cache.serve(cplan, parts[1]) is None
+
+
+def test_oversized_entry_is_not_cached():
+    plan = PushPlan("lineitem", ("l_quantity",))
+    cplan = compile_push_plan(plan)
+    part = CAT.partitions_of("lineitem")[0]
+    cache = ResultCache(budget_bytes=128)
+    res, aux = cplan.execute(part.data)
+    cache.put(cplan, part, res, aux)
+    assert cache.stats()["entries"] == 0 and cache.bytes == 0
+
+
+# ------------------------------------------------------- unit: implication
+def test_implies_truth_table():
+    x, y = Col("x"), Col("y")
+    lt30, lt40 = ex.Cmp("<", x, 30), ex.Cmp("<", x, 40)
+    assert implies(lt30, lt40) and not implies(lt40, lt30)
+    assert implies(ex.Cmp("<=", x, 30), lt40)
+    assert not implies(ex.Cmp("<=", x, 40), lt40)      # boundary strictness
+    assert implies(ex.Cmp(">", x, 40), ex.Cmp(">=", x, 40))
+    assert implies(ex.Cmp("==", x, 7), ex.In(x, (5, 7)))
+    assert not implies(ex.Cmp("==", x, 8), ex.In(x, (5, 7)))
+    assert implies(ex.In(x, (5, 7)), ex.In(x, (5, 7, 9)))
+    assert not implies(ex.In(x, (5, 11)), ex.In(x, (5, 7, 9)))
+    assert implies(ex.In(x, (5, 7)), ex.Cmp("<", x, 8))
+    # conjunction / disjunction structure
+    assert implies(ex.And(lt30, ex.Cmp(">", y, 0)), lt40)
+    assert implies(lt30, ex.Or(lt40, ex.Cmp(">", y, 0)))
+    assert implies(ex.Or(lt30, ex.Cmp("<", x, 20)), lt40)
+    assert not implies(ex.Or(lt30, ex.Cmp("<", y, 20)), lt40)
+    # different columns never imply
+    assert not implies(ex.Cmp("<", y, 10), lt40)
+    # vacuous (absent) predicates: None = select-everything
+    assert implies(lt30, None)
+    assert not implies(None, lt30)
+    assert implies(None, None)
+
+
+# --------------------------------------- measured-signal Arbitrator port
+def test_measured_load_reads_wave_gauges(fresh_metrics):
+    m = om.get_metrics()
+    m.gauge("stream.node0.exec_queue").set(5.0)
+    m.gauge("stream.node0.ship_queue").set(2.0)
+    m.gauge("stream.cores_free").set(3.0)
+    ml = MeasuredLoad()
+    ml.refresh()
+    assert ml.queue_depth(0, PUSHDOWN) == 5.0
+    assert ml.queue_depth(0, PUSHBACK) == 2.0
+    assert ml.cores_free() == 3.0
+    assert ml.queue_depth(1, PUSHDOWN) is None  # never published -> fluid
+
+
+def test_measured_backlog_guard_uses_gauge_depth(fresh_metrics):
+    """With a deep measured exec backlog the guard admits spill to the
+    slower path; with the gauge absent it falls back to the fluid queue
+    (just this request), so the same request stays queued.
+
+    pushdown is the fast path here: t_pd(no scan) ~2ms vs t_pb 8ms; with
+    the fast pool saturated, spilling to pushback is worth it only if the
+    fast pool's backlog exceeds 8ms of work."""
+    res = StorageResources(cores=1, net_streams=1)
+    cost = RequestCost(s_in=10_000_000, s_out=1_000_000,
+                       compute_in=1_000_000)
+
+    def drained_paths(measured):
+        arb = Arbitrator(res, measured=measured, node_id=0)
+        arb.free_pd = 0  # fast pool saturated
+        return [path for _rid, path in arb.submit(0, cost)]
+
+    assert drained_paths(None) == []  # fluid: no backlog -> hold for fast
+    m = om.get_metrics()
+    m.gauge("stream.node0.exec_queue").set(64.0)
+    measured = MeasuredLoad()
+    assert drained_paths(measured) == [PUSHBACK]  # measured backlog: spill
+
+
+def test_measured_feedback_flag_is_off_by_default_and_identical():
+    assert engine.EngineConfig().measured_feedback is False
+    q = Q.build_query("Q12")
+    base = engine.run_query(q, CAT, engine.EngineConfig(mode="adaptive"))
+    port = engine.run_query(
+        Q.build_query("Q12"), CAT,
+        engine.EngineConfig(mode="adaptive", measured_feedback=True))
+    assert_tables_identical(base.result, port.result, "measured-port")
+
+
+# ----------------------------------------------------- thread-safety smoke
+def test_cache_threadsafe_under_direct_hammering():
+    """Raw serve/put races on one hot partition from 8 threads: no
+    corruption, every serve returns the exact bytes."""
+    plan = PushPlan("lineitem", ("l_quantity",),
+                    predicate=ex.Cmp("<", Col("l_quantity"), 50))
+    cplan = compile_push_plan(plan)
+    part = CAT.partitions_of("lineitem")[0]
+    ref, aux = cplan.execute(part.data)
+    cache = ResultCache()
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(50):
+                got = cache.serve(cplan, part)
+                if got is None:
+                    cache.put(cplan, part, ref, aux)
+                else:
+                    assert_tables_identical(ref, got[0], "hammer")
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors

@@ -41,6 +41,7 @@ from repro.compiler import (compile_ir, compile_query_costed,
                             tpch_ir)
 from repro.core import engine
 from repro.core.cost import CardinalityCorrector, StorageResources, cut_score
+from repro.queryproc import expressions as ex
 from repro.queryproc import queries as Q
 from repro.queryproc import tpch
 
@@ -219,12 +220,29 @@ COSTED_GOLDEN = {
     # test_corrected_chooser_* below)
     "Q4": {"lineitem": "scan", "orders": "scan+filter"},
     # 25-row dimension: running the filter at storage costs more CPU than
-    # the handful of saved bytes
-    "Q5": {"customer": "scan", "lineitem": "scan+derive", "nation": "scan",
-           "orders": "scan+filter", "supplier": "scan"},
-    "Q8": {"customer": "scan", "lineitem": "scan+derive", "nation": "scan",
-           "orders": "scan+filter", "part": "scan+filter",
-           "supplier": "scan"},
+    # the handful of saved bytes — nation itself stays a bare scan. But the
+    # region restriction's *value domain* (n_nationkey ∈ region-2 nations)
+    # propagates over the join edge and the c_nationkey == s_nationkey
+    # equality into In-filters on customer and supplier (multitable
+    # domain derivation), so both now push a filter stage
+    "Q5": {"customer": "scan+filter", "lineitem": "scan+derive",
+           "nation": "scan", "orders": "scan+filter",
+           "supplier": "scan+filter"},
+    # same derivation: region-1 nations narrow customer via the
+    # c_nationkey = n_nationkey join; the p_type-restricted part keys
+    # narrow lineitem (sideways information passing as an In-list)
+    "Q8": {"customer": "scan+filter", "lineitem": "scan+filter+derive",
+           "nation": "scan", "orders": "scan+filter",
+           "part": "scan+filter", "supplier": "scan"},
+    # customer's mktsegment survivors narrow orders by o_custkey (the
+    # signature is unchanged — the In joins o_orderdate as a conjunct —
+    # but pinning it here keeps Q3 in the bitwise-identity sweep)
+    "Q3": {"customer": "scan+filter", "lineitem": "scan+filter+derive",
+           "orders": "scan+filter"},
+    # the brand/container-filtered part keys narrow lineitem at its scan;
+    # born at the shared join itself, so both consumers (the avg_qty
+    # aggregate and the rejoin) still see identical rows
+    "Q17": {"lineitem": "scan+filter", "part": "scan+filter"},
     # multi-table two-nation OR lowered onto both sides as conjuncts
     "Q7": {"customer": "scan+filter", "lineitem": "scan+filter+derive",
            "orders": "scan", "supplier": "scan+filter"},
@@ -330,12 +348,18 @@ def test_lowering_soundness_walk_blocks_unsafe_paths():
 
 
 def test_lowering_preserves_q17_shared_subtree():
-    """Q17's filter references a derived column through a shared join —
-    nothing may be lowered."""
+    """Q17's qty_thresh filter references a derived column through a shared
+    join — the multi-table walk must lower nothing from it. The *domain*
+    derivation still narrows lineitem: the In over the filtered part keys
+    is born at the shared join itself (rows outside it produce no join
+    output), so it is sound below the share point."""
     root = tpch_ir.build_ir("Q17")
     root2, lows = multitable.lower(root, CAT, StorageResources())
-    assert lows == []
-    assert root2 is root
+    assert [lw.table for lw in lows] == ["lineitem"]
+    assert lows[0].source == "domain[l_partkey]"
+    assert isinstance(lows[0].predicate, ex.In)
+    assert lows[0].predicate.col.name == "l_partkey"
+    assert root2 is not root
 
 
 def test_bitmap_lowered_frontier_ships_exchange_verdicts():
