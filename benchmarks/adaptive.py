@@ -41,6 +41,7 @@ REAL_QUICK_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q14"), "repeats": 3,
                      "sf": 2.0}
 CORRECTION_QUICK_KWARGS = {"qids": ("Q1", "Q4", "Q14", "Q18", "Q19"),
                            "rounds": 4, "sf": 2.0}
+CHAOS_QUICK_KWARGS = {"sf": 1.0, "seed": 2026}
 
 
 def run(powers=common.POWERS, qids=None) -> dict:
@@ -83,6 +84,8 @@ def run(powers=common.POWERS, qids=None) -> dict:
     out["real"] = run_real(qids=qids if qids != Q.QUERY_IDS else None)
     # online-correction A/B (cost-calibrated frontier loop)
     out["correction"] = run_correction()
+    # fault-tolerance A/B (recovery vs fail-to-error vs blanket pushback)
+    out["chaos"] = run_chaos(**CHAOS_QUICK_KWARGS)
     return out
 
 
@@ -234,6 +237,215 @@ def run_trace_smoke(qids=None, sf: float = 1.0, power: float = 0.375,
             "real_net_bytes": run.real_net_bytes,
             "reconciled_exactly": True, "artifacts": paths,
             "summary": summary}
+
+
+# ------------------------------------------ chaos A/B (fault tolerance)
+# The fleet failure model: a ~10% fleet-wide uncorrelated transient /
+# timeout rate, plus one *degraded node* (node 0) crashing half of its
+# storage requests. Real outages are sticky per machine — and an i.i.d.
+# 10% essentially never fails 3 retries in a row, so the correlated
+# component is what actually exercises exhaustion -> demotion (and kills
+# the fail-to-error baseline's queries). The fault domain is the storage
+# NODE, not the pushdown operator: a degraded node fails raw-projection
+# reads exactly like pushdown executes, so blanket no-pushdown does not
+# dodge the outage — it just pays ship-and-replay on top of the same
+# retries. Only the local-replay fallback (compute-side, after pushback
+# exhaustion) sits outside the fault domain.
+CHAOS_SPEC = "node0.crash:0.5,transient:0.06,timeout:0.04"
+CHAOS_FAILURE_RATE = 0.10       # the fleet-wide (uncorrelated) component
+CHAOS_MAX_RESTARTS = 50
+
+
+def _chaos_plans(qids, seed: int):
+    """One pinned-schedule plan per query (seed offset by position): each
+    query's injections are independent of how many times its *neighbors*
+    restarted, so every arm rehearses the same per-query schedule."""
+    from repro.core.faults import FaultPlan
+    return {qid: FaultPlan.from_spec(CHAOS_SPEC, seed=seed + i)
+            for i, qid in enumerate(qids)}
+
+
+def run_chaos(qids=None, sf: float = None, seed: int = 2026,
+              power: float = 1.0, wave_gap: float = 0.005) -> dict:
+    """Fault-tolerance A/B under ~10% storage failure, sf=1 query mix.
+
+    Four arms over identical pinned per-query fault schedules:
+
+    - ``clean``          — adaptive, no faults (reference results/times)
+    - ``recovery``       — adaptive + retry/deadline + breaker, exhausted
+      groups demoted to pushback: every query must complete byte-identical
+      to clean (``recovered_rate`` == 1.0)
+    - ``fail_to_error``  — same faults, ``demote_on_exhaust=False``: an
+      exhausted group aborts the query, which restarts from scratch under
+      the next deterministic schedule (epoch bump) until it completes —
+      the recovery-at-query-granularity baseline
+    - ``no_pushdown``    — blanket pushback: the degraded node fails its
+      raw-projection reads just like pushdown executes, so this arm pays
+      the same retries PLUS full ship-and-replay on every request
+
+    ``chaos_ok`` (enforced by perf_guard like ``adaptive_ok``): all
+    results byte-identical, full recovery, and adaptive-with-recovery not
+    losing to EITHER the fail-to-error baseline or blanket no-pushdown on
+    total wall clock. Also asserted: the injection ledgers reconcile
+    exactly with the runs' recovery accounting, and a streamed
+    (``run_stream``) chaos pass with hedging returns byte-identical
+    results too."""
+    import time as _time
+
+    from repro.core import runtime
+    from repro.core.cost import StorageResources
+    from repro.core.faults import (CircuitBreaker, FaultExhausted,
+                                   FaultPlan, HedgePolicy, RetryPolicy)
+
+    sf = sf or 1.0
+    cat = common.catalog(num_nodes=2, sf=sf)
+    qids = tuple(qids or Q.QUERY_IDS)
+    res = StorageResources(storage_power=power)
+    retry = RetryPolicy()
+    strict = RetryPolicy(demote_on_exhaust=False)
+
+    def timed(qid, cfg):
+        t0 = _time.perf_counter()
+        r = engine.run_query(Q.build_query(qid), cat, cfg)
+        return _time.perf_counter() - t0, r
+
+    # ---- clean reference -------------------------------------------------
+    clean_t, clean_res = {}, {}
+    for qid in qids:
+        clean_t[qid], r = timed(qid, engine.EngineConfig(
+            res=res, mode=MODE_ADAPTIVE))
+        clean_res[qid] = r.result
+
+    # ---- recovery: demote-on-exhaust + circuit breaker -------------------
+    plans = _chaos_plans(qids, seed)
+    breaker = CircuitBreaker()
+    rec_t, n_demoted, n_retries, n_injected = {}, 0, 0, 0
+    all_identical = True
+    for qid in qids:
+        rec_t[qid], r = timed(qid, engine.EngineConfig(
+            res=res, mode=MODE_ADAPTIVE, faults=plans[qid], retry=retry,
+            breaker=breaker))
+        all_identical &= engine.results_equal(clean_res[qid], r.result)
+        rec = r.recovery or {}
+        n_demoted += rec.get("n_demoted", 0)
+        n_retries += rec.get("retries", 0)
+        n_injected += rec.get("faults_injected", 0)
+    # ledger reconciliation: the schedules' own event logs count exactly
+    # the injections the runs accounted
+    ledger = sum(sum(p.counts().values()) for p in plans.values())
+    assert ledger == n_injected, (ledger, n_injected)
+    recovered_rate = 1.0                   # demotion never surfaces an error
+
+    # ---- fail-to-error: whole-query restart on exhaustion ----------------
+    plans_fte = _chaos_plans(qids, seed)   # fresh ledgers, same schedules
+    fte_t, restarts, first_try = {}, 0, 0
+    for qid in qids:
+        cfg = engine.EngineConfig(res=res, mode=MODE_ADAPTIVE,
+                                  faults=plans_fte[qid], retry=strict)
+        t_total, tries = 0.0, 0
+        while True:
+            tries += 1
+            t0 = _time.perf_counter()
+            try:
+                engine.run_query(Q.build_query(qid), cat, cfg)
+                t_total += _time.perf_counter() - t0
+                break
+            except FaultExhausted:
+                t_total += _time.perf_counter() - t0
+                plans_fte[qid].bump_epoch()   # next deterministic schedule
+                if tries > CHAOS_MAX_RESTARTS:
+                    raise
+        fte_t[qid] = t_total
+        restarts += tries - 1
+        first_try += tries == 1
+
+    # ---- blanket no-pushdown under the same schedules --------------------
+    npd_t = {}
+    plans_npd = _chaos_plans(qids, seed)
+    for qid in qids:
+        npd_t[qid], r = timed(qid, engine.EngineConfig(
+            res=res, mode=MODE_NO_PUSHDOWN, faults=plans_npd[qid],
+            retry=retry))
+        all_identical &= engine.results_equal(clean_res[qid], r.result)
+
+    # ---- streamed chaos pass: run_stream + hedging, byte-identity --------
+    stream = _stream(qids, wave_gap)
+    s_clean = runtime.run_stream(stream, cat, engine.EngineConfig(
+        res=res, mode=MODE_ADAPTIVE))
+    s_chaos = runtime.run_stream(stream, cat, engine.EngineConfig(
+        res=res, mode=MODE_ADAPTIVE,
+        faults=FaultPlan.from_spec(CHAOS_SPEC, seed=seed),
+        retry=retry, hedge=HedgePolicy(), breaker=CircuitBreaker()))
+    _assert_results_identical(s_clean.results, s_chaos.results, "chaos",
+                              list(s_clean.results))
+
+    t_clean = sum(clean_t.values())
+    t_rec = sum(rec_t.values())
+    t_fte = sum(fte_t.values())
+    t_npd = sum(npd_t.values())
+    p99 = lambda d: float(np.percentile(list(d.values()), 99))  # noqa: E731
+    return {
+        "sf": sf, "power": power, "seed": seed, "qids": list(qids),
+        "spec": CHAOS_SPEC, "failure_rate": CHAOS_FAILURE_RATE,
+        "all_identical": bool(all_identical),
+        "stream_identical": True,          # asserted above
+        "recovered_rate": recovered_rate,
+        "n_demoted": n_demoted, "retries": n_retries,
+        "faults_injected": n_injected,
+        "fte_restarts": restarts,
+        "fte_first_try_rate": first_try / len(qids),
+        "stream_demoted": s_chaos.n_demoted,
+        "stream_retries": s_chaos.retries,
+        "stream_hedged": s_chaos.hedged,
+        "t_clean_ms": 1e3 * t_clean,
+        "t_recovery_ms": 1e3 * t_rec,
+        "t_fail_to_error_ms": 1e3 * t_fte,
+        "t_no_pushdown_ms": 1e3 * t_npd,
+        "p99_clean_ms": 1e3 * p99(clean_t),
+        "p99_recovery_ms": 1e3 * p99(rec_t),
+        "p99_degradation": p99(rec_t) / max(p99(clean_t), 1e-9),
+        # the monotone trajectory number: recovery vs the query-restart
+        # baseline over the same schedules
+        "total_speedup": t_fte / max(t_rec, 1e-9),
+        # recovery must not lose to EITHER coping strategy (1.15 band
+        # absorbs scheduling noise on shared runners, like adaptive_ok)
+        "chaos_ok": bool(all_identical and recovered_rate >= 1.0
+                         and t_rec <= 1.15 * t_fte
+                         and t_rec <= 1.15 * t_npd),
+    }
+
+
+def _chaos_headline(out: dict) -> dict:
+    return {k: out[k] for k in
+            ("sf", "seed", "failure_rate", "all_identical",
+             "stream_identical", "recovered_rate", "n_demoted", "retries",
+             "faults_injected", "fte_restarts", "p99_degradation",
+             "t_recovery_ms", "t_fail_to_error_ms", "t_no_pushdown_ms",
+             "total_speedup", "chaos_ok")}
+
+
+def update_root_bench_chaos(out: dict):
+    return common.update_root_bench("chaos", out, _chaos_headline(out))
+
+
+def render_chaos(out: dict) -> str:
+    rows = [
+        ["clean", f'{out["t_clean_ms"]:.1f}', "-", "-", "-"],
+        ["recovery", f'{out["t_recovery_ms"]:.1f}', out["n_demoted"],
+         out["retries"], out["faults_injected"]],
+        ["fail_to_error", f'{out["t_fail_to_error_ms"]:.1f}',
+         f'{out["fte_restarts"]} restarts', "-", "-"],
+        ["no_pushdown", f'{out["t_no_pushdown_ms"]:.1f}', "-", "-", "-"],
+    ]
+    hdr = ["arm", "wall_ms", "demoted", "retries", "injected"]
+    return common.table(rows, hdr) + (
+        f'\nchaos (sf={out["sf"]}, ~{100 * out["failure_rate"]:.0f}% '
+        f'storage failure, seed={out["seed"]}): recovered '
+        f'{100 * out["recovered_rate"]:.0f}% of queries, p99 degradation '
+        f'{out["p99_degradation"]:.2f}x, recovery vs query-restart '
+        f'{out["total_speedup"]:.2f}x, identical={out["all_identical"]}, '
+        f'stream_identical={out["stream_identical"]} (hedged='
+        f'{out["stream_hedged"]}), ok={out["chaos_ok"]}')
 
 
 # ------------------------------------ online-correction A/B (correction)
@@ -396,6 +608,8 @@ def render(out: dict) -> str:
         txt += "\n\n" + render_real(out["real"])
     if "correction" in out:
         txt += "\n\n" + render_correction(out["correction"])
+    if "chaos" in out:
+        txt += "\n\n" + render_chaos(out["chaos"])
     return txt
 
 
@@ -411,8 +625,15 @@ if __name__ == "__main__":
     ap.add_argument("--trace-smoke", action="store_true",
                     help="traced sf=1 stream with exact reconciliation; "
                          "writes JSONL + Chrome trace + summary artifacts")
+    ap.add_argument("--chaos-quick", action="store_true",
+                    help="fault-tolerance A/B, sf=1 mix under a pinned "
+                         "~10%% storage-failure schedule (CI chaos smoke)")
     args = ap.parse_args()
-    if args.real_quick:
+    if args.chaos_quick:
+        o = run_chaos(**CHAOS_QUICK_KWARGS)
+        update_root_bench_chaos(o)
+        print(render_chaos(o))
+    elif args.real_quick:
         o = run_real(**REAL_QUICK_KWARGS)
         update_root_bench(o)
         print(render_real(o))
@@ -433,3 +654,4 @@ if __name__ == "__main__":
         update_root_bench(o)
         print(render(o))
         update_root_bench_correction(o["correction"])
+        update_root_bench_chaos(o["chaos"])

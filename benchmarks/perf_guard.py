@@ -52,8 +52,12 @@ TOLERANCE = 0.85
 # its monotone guard only catches collapses; the hard per-run invariant is
 # ``adaptive_ok`` (adaptive must not lose to the worse forced baseline).
 # The cache warm/cold ratio is likewise wall-clock-noisy on shared
-# runners; its hard per-run invariant is ``cache_ok``
-SUITE_TOLERANCE = {"runtime": 0.60, "cache": 0.60}
+# runners; its hard per-run invariant is ``cache_ok``. The chaos suite's
+# speedup (recovery vs query-restart baseline) varies with how many
+# restarts the pinned schedule forces; its hard per-run invariant is
+# ``chaos_ok`` (byte-identity + full recovery + not losing to either
+# coping baseline)
+SUITE_TOLERANCE = {"runtime": 0.60, "cache": 0.60, "chaos": 0.60}
 
 
 def check(doc: dict, tolerance: float = TOLERANCE
@@ -92,6 +96,19 @@ def check(doc: dict, tolerance: float = TOLERANCE
                 f"{suite}: newest warm-cache arm broke its serve contract "
                 f"(hit rate {last.get('hit_rate')}, "
                 f"{last.get('flipped')} decisions flipped)")
+        if last.get("chaos_ok") is False:
+            failures.append(
+                f"{suite}: newest chaos arm broke the recovery contract "
+                f"(identical={last.get('all_identical')}, recovered_rate="
+                f"{last.get('recovered_rate')}, recovery "
+                f"{last.get('t_recovery_ms')}ms vs fail-to-error "
+                f"{last.get('t_fail_to_error_ms')}ms / no-pushdown "
+                f"{last.get('t_no_pushdown_ms')}ms)")
+        rr = last.get("recovered_rate")
+        if rr is not None and rr < 1.0:
+            failures.append(
+                f"{suite}: recovered-query rate {rr} below 1.0 — demotion "
+                "must make every faulted query complete, never error")
         hr = last.get("hit_rate")
         if hr is not None and hr < 0.99:
             failures.append(

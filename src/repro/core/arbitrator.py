@@ -25,6 +25,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cost import RequestCost, StorageResources
+from repro.core.faults import ROUTE_DENY
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import Metrics, get_metrics
 
@@ -80,13 +81,22 @@ class Arbitrator:
                  backlog_guard: bool = True,
                  on_decide: Optional[DecisionHook] = None,
                  measured: Optional[MeasuredLoad] = None,
-                 node_id: int = 0):
+                 node_id: int = 0,
+                 breaker=None):
         self.res = res
         self.pa_aware = pa_aware
         self.forced_path = forced_path  # "pushdown"/"pushback" for the baselines
         self.on_decide = on_decide      # live callback: (req_id, path)
         self.measured = measured        # measured-signal backlog source
         self.node_id = node_id
+        # per-(node, path) circuit breaker (core.faults.CircuitBreaker),
+        # fed by the runtime's storage-execute outcomes — the same live
+        # signal family as `measured`. While this node's pushdown circuit
+        # is open, NEW decisions route to pushback (recovery routing beats
+        # the cost ordering and the backlog guard); a half-open probe is
+        # admitted down pushdown so a recovered node can close the circuit.
+        # Forced baselines ignore it: their path is the experiment.
+        self.breaker = breaker
         # Alg 1 lines 7/10 assign to the SLOWER path whenever the faster
         # pool is full. Verbatim, that turns end-of-queue requests into
         # stragglers (the slower path outlives the fast pool's backlog).
@@ -119,11 +129,22 @@ class Arbitrator:
         return self.drain()
 
     def release(self, path: str) -> List[Tuple[int, str]]:
+        # capped at the pool size: a spurious release (a double-release
+        # from a retried/hedged execution, or a release racing a drain)
+        # must not mint slots the node does not have
         if path == PUSHDOWN:
-            self.free_pd += 1
+            self.free_pd = min(self.res.pd_slots, self.free_pd + 1)
         else:
-            self.free_pb += 1
+            self.free_pb = min(self.res.pb_slots, self.free_pb + 1)
         return self.drain()
+
+    def _pd_tripped(self) -> bool:
+        """Consult the breaker for one new pushdown admission. Only called
+        with a pushdown slot free — each call is one routing decision, so
+        denials (not wall clock) advance the breaker toward its half-open
+        probe, keeping recovery deterministic under any interleaving."""
+        return (self.breaker is not None
+                and self.breaker.route(self.node_id, PUSHDOWN) == ROUTE_DENY)
 
     # -------------------------------------------------------------- core
     def _try(self, path: str) -> bool:
@@ -167,6 +188,14 @@ class Arbitrator:
             return self._emit(self._drain_pa(out))
         while self.queue:
             p = self.queue[0]
+            if self.free_pd > 0 and self._pd_tripped():
+                # open circuit: this decision goes to pushback — recovery
+                # routing overrides both the cost ordering and the backlog
+                # guard (demotion is a safety decision, not a spill)
+                if self._try(PUSHBACK):
+                    out.append((self.queue.pop(0).req_id, PUSHBACK))
+                    continue
+                break  # transfer pool saturated too — wait for a release
             t_pd = p.cost.t_pd(self.res, include_scan=False)
             t_pb = p.cost.t_pb(self.res, include_scan=False)
             first, second = ((PUSHDOWN, PUSHBACK) if t_pd < t_pb
@@ -195,15 +224,18 @@ class Arbitrator:
         """§3.4: pushdown takes the highest-PA request, pushback the lowest.
         Invariant kept: full utilization of both resources."""
         while self.queue:
+            # a tripped pushdown circuit makes the exec pool unavailable
+            # for NEW work this iteration (a granted probe re-enables it)
+            pd_free = self.free_pd > 0 and not self._pd_tripped()
             head_hi, head_lo = self.queue[0], self.queue[-1]
             # prefer each slot type's best-suited end
-            if self.free_pd > 0 and (head_hi.pa >= 0 or self.free_pb == 0):
+            if pd_free and (head_hi.pa >= 0 or self.free_pb == 0):
                 self._try(PUSHDOWN)
                 out.append((self.queue.pop(0).req_id, PUSHDOWN))
             elif self.free_pb > 0:
                 self._try(PUSHBACK)
                 out.append((self.queue.pop().req_id, PUSHBACK))
-            elif self.free_pd > 0:
+            elif pd_free:
                 self._try(PUSHDOWN)
                 out.append((self.queue.pop(0).req_id, PUSHDOWN))
             else:

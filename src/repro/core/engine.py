@@ -77,9 +77,23 @@ class EngineConfig:
     result_cache: Optional[object] = None
     # arbitrate over *measured* occupancy signals (the stream.* gauges
     # run_stream publishes every dispatch wave) instead of the fluid
-    # model's own wait queues — see arbitrator.MeasuredLoad. Default off:
-    # the fluid model remains the reference behavior.
-    measured_feedback: bool = False
+    # model's own wait queues — see arbitrator.MeasuredLoad. Default ON
+    # since the chaos soak (docs/faults.md) stress-tested the port; when a
+    # node's gauges were never published the Arbitrator still falls back
+    # to its fluid queue, and measured_feedback=False restores the pure
+    # fluid reference behavior (regression-pinned in tests/test_cache.py).
+    measured_feedback: bool = True
+    # ---- fault tolerance (core.faults; docs/faults.md) -------------------
+    # a FaultPlan makes every storage-execute boundary consult the
+    # injection schedule; with one active (here or via REPRO_FAULT_SPEC)
+    # execution retries under `retry` (default RetryPolicy) and demotes
+    # exhausted pushdown groups to pushback — results stay byte-identical
+    # under ANY schedule. All four default to None: fault-free configs run
+    # the exact pre-fault code path.
+    faults: Optional[object] = None       # faults.FaultPlan
+    retry: Optional[object] = None        # faults.RetryPolicy
+    hedge: Optional[object] = None        # faults.HedgePolicy (run_stream)
+    breaker: Optional[object] = None      # faults.CircuitBreaker
 
 
 @dataclasses.dataclass
@@ -111,6 +125,10 @@ class QueryRun:
     real_net_bytes: float = 0.0
     net_bytes_recon: Optional[Dict] = None
     outcomes: Optional[List[runtime.RequestOutcome]] = None
+    # fault/recovery accounting (None on fault-free runs): n_demoted,
+    # retries, faults_injected — reconciles exactly with the FaultPlan's
+    # event ledger (tests/test_faults.py)
+    recovery: Optional[Dict] = None
 
     @property
     def t_total(self) -> float:
@@ -120,6 +138,11 @@ class QueryRun:
     def cache_hits(self) -> int:
         """Pushdown partitions served by the pushed-result cache."""
         return sum(1 for o in (self.outcomes or ()) if o.cache)
+
+    @property
+    def n_demoted(self) -> int:
+        """Admitted-pushdown requests recovered via pushback demotion."""
+        return sum(1 for o in (self.outcomes or ()) if o.demoted)
 
 
 def plan_requests(query: Query, catalog: Catalog, start_id: int = 0,
@@ -224,10 +247,16 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
     tr = obs_trace.get_tracer()
     split = runtime.execute_split(reqs, sim.decisions(), cfg.executor,
                                   cfg.filter_gather_threshold,
-                                  bitmaps=bitmaps, cache=cfg.result_cache)
-    # the real split IS the simulated split — one decision vector, two uses
-    assert split.n_pushdown == sim.admitted(query.qid), \
-        (query.qid, split.n_pushdown, sim.admitted(query.qid))
+                                  bitmaps=bitmaps, cache=cfg.result_cache,
+                                  faults=cfg.faults, retry=cfg.retry,
+                                  breaker=cfg.breaker)
+    # the real split IS the simulated split — one decision vector, two
+    # uses; under an active fault plan, admitted requests that exhausted
+    # their retries were *demoted* to pushback (graceful degradation, the
+    # recovery contract) and are accounted separately
+    assert split.n_pushdown + split.n_demoted == sim.admitted(query.qid), \
+        (query.qid, split.n_pushdown, split.n_demoted,
+         sim.admitted(query.qid))
     if cfg.corrector is not None:
         # close the loop: measured pushdown bytes correct future estimates
         runtime.feed_corrector(cfg.corrector, query.qid, reqs,
@@ -243,6 +272,13 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
     n_hit = sum(1 for o in split.outcomes if o.cache)
     if n_hit:
         m.counter("engine.cache_hits").inc(n_hit)
+    if split.n_demoted:
+        m.counter("engine.requests.demoted").inc(split.n_demoted)
+    recovery = None
+    if split.n_demoted or split.retries or split.faults_injected:
+        recovery = {"n_demoted": split.n_demoted,
+                    "retries": split.retries,
+                    "faults_injected": split.faults_injected}
     return QueryRun(
         qid=query.qid, result=result, sim=sim,
         t_pushable=t_pushable, t_nonpushable=t_np, requests=reqs,
@@ -251,7 +287,7 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
         n_pushed_back=sim.pushed_back_by_query.get(query.qid, 0),
         real_net_bytes=split.real_net_bytes,
         net_bytes_recon=runtime.reconcile_net_bytes(sim, reqs, split),
-        outcomes=split.outcomes)
+        outcomes=split.outcomes, recovery=recovery)
 
 
 def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
@@ -265,7 +301,7 @@ def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
         sim_reqs = [SimRequest(r.req_id, r.part.node_id, query.qid, r.cost)
                     for r in reqs]
         sim = simulate(sim_reqs, cfg.res, cfg.mode,
-                       measured=_measured_of(cfg))
+                       measured=_measured_of(cfg), breaker=cfg.breaker)
         run = _run_decided(query, reqs, sim, cfg,
                            t_pushable=sim.makespan, net_bytes=sim.net_bytes,
                            bitmaps=bitmaps)
@@ -298,7 +334,7 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     sim_reqs = [SimRequest(r.req_id, r.part.node_id, r.query_id, r.cost)
                 for r in all_reqs]
     sim = simulate(sim_reqs, cfg.res, cfg.mode,
-                   measured=_measured_of(cfg))
+                   measured=_measured_of(cfg), breaker=cfg.breaker)
     tr = obs_trace.get_tracer()
     out: Dict[str, QueryRun] = {}
     for q in queries:

@@ -41,11 +41,13 @@ import dataclasses
 import os
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import (FIRST_COMPLETED, Future, ThreadPoolExecutor,
+                                TimeoutError as FutTimeout, wait as fut_wait)
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import faults as _faults
 from repro.core.arbitrator import PUSHBACK, PUSHDOWN
 from repro.core.cost import CardinalityCorrector
 from repro.core.executor import (EXECUTOR_BATCHED, EXECUTOR_REFERENCE,
@@ -69,6 +71,11 @@ class RequestOutcome:
     replayed: bool       # True when the plan ran at the compute layer
     cache: Optional[str] = None  # "exact" | "containment" when the result
     #                              was served by the pushed-result cache
+    # ---- fault/recovery accounting (core.faults; zero when no fault plan)
+    attempts: int = 1    # storage-execute attempts (1 = clean first try)
+    demoted: bool = False  # decided pushdown, exhausted retries, recovered
+    #                        via pushback (path above reflects the demotion)
+    hedged: bool = False   # a hedge duplicate won this group's race
 
 
 @dataclasses.dataclass
@@ -80,6 +87,11 @@ class SplitExecution:
     n_pushback: int
     pushdown_bytes: int              # actually shipped pushdown results
     pushback_bytes: int              # actually shipped raw projections
+    # ---- recovery accounting (zero on fault-free runs)
+    n_demoted: int = 0               # decided-pushdown requests recovered
+    #                                  via pushback demotion
+    retries: int = 0                 # backoff-retried attempts, all groups
+    faults_injected: int = 0         # injected fault events hit by this run
 
     @property
     def real_net_bytes(self) -> int:
@@ -167,11 +179,142 @@ def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
     return out, sp
 
 
+@dataclasses.dataclass
+class GroupRecovery:
+    """What recovery did for one executed request group."""
+    attempts: int = 1                 # executions tried (incl. the success)
+    retries: int = 0                  # failed attempts that were retried
+    injected: List[str] = dataclasses.field(default_factory=list)
+    demoted: bool = False             # exhausted -> fallback execution ran
+    charged_s: float = 0.0            # charged (virtual) seconds consumed
+
+
+def _exec_group_recovered(cplan: CompiledPushPlan, sub, path: str,
+                          executor: str, threshold: Optional[float],
+                          faults: "_faults.FaultPlan",
+                          retry: "_faults.RetryPolicy",
+                          breaker: Optional["_faults.CircuitBreaker"] = None,
+                          bitmaps: Optional[Dict[int, np.ndarray]] = None,
+                          shipped: Optional[List[ColumnTable]] = None,
+                          parent: Optional[obs_trace.Span] = None,
+                          node: Optional[int] = None,
+                          cache=None, salt: str = ""
+                          ) -> Tuple[List[Tuple[ColumnTable, Dict]],
+                                     obs_trace.Span, GroupRecovery]:
+    """``_exec_group_traced`` under the fault/recovery contract.
+
+    Each attempt consults the ``FaultPlan`` at the storage-execute
+    boundary. A ``straggler`` completes (late: the injected delay is both
+    charged and really slept, scaled); ``crash``/``timeout``/``transient``
+    abort the attempt, charge the deadline budget their nominal detection
+    cost, and retry after capped exponential backoff with deterministic
+    jitter. On exhaustion (attempts or charged budget):
+
+    - ``retry.demote_on_exhaust`` (the contract): a pushdown group is
+      **demoted to pushback** — ship the raw projection, replay the
+      compiled plan compute-side, byte-identical by the PR-4 contract; an
+      already-pushback group replays cleanly from the durable projection
+      (``retry.local_replays``). The fallback execution is not re-injected:
+      the recovery tier (durable store + local compute) is outside the
+      storage fault model — which is what makes "never an error" a
+      guarantee rather than a probability.
+    - otherwise: raise :class:`core.faults.FaultExhausted` — the
+      fail-to-error baseline the chaos benchmark compares against.
+
+    Every outcome feeds the circuit breaker (when given) and the
+    ``faults.node<N>.<path>.failures``/``.successes`` counters — the same
+    live per-node signals ``MeasuredLoad``-style pollers consume.
+    """
+    m = get_metrics()
+    tr = obs_trace.get_tracer()
+    node_id = node if node is not None else sub[0].part.node_id
+    table = sub[0].table
+    key = f"{min(r.req_id for r in sub)}x{len(sub)}"
+    rec = GroupRecovery()
+    budget = retry.deadline_s
+    scale = retry.real_scale()
+    attempt = 1
+    while True:
+        action = faults.draw(node_id, path, table, key, attempt, salt)
+        if action is None or action.kind == _faults.FAULT_STRAGGLER:
+            if action is not None:
+                m.counter(f"faults.{_faults.FAULT_STRAGGLER}").inc()
+                rec.injected.append(_faults.FAULT_STRAGGLER)
+                delay = action.param if action.param is not None \
+                    else retry.attempt_timeout_s
+                rec.charged_s += delay
+                if tr.enabled:
+                    tr.event("fault_injected", parent=parent,
+                             kind=_faults.FAULT_STRAGGLER, node=node_id,
+                             table=table, path=path, attempt=attempt,
+                             delay_s=delay)
+                if delay * scale > 0:
+                    time.sleep(delay * scale)
+            out, sp = _exec_group_traced(cplan, sub, path, executor,
+                                         threshold, bitmaps=bitmaps,
+                                         shipped=shipped, parent=parent,
+                                         node=node_id, cache=cache)
+            rec.attempts = attempt
+            m.counter(f"faults.node{node_id}.{path}.successes").inc()
+            if breaker is not None:
+                breaker.record_success(node_id, path)
+            return out, sp, rec
+        kind = action.kind
+        m.counter(f"faults.{kind}").inc()
+        m.counter(f"faults.node{node_id}.{path}.failures").inc()
+        rec.injected.append(kind)
+        if breaker is not None:
+            breaker.record_failure(node_id, path)
+        if tr.enabled:
+            tr.event("fault_injected", parent=parent, kind=kind,
+                     node=node_id, table=table, path=path, attempt=attempt)
+        charge = retry.charge(kind)
+        rec.charged_s += charge
+        budget -= charge
+        if kind == _faults.FAULT_TIMEOUT and charge * scale > 0:
+            time.sleep(charge * scale)  # a timeout really waits the attempt out
+        if attempt < retry.max_attempts and budget > 0:
+            u = faults.jitter(node_id, path, table, key, attempt)
+            back = retry.backoff_s(attempt, u)
+            rec.charged_s += back
+            budget -= back
+            if budget > 0:
+                rec.retries += 1
+                m.counter("retry.attempts").inc()
+                if tr.enabled:
+                    tr.event("retry", parent=parent, attempt=attempt + 1,
+                             node=node_id, table=table, backoff_s=back,
+                             budget_s=budget)
+                if back * scale > 0:
+                    time.sleep(back * scale)
+                attempt += 1
+                continue
+        # exhausted: retries or charged deadline budget ran out
+        rec.attempts = attempt
+        if not retry.demote_on_exhaust:
+            m.counter("retry.exhausted").inc()
+            raise _faults.FaultExhausted(kind, node_id, path, table, attempt)
+        rec.demoted = True
+        m.counter("retry.demotions" if path == PUSHDOWN
+                  else "retry.local_replays").inc()
+        with tr.span("demote", parent=parent, node=node_id, table=table,
+                     from_path=path, attempts=attempt, kind=kind):
+            out, sp = _exec_group_traced(cplan, sub, PUSHBACK, executor,
+                                         threshold, bitmaps=bitmaps,
+                                         shipped=shipped, parent=parent,
+                                         node=node_id, cache=cache)
+        if breaker is not None and path == PUSHDOWN:
+            # the fallback succeeded on the *other* path
+            breaker.record_success(node_id, PUSHBACK)
+        return out, sp, rec
+
+
 def execute_split(reqs, decisions: Dict[int, str],
                   executor: str = EXECUTOR_BATCHED,
                   threshold: Optional[float] = None,
                   bitmaps: Optional[Dict[int, np.ndarray]] = None,
-                  cache=None) -> SplitExecution:
+                  cache=None, faults=None, retry=None,
+                  breaker=None) -> SplitExecution:
     """Route every request down its decided path and merge.
 
     ``reqs`` is a list of ``engine.PlannedRequest``; ``decisions`` maps
@@ -180,30 +323,60 @@ def execute_split(reqs, decisions: Dict[int, str],
     per-table merge concatenates per-partition results in **original
     request order**, so the merged tables are byte-identical to
     all-pushdown execution for any decision vector.
+
+    ``faults``/``retry``/``breaker`` (core.faults): with a ``FaultPlan``
+    active — passed in, or ambient via ``REPRO_FAULT_SPEC`` — every group
+    executes through the retry/deadline/demote recovery loop
+    (``_exec_group_recovered``), grouped additionally **per storage node**
+    so injection scopes match the fleet topology, and the split carries
+    the recovery accounting (``n_demoted``/``retries``/``faults_injected``).
+    Byte-identity holds under ANY fault schedule: demotion is just the
+    pushback path, and the merge order never changes. Without a plan this
+    function is byte-for-byte the fault-free PR-4 code path.
     """
+    if faults is None:
+        faults = _faults.env_plan()
+    if faults is not None and retry is None:
+        retry = _faults.RetryPolicy()
     tr = obs_trace.get_tracer()
     with tr.span("execute_split", n_requests=len(reqs)) as es:
         per_req: Dict[int, ColumnTable] = {}
         out_by_id: Dict[int, RequestOutcome] = {}
-        n_pd = n_pb = 0
+        n_pd = n_pb = n_dem = retries = injected = 0
         pd_bytes = pb_bytes = 0
-        groups: Dict[Tuple[str, int], List] = {}
+        groups: Dict[Tuple, List] = {}
         for r in reqs:
-            groups.setdefault((r.table, id(r.plan)), []).append(r)
-        for (_table, _pid), rs in groups.items():
+            # with a fault plan, groups split per node: injection and
+            # recovery are per-(node, path) — the fleet's failure unit
+            gkey = (r.table, id(r.plan)) if faults is None \
+                else (r.table, id(r.plan), r.part.node_id)
+            groups.setdefault(gkey, []).append(r)
+        for _gkey, rs in groups.items():
             cplan = compile_push_plan(rs[0].plan)
             for path in (PUSHDOWN, PUSHBACK):
                 sub = [r for r in rs
                        if decisions.get(r.req_id, PUSHDOWN) == path]
                 if not sub:
                     continue
-                out, gsp = _exec_group_traced(cplan, sub, path, executor,
-                                              threshold, bitmaps=bitmaps,
-                                              cache=cache)
+                if faults is None:
+                    out, gsp = _exec_group_traced(cplan, sub, path, executor,
+                                                  threshold, bitmaps=bitmaps,
+                                                  cache=cache)
+                    rec = None
+                    eff_path = path
+                else:
+                    out, gsp, rec = _exec_group_recovered(
+                        cplan, sub, path, executor, threshold, faults,
+                        retry, breaker=breaker, bitmaps=bitmaps, cache=cache)
+                    retries += rec.retries
+                    injected += len(rec.injected)
+                    eff_path = PUSHBACK if rec.demoted else path
+                demoted = rec is not None and rec.demoted \
+                    and path == PUSHDOWN
                 g_bytes = 0
                 for r, (res, aux) in zip(sub, out):
                     per_req[r.req_id] = res
-                    if path == PUSHDOWN:
+                    if eff_path == PUSHDOWN:
                         b = result_bytes(res, aux)
                         pd_bytes += b
                         n_pd += 1
@@ -211,12 +384,16 @@ def execute_split(reqs, decisions: Dict[int, str],
                         b = pushback_bytes(cplan, r.part.data)
                         pb_bytes += b
                         n_pb += 1
+                        if demoted:
+                            n_dem += 1
                     g_bytes += b
                     out_by_id[r.req_id] = RequestOutcome(
-                        r.req_id, r.table, path, len(res), b,
-                        replayed=(path == PUSHBACK),
-                        cache=aux.get("cache"))
-                gsp.set(shipped_bytes=int(g_bytes))
+                        r.req_id, r.table, eff_path, len(res), b,
+                        replayed=(eff_path == PUSHBACK),
+                        cache=aux.get("cache"),
+                        attempts=rec.attempts if rec is not None else 1,
+                        demoted=demoted)
+                tr.amend(gsp, shipped_bytes=int(g_bytes))
         by_table: Dict[str, List[ColumnTable]] = {}
         for r in reqs:
             by_table.setdefault(r.table, []).append(per_req[r.req_id])
@@ -231,8 +408,12 @@ def execute_split(reqs, decisions: Dict[int, str],
                    pushdown_bytes=int(pd_bytes),
                    pushback_bytes=int(pb_bytes),
                    cache_hits=sum(1 for o in outs if o.cache),
+                   n_demoted=n_dem, retries=retries,
+                   faults_injected=injected,
                    outcomes=outs)
-    return SplitExecution(merged, outs, n_pd, n_pb, pd_bytes, pb_bytes)
+    return SplitExecution(merged, outs, n_pd, n_pb, pd_bytes, pb_bytes,
+                          n_demoted=n_dem, retries=retries,
+                          faults_injected=injected)
 
 
 def reconcile_net_bytes(sim, reqs, split: SplitExecution) -> Dict:
@@ -317,6 +498,10 @@ class StreamRun:
     n_pushdown: int
     n_pushback: int
     real_net_bytes: int
+    # ---- recovery accounting (zero on fault-free, hedge-free runs)
+    n_demoted: int = 0
+    retries: int = 0
+    hedged: int = 0                        # hedge races won by the duplicate
 
 
 def _ship(cplan: CompiledPushPlan, parts_data: List[ColumnTable]
@@ -411,7 +596,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
     sim = simulate(sim_reqs, cfg.res, cfg.mode,
                    on_decision=lambda rid, _path: decision_pos.setdefault(
                        rid, len(decision_pos)),
-                   measured=_engine._measured_of(cfg))
+                   measured=_engine._measured_of(cfg),
+                   breaker=getattr(cfg, "breaker", None))
     decisions = sim.decisions()
     t_decide = time.perf_counter() - t_plan0
 
@@ -439,9 +625,44 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                                                 max(2, ncpu))))
     threshold = cfg.filter_gather_threshold
 
+    # fault-tolerance wiring (core.faults; getattr: plain configs without
+    # the fields — and older pickled ones — stay fault-free)
+    faults = getattr(cfg, "faults", None)
+    if faults is None:
+        faults = _faults.env_plan()
+    retry = getattr(cfg, "retry", None)
+    if faults is not None and retry is None:
+        retry = _faults.RetryPolicy()
+    hedge = getattr(cfg, "hedge", None)
+    breaker = getattr(cfg, "breaker", None)
+    exec_samples: List[float] = []     # storage-execute durations (hedging
+    samples_lock = threading.Lock()    # calibrates its delay from these)
+
     def on_core(fn, *args, **kw):
         with cores:
             return fn(*args, **kw)
+
+    def exec_group(cplan, sub, path, shipped=None, qspan=None, node=None,
+                   salt=""):
+        """One storage-execute (or replay) group, through the recovery
+        loop when a fault plan is active; always returns the uniform
+        ``(out, span, GroupRecovery-or-None)`` triple and records its
+        duration for hedge-delay calibration."""
+        t_ex = time.perf_counter()
+        if faults is None:
+            out, sp = _exec_group_traced(cplan, sub, path, cfg.executor,
+                                         threshold, shipped=shipped,
+                                         parent=qspan, node=node,
+                                         cache=cache)
+            rec = None
+        else:
+            out, sp, rec = _exec_group_recovered(
+                cplan, sub, path, cfg.executor, threshold, faults, retry,
+                breaker=breaker, shipped=shipped, parent=qspan, node=node,
+                cache=cache, salt=salt)
+        with samples_lock:
+            exec_samples.append(time.perf_counter() - t_ex)
+        return out, sp, rec
 
     def sample_wave(qspan) -> None:
         """Per-wave load signals: slot-pool queue depths + free cores —
@@ -477,9 +698,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
             cplan = compile_push_plan(sub[0].plan)
             if path == PUSHDOWN:
                 fut = exec_pools[node].submit(
-                    on_core, _exec_group_traced, cplan, sub, path,
-                    cfg.executor, threshold, parent=qspan, node=node,
-                    cache=cache)
+                    on_core, exec_group, cplan, sub, path,
+                    qspan=qspan, node=node)
             else:
                 ship_fut = ship_pools[node].submit(
                     on_core, _ship_traced, cplan,
@@ -487,25 +707,77 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                 # wait for the transfer OUTSIDE the core gate, replay inside
                 fut = compute_pool.submit(
                     lambda cp=cplan, s=sub, sf=ship_fut, qs=qspan, nd=node:
-                    on_core(_exec_group_traced, cp, s, PUSHBACK,
-                            cfg.executor, threshold, shipped=sf.result(),
-                            parent=qs, node=nd))
-            futs.append(((sub, path, cplan), fut))
+                    on_core(exec_group, cp, s, PUSHBACK,
+                            shipped=sf.result(), qspan=qs, node=nd))
+            futs.append(((sub, path, cplan, node), fut))
         return futs
 
     t0 = time.perf_counter()
 
+    def resolve(meta, fut, qspan):
+        """Await one group future, hedging pushdown stragglers: when the
+        original outlives the calibrated percentile delay, a duplicate
+        launches on the same node's exec pool (salted so its fault draws
+        differ — a retried RPC, not a replayed one); first completion
+        wins, the loser is cancelled if still queued and discarded
+        otherwise (threads cannot be aborted). Returns
+        ``(out, span, rec, hedge_won)``."""
+        sub, path, _cplan, node = meta
+        delay = None
+        if hedge is not None and path == PUSHDOWN:
+            with samples_lock:
+                delay = hedge.delay_s(exec_samples)
+        if delay is None:
+            return (*fut.result(), False)
+        try:
+            return (*fut.result(timeout=delay), False)
+        except FutTimeout:
+            pass
+        metrics.counter("hedge.launched").inc()
+        if tr.enabled:
+            tr.event("hedge", parent=qspan, node=node,
+                     table=sub[0].table, delay_s=delay)
+        dup = exec_pools[node].submit(on_core, exec_group, _cplan, sub,
+                                      path, qspan=qspan, node=node,
+                                      salt="hedge")
+        done, _ = fut_wait({fut, dup}, return_when=FIRST_COMPLETED)
+        winner = fut if fut in done else dup       # original preferred
+        loser = dup if winner is fut else fut
+        loser.cancel()
+        won = winner is dup
+        metrics.counter("hedge.won" if won else "hedge.lost").inc()
+        return (*winner.result(), won)
+
     def finish_query(key: str, sq: StreamQuery, futs, qspan) -> Dict:
+        try:
+            return _finish_query(key, sq, futs, qspan)
+        except BaseException as e:
+            # a failed worker must neither leak the open query span nor
+            # swallow its error: close the span with the failure attached
+            # and re-raise — the driver surfaces it after draining peers
+            if tr.enabled:
+                tr.end(qspan, error=repr(e))
+            raise
+
+    def _finish_query(key: str, sq: StreamQuery, futs, qspan) -> Dict:
         per_req: Dict[int, ColumnTable] = {}
         outcomes: List[RequestOutcome] = []
-        n_pd = n_pb = n_hit = 0
+        n_pd = n_pb = n_hit = n_dem = n_retry = n_hedge = 0
         pd_b = pb_b = 0
-        for (sub, path, cplan), fut in futs:
-            out, gsp = fut.result()
+        for (sub, path, cplan, node), fut in futs:
+            out, gsp, rec, hedged = resolve((sub, path, cplan, node), fut,
+                                            qspan)
+            eff_path = PUSHBACK if (rec is not None and rec.demoted) \
+                else path
+            demoted = eff_path != path
+            if rec is not None:
+                n_retry += rec.retries
+            if hedged:
+                n_hedge += 1
             g_bytes = 0
             for r, (res, aux) in zip(sub, out):
                 per_req[r.req_id] = res
-                if path == PUSHDOWN:
+                if eff_path == PUSHDOWN:
                     n_pd += 1
                     b = result_bytes(res, aux)
                     pd_b += b
@@ -513,14 +785,18 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                     n_pb += 1
                     b = pushback_bytes(cplan, r.part.data)
                     pb_b += b
+                    if demoted:
+                        n_dem += 1
                 g_bytes += b
                 kind = aux.get("cache")
                 if kind:
                     n_hit += 1
                 outcomes.append(RequestOutcome(
-                    r.req_id, r.table, path, len(res), b,
-                    replayed=(path == PUSHBACK), cache=kind))
-            gsp.set(shipped_bytes=int(g_bytes))
+                    r.req_id, r.table, eff_path, len(res), b,
+                    replayed=(eff_path == PUSHBACK), cache=kind,
+                    attempts=rec.attempts if rec is not None else 1,
+                    demoted=demoted, hedged=hedged))
+            tr.amend(gsp, shipped_bytes=int(g_bytes))
         if cfg.corrector is not None:
             # per-stream-entry feedback: repeated streams converge the
             # estimates (the key strips the '#n' repeat suffix — the
@@ -547,6 +823,8 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         metrics.counter("stream.net_bytes.real").inc(pd_b + pb_b)
         if n_hit:
             metrics.counter("stream.cache_hits").inc(n_hit)
+        if n_dem:
+            metrics.counter("stream.requests.demoted").inc(n_dem)
         metrics.histogram("stream.query_finish_s").observe(finish_s)
         if tr.enabled:
             sim_pb = sum(r.cost.s_in for r in reqs_by_key[key]
@@ -555,17 +833,21 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                    sim_net_bytes=int(sim_pd + sim_pb),
                    n_pushdown=n_pd, n_pushback=n_pb,
                    cache_hits=n_hit,
+                   n_demoted=n_dem, retries=n_retry, hedged=n_hedge,
                    s_out_est_ratio=(sim_pd / pd_b if pd_b else None),
                    finish_s=finish_s)
         return {"result": result,
                 "finish_s": finish_s,
                 "n_pushdown": n_pd, "n_pushback": n_pb,
                 "cache_hits": n_hit,
+                "n_demoted": n_dem, "retries": n_retry, "hedged": n_hedge,
                 "real_net_bytes": pd_b + pb_b,
                 "s_out_estimate_ratio": (sim_pd / pd_b if pd_b else None),
                 "sim_finish": sim.finish_by_query.get(key)}
 
     finishers: Dict[str, Future] = {}
+    errors: Dict[str, BaseException] = {}
+    per_query: Dict[str, Dict] = {}
     try:
         for key, sq in zip(keys, ordered):
             delay = t0 + sq.arrival * time_scale - time.perf_counter()
@@ -577,18 +859,34 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                              qid=key, mode=cfg.mode, arrival=sq.arrival)
             finishers[key] = finish_pool.submit(
                 finish_query, key, sq, submit_query(key, qspan), qspan)
-        per_query = {qid: f.result() for qid, f in finishers.items()}
+        # drain EVERY finisher before surfacing any failure: a worker
+        # exception must not strand its peers' futures on half-shut pools
+        for qid, f in finishers.items():
+            try:
+                per_query[qid] = f.result()
+            except BaseException as e:  # noqa: BLE001 — drained, re-raised
+                errors[qid] = e
+        wall = time.perf_counter() - t0
     finally:
+        # cancel whatever never started, then join the worker threads —
+        # run_stream returns (or raises) with every pool fully shut down
         for p in (*exec_pools.values(), *ship_pools.values(),
                   compute_pool, finish_pool):
-            p.shutdown(wait=False)
-    wall = time.perf_counter() - t0
+            p.shutdown(wait=True, cancel_futures=True)
+    if errors:
+        qid, err = next(iter(errors.items()))
+        raise RuntimeError(
+            f"stream query {qid!r} failed "
+            f"({len(errors)}/{len(finishers)} queries errored)") from err
     results = {qid: d.pop("result") for qid, d in per_query.items()}
     if tr.enabled:
         stream_span.set(
             wall_clock=wall, t_decide=t_decide,
             n_pushdown=sum(d["n_pushdown"] for d in per_query.values()),
             n_pushback=sum(d["n_pushback"] for d in per_query.values()),
+            n_demoted=sum(d["n_demoted"] for d in per_query.values()),
+            retries=sum(d["retries"] for d in per_query.values()),
+            hedged=sum(d["hedged"] for d in per_query.values()),
             real_net_bytes=sum(d["real_net_bytes"]
                                for d in per_query.values()))
     return StreamRun(
@@ -596,4 +894,7 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         per_query=per_query, results=results, sim=sim,
         n_pushdown=sum(d["n_pushdown"] for d in per_query.values()),
         n_pushback=sum(d["n_pushback"] for d in per_query.values()),
-        real_net_bytes=sum(d["real_net_bytes"] for d in per_query.values()))
+        real_net_bytes=sum(d["real_net_bytes"] for d in per_query.values()),
+        n_demoted=sum(d["n_demoted"] for d in per_query.values()),
+        retries=sum(d["retries"] for d in per_query.values()),
+        hedged=sum(d["hedged"] for d in per_query.values()))

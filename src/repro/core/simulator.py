@@ -164,14 +164,17 @@ def simulate(requests: List[SimRequest],
              num_nodes: Optional[int] = None,
              decisions: Optional[Dict[int, str]] = None,
              on_decision: Optional[Callable[[int, str], None]] = None,
-             measured=None) -> SimResult:
+             measured=None, breaker=None) -> SimResult:
     """``measured`` (an ``arbitrator.MeasuredLoad``) makes every node's
     Arbitrator gauge backlog from the live ``stream.*`` metrics instead of
-    its fluid wait queue — the flag-gated measured-signal port."""
+    its fluid wait queue — the flag-gated measured-signal port.
+    ``breaker`` (a ``faults.CircuitBreaker``) is shared by every node's
+    Arbitrator: new decisions on a tripped (node, pushdown) route to
+    pushback until a half-open probe succeeds (docs/faults.md)."""
     tr = obs_trace.get_tracer()
     with tr.span("arbitrate", mode=mode, n_requests=len(requests)) as sp:
         result = _simulate(requests, res, mode, num_nodes, decisions,
-                           on_decision, measured)
+                           on_decision, measured, breaker)
         if tr.enabled:
             # per_request is attached by reference (complete and immutable
             # once _simulate returns) — the exporters coerce it to JSON at
@@ -190,7 +193,7 @@ def _simulate(requests: List[SimRequest],
               num_nodes: Optional[int],
               decisions: Optional[Dict[int, str]],
               on_decision: Optional[Callable[[int, str], None]],
-              measured=None) -> SimResult:
+              measured=None, breaker=None) -> SimResult:
     nodes = sorted({r.node_id for r in requests}) if num_nodes is None \
         else list(range(num_nodes))
     forced = {MODE_NO_PUSHDOWN: PUSHBACK, MODE_EAGER: PUSHDOWN}.get(mode)
@@ -200,7 +203,8 @@ def _simulate(requests: List[SimRequest],
     else:
         arbs = {n: Arbitrator(res, pa_aware=(mode == MODE_ADAPTIVE_PA),
                               forced_path=forced, on_decide=on_decision,
-                              measured=measured, node_id=n)
+                              measured=measured, node_id=n,
+                              breaker=breaker)
                 for n in nodes}
     by_id = {r.req_id: r for r in requests}
     pending = sorted(requests, key=lambda r: (r.arrival, r.req_id))

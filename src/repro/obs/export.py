@@ -3,6 +3,12 @@
 - :func:`to_jsonl` / :func:`from_jsonl` — one span per line, lossless
   round-trip (``from_jsonl`` + :func:`build_tree` reproduce the tracer's
   own ``tree()``).
+- :class:`JsonlStreamWriter` — the crash-safe variant: attached as a
+  ``Tracer`` sink it streams a flushed ``span_start`` line the moment a
+  span opens and a ``span_end`` line when it closes, so a process killed
+  mid-run leaves a parseable trace prefix. :func:`from_jsonl` reads both
+  formats, merges start/end pairs, keeps never-closed spans as open
+  (``dur=None``), and ignores a torn final line.
 - :func:`to_chrome_trace` — ``{"traceEvents": [...]}`` with complete
   ("X") events, microsecond timestamps, one Chrome "thread" per real
   Python thread; loadable in chrome://tracing or https://ui.perfetto.dev.
@@ -21,12 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.obs.trace import Span, Tracer
 
 __all__ = ["span_to_dict", "to_jsonl", "from_jsonl", "build_tree",
-           "to_chrome_trace", "summary_table"]
+           "to_chrome_trace", "summary_table", "JsonlStreamWriter"]
 
 
 def _coerce(obj):
@@ -78,21 +86,104 @@ def to_jsonl(source: Union[Tracer, Sequence[Span]], path,
     return str(path)
 
 
+class JsonlStreamWriter:
+    """Crash-safe incremental trace export — a ``Tracer`` sink.
+
+    ``tracer.attach_sink(JsonlStreamWriter(path))`` streams one flushed
+    ``span_start`` line the instant each span opens and one ``span_end``
+    line (final ``dur`` + attrs) when it closes. Because every line
+    reaches the OS before the traced work proceeds, a process that dies
+    mid-run — ``kill -9`` included — leaves a parseable trace: every
+    span that had opened is present, spans that never closed read back
+    open (``dur=None``), and :func:`from_jsonl` drops a torn final line
+    instead of failing. ``fsync_per_line=True`` additionally survives an
+    OS crash, at real I/O cost per span. Thread-safe; writes after
+    ``close()`` are silently dropped (worker threads may still be
+    finishing spans while the owner shuts the file)."""
+
+    def __init__(self, path, meta: Optional[Dict] = None,
+                 fsync_per_line: bool = False):
+        self.path = str(path)
+        self._fh = open(path, "w")
+        self._lock = threading.Lock()
+        self._fsync = fsync_per_line
+        header = {"type": "meta", "format": "repro-trace-v1",
+                  "streaming": True}
+        if meta:
+            header.update(meta)
+        self._write(header)
+
+    def _write(self, rec: Dict) -> None:
+        line = _dumps(rec) + "\n"
+        with self._lock:
+            fh = self._fh
+            if fh is None:
+                return
+            fh.write(line)
+            fh.flush()
+            if self._fsync:
+                os.fsync(fh.fileno())
+
+    # ---------------------------------------------------- Tracer sink API
+    def on_start(self, span: Span) -> None:
+        self._write({"type": "span_start", "sid": span.sid,
+                     "parent": span.parent, "name": span.name,
+                     "cat": span.cat, "t0": span.t0, "tid": span.tid,
+                     "attrs": dict(span.attrs)})
+
+    def on_end(self, span: Span) -> None:
+        self._write({"type": "span_end", "sid": span.sid, "dur": span.dur,
+                     "attrs": dict(span.attrs)})
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "JsonlStreamWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 def from_jsonl(path) -> Tuple[Dict, List[Dict]]:
-    """Parse a JSONL trace back into ``(meta, span dicts)``."""
+    """Parse a JSONL trace back into ``(meta, span dicts)``.
+
+    Reads both formats: batch ``span`` lines (:func:`to_jsonl`) and
+    streamed ``span_start``/``span_end`` pairs (:class:`JsonlStreamWriter`)
+    — pairs are merged, a start whose end never made it to disk stays an
+    open span (``dur=None``), and an unparseable final line (the process
+    died mid-write) ends the parse with the valid prefix kept."""
     meta: Dict = {}
     spans: List[Dict] = []
+    by_sid: Dict[int, Dict] = {}
     with open(path) as fh:
         for line in fh:
             line = line.strip()
             if not line:
                 continue
-            rec = json.loads(line)
-            if rec.get("type") == "meta":
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                break  # torn tail — keep everything before it
+            t = rec.get("type")
+            if t == "meta":
                 meta = rec
-            elif rec.get("type") == "span":
+            elif t == "span":
                 rec.pop("type")
                 spans.append(rec)
+            elif t == "span_start":
+                rec.pop("type")
+                rec["dur"] = None
+                spans.append(rec)
+                by_sid[rec["sid"]] = rec
+            elif t == "span_end":
+                sp = by_sid.get(rec["sid"])
+                if sp is not None:
+                    sp["dur"] = rec.get("dur")
+                    sp["attrs"].update(rec.get("attrs") or {})
     return meta, spans
 
 

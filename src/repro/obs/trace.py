@@ -223,6 +223,9 @@ class _SpanCM:
                 stack.pop()
             elif sp in stack:          # mis-nested exit: drop just ours
                 stack.remove(sp)
+            sink = self._tr.sink
+            if sink is not None:
+                sink.on_end(sp)
         return False
 
 
@@ -244,6 +247,11 @@ class Tracer:
     """
 
     enabled = True
+    # optional streaming sink (e.g. ``obs.export.JsonlStreamWriter``):
+    # ``on_start(span)`` fires the moment a span opens, ``on_end(span)``
+    # when it closes — the crash-safe export path. Class-level None keeps
+    # the sink-less hot path to a single attribute test per span.
+    sink = None
 
     def __init__(self, max_spans: int = 1_000_000):
         self.t0 = time.perf_counter()
@@ -253,6 +261,11 @@ class Tracer:
         self.decisions = DecisionChannel()   # arbitration decision channel
         self._local = threading.local()
         self._sid = itertools.count()
+
+    def attach_sink(self, sink) -> "Tracer":
+        """Stream every span start/end to ``sink`` (None detaches)."""
+        self.sink = sink
+        return self
 
     # ------------------------------------------------------------ internals
     def _stack(self) -> List[Span]:
@@ -286,6 +299,9 @@ class Tracer:
         sp.attrs = attrs
         sp.t0 = time.perf_counter() - self.t0
         spans.append(sp)            # atomic under the GIL
+        sink = self.sink
+        if sink is not None:
+            sink.on_start(sp)
         return sp
 
     # ------------------------------------------------------------ public
@@ -306,6 +322,9 @@ class Tracer:
         if attrs:
             span.attrs.update(attrs)
         span.dur = time.perf_counter() - self.t0 - span.t0
+        sink = self.sink
+        if sink is not None:
+            sink.on_end(span)
 
     def event(self, name: str, cat: str = "engine",
               parent: Optional[Span] = None, **attrs) -> Span:
@@ -313,7 +332,22 @@ class Tracer:
         if sp is None:
             return NULL_SPAN
         sp.dur = 0.0
+        sink = self.sink
+        if sink is not None:
+            sink.on_end(sp)
         return sp
+
+    def amend(self, span: Span, **attrs) -> None:
+        """Attach attrs to an already-closed span (accounting computed
+        after the fact, e.g. ``shipped_bytes``), re-notifying a streaming
+        sink so the crash-safe export carries them too — ``from_jsonl``
+        merges the re-emitted end record over the first one."""
+        if span is NULL_SPAN or not isinstance(span, Span):
+            return
+        span.attrs.update(attrs)
+        sink = self.sink
+        if sink is not None and span.dur is not None:
+            sink.on_end(span)
 
     def current(self) -> Optional[Span]:
         stack = self._stack()
@@ -360,6 +394,9 @@ class _NullTracer(Tracer):
         return NULL_SPAN
 
     def end(self, span, **attrs):
+        return None
+
+    def amend(self, span, **attrs):
         return None
 
     def event(self, name, cat="engine", parent=None, **attrs):

@@ -405,14 +405,17 @@ def test_measured_backlog_guard_uses_gauge_depth(fresh_metrics):
     assert drained_paths(measured) == [PUSHBACK]  # measured backlog: spill
 
 
-def test_measured_feedback_flag_is_off_by_default_and_identical():
-    assert engine.EngineConfig().measured_feedback is False
+def test_measured_feedback_flag_is_on_by_default_and_identical():
+    """The port soaked under the chaos suite (docs/faults.md) and is now
+    the default; flag-off (the pure fluid reference) must still match —
+    the regression pin for the flip."""
+    assert engine.EngineConfig().measured_feedback is True
     q = Q.build_query("Q12")
     base = engine.run_query(q, CAT, engine.EngineConfig(mode="adaptive"))
-    port = engine.run_query(
+    fluid = engine.run_query(
         Q.build_query("Q12"), CAT,
-        engine.EngineConfig(mode="adaptive", measured_feedback=True))
-    assert_tables_identical(base.result, port.result, "measured-port")
+        engine.EngineConfig(mode="adaptive", measured_feedback=False))
+    assert_tables_identical(base.result, fluid.result, "measured-port")
 
 
 # ----------------------------------------------------- thread-safety smoke

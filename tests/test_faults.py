@@ -1,0 +1,566 @@
+"""Fault-tolerant adaptive runtime (core.faults + the recovery contract).
+
+The load-bearing invariant: **every query returns byte-identical results
+under ANY fault schedule** — crash/timeout/straggler/transient, any
+probability, any seed — because recovery is demotion to the pushback
+path, which PR 4 proved byte-identical for any decision vector. On top:
+the injection ledger reconciles *exactly* with the runtime's ``faults.*``
+/ ``retry.*`` counters and outcome accounting, deterministic schedules
+replay identically, the circuit breaker's state machine trips/probes/
+closes as specified, the Arbitrator routes around tripped nodes,
+``run_stream`` hedges stragglers and surfaces worker exceptions instead
+of swallowing them, and ``Arbitrator.release``/``drain`` hold at the
+edges (satellites).
+
+Property tests use hypothesis when present; pinned-seed sweeps cover the
+same invariants when it is absent."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dependency — see pyproject.toml [test]
+    HAVE_HYPOTHESIS = False
+
+from repro.core import engine, faults, runtime
+from repro.core.arbitrator import Arbitrator, MeasuredLoad, PUSHBACK, PUSHDOWN
+from repro.core.cost import RequestCost, StorageResources
+from repro.core.faults import (CircuitBreaker, FaultExhausted, FaultPlan,
+                               FaultRule, HedgePolicy, RetryPolicy)
+from repro.core.simulator import SimRequest, simulate
+from repro.obs import metrics as om
+from repro.queryproc import queries as Q
+from repro.queryproc import tpch
+from repro.queryproc.table import ColumnTable
+
+CAT = tpch.build_catalog(sf=0.3, num_nodes=2, rows_per_partition=3_000)
+
+# instant chaos: charged (virtual) seconds drive all retry/deadline
+# arithmetic; no real sleeping in tests
+FAST = RetryPolicy(sleep_scale=0.0)
+
+
+@pytest.fixture(autouse=True)
+def fresh_metrics():
+    """Every test reconciles counters against its own registry."""
+    prev = om.get_metrics()
+    m = om.Metrics()
+    om.set_metrics(m)
+    yield m
+    om.set_metrics(prev)
+
+
+def assert_tables_identical(a: ColumnTable, b: ColumnTable, ctx=""):
+    assert a.columns == b.columns, (ctx, a.columns, b.columns)
+    for c in a.columns:
+        x, y = a.cols[c], b.cols[c]
+        assert x.dtype == y.dtype, (ctx, c, x.dtype, y.dtype)
+        assert np.array_equal(x, y, equal_nan=True), (ctx, c)
+
+
+def chaos_plan(seed: int, crash=0.25, timeout=0.15, transient=0.2,
+               straggler=0.2) -> FaultPlan:
+    """The four archetypes at once, unscoped — the harshest mix."""
+    return FaultPlan.from_spec(
+        f"crash:{crash},timeout:{timeout},transient:{transient},"
+        f"straggler:{straggler}:0.001", seed=seed)
+
+
+def run_with(qid: str, plan=None, retry=FAST, breaker=None,
+             mode="adaptive") -> engine.QueryRun:
+    cfg = engine.EngineConfig(mode=mode, faults=plan, retry=retry,
+                              breaker=breaker)
+    return engine.run_query(Q.build_query(qid), CAT, cfg)
+
+
+# ------------------------------------------------------- FaultPlan basics
+def test_spec_parsing_scopes_and_params():
+    p = FaultPlan.from_spec(
+        "crash:0.1, node1.pushdown.timeout:0.5, straggler:0.3:0.05,"
+        "node0.lineitem.transient:1.0, pushback.crash:0.2", seed=3)
+    kinds = [(r.kind, r.node, r.path, r.table, r.prob, r.param)
+             for r in p.rules]
+    assert kinds == [
+        ("crash", None, None, None, 0.1, None),
+        ("timeout", 1, "pushdown", None, 0.5, None),
+        ("straggler", None, None, None, 0.3, 0.05),
+        ("transient", 0, None, "lineitem", 1.0, None),
+        ("crash", None, "pushback", None, 0.2, None),
+    ]
+
+
+@pytest.mark.parametrize("bad", ["crash", "exploded:0.5", "crash:2.0",
+                                 "pushdown.krash:0.1"])
+def test_spec_parsing_rejects_garbage(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec(bad)
+
+
+def test_draws_are_deterministic_and_order_independent():
+    coords = [(n, p, t, k, a) for n in (0, 1) for p in (PUSHDOWN, PUSHBACK)
+              for t in ("lineitem", "orders") for k in ("0x4", "7x2")
+              for a in (1, 2, 3)]
+    a = FaultPlan.from_spec("crash:0.4,straggler:0.3:0.01", seed=11)
+    b = FaultPlan.from_spec("crash:0.4,straggler:0.3:0.01", seed=11)
+    da = [a.draw(*c) for c in coords]
+    db = [b.draw(*c) for c in reversed(coords)]        # any interleaving
+    assert [x and x.kind for x in da] == \
+        [x and x.kind for x in reversed(db)]
+    assert any(x is not None for x in da)              # schedule non-empty
+    # the ledger saw exactly the injected draws
+    assert len(a.events()) == sum(1 for x in da if x is not None)
+
+
+def test_different_seed_or_epoch_changes_the_schedule():
+    coords = [(0, PUSHDOWN, "lineitem", f"{i}x1", 1) for i in range(64)]
+    base = FaultPlan.from_spec("crash:0.5", seed=0)
+    hits = [base.draw(*c) is not None for c in coords]
+    other = FaultPlan.from_spec("crash:0.5", seed=1)
+    assert hits != [other.draw(*c) is not None for c in coords]
+    base2 = FaultPlan.from_spec("crash:0.5", seed=0)
+    base2.bump_epoch()   # a restarted query rehearses a NEW schedule
+    assert hits != [base2.draw(*c) is not None for c in coords]
+
+
+def test_rule_scoping_and_max_times():
+    p = FaultPlan([FaultRule("crash", 1.0, node=1, path=PUSHDOWN,
+                             table="orders", max_times=2)])
+    assert p.draw(0, PUSHDOWN, "orders", "k", 1) is None      # wrong node
+    assert p.draw(1, PUSHBACK, "orders", "k", 1) is None      # wrong path
+    assert p.draw(1, PUSHDOWN, "lineitem", "k", 1) is None    # wrong table
+    assert p.draw(1, PUSHDOWN, "orders", "a", 1).kind == "crash"
+    assert p.draw(1, PUSHDOWN, "orders", "b", 1).kind == "crash"
+    assert p.draw(1, PUSHDOWN, "orders", "c", 1) is None      # cap reached
+    assert p.counts()["crash"] == 2
+
+
+def test_env_plan_roundtrip(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_SPEC", raising=False)
+    assert faults.env_plan() is None
+    monkeypatch.setenv("REPRO_FAULT_SPEC", "crash:0.5")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "9")
+    p = faults.env_plan()
+    assert p is not None and p.seed == 9 and p.rules[0].kind == "crash"
+    assert faults.env_plan() is p      # cached: one shared event ledger
+    monkeypatch.setenv("REPRO_FAULT_SEED", "10")
+    assert faults.env_plan() is not p  # new key -> fresh plan
+
+
+# ------------------------------------------------- RetryPolicy arithmetic
+def test_backoff_is_capped_exponential_with_jitter():
+    r = RetryPolicy(backoff_base_s=0.01, backoff_mult=2.0,
+                    backoff_cap_s=0.03, jitter=0.5)
+    assert r.backoff_s(1, 0.5) == pytest.approx(0.01)   # u=0.5 -> no jitter
+    assert r.backoff_s(2, 0.5) == pytest.approx(0.02)
+    assert r.backoff_s(3, 0.5) == pytest.approx(0.03)   # capped
+    assert r.backoff_s(9, 0.5) == pytest.approx(0.03)
+    assert r.backoff_s(1, 0.0) == pytest.approx(0.005)  # -jitter edge
+    assert r.backoff_s(1, 1.0) == pytest.approx(0.015)  # +jitter edge
+
+
+def test_charges_by_kind():
+    r = RetryPolicy(attempt_timeout_s=0.04, detect_s=0.003)
+    assert r.charge(faults.FAULT_TIMEOUT) == 0.04
+    assert r.charge(faults.FAULT_CRASH) == 0.003
+    assert r.charge(faults.FAULT_TRANSIENT) == 0.003
+
+
+# --------------------------------------------------- HedgePolicy calibration
+def test_hedge_delay_gates_and_percentile():
+    h = HedgePolicy(percentile=95.0, multiplier=2.0, min_samples=4,
+                    min_delay_s=0.0)
+    assert h.delay_s([0.1] * 3) is None               # below min_samples
+    samples = [float(i) for i in range(1, 11)]        # p95 rank -> 10.0
+    assert h.delay_s(samples) == pytest.approx(20.0)
+    assert HedgePolicy(fixed_delay_s=0.25).delay_s([]) == 0.25
+    assert HedgePolicy(enabled=False,
+                       fixed_delay_s=0.25).delay_s([]) is None
+    assert HedgePolicy(min_samples=1,
+                       min_delay_s=0.5).delay_s([1e-6, 1e-6]) == 0.5
+
+
+# ------------------------------------------------- CircuitBreaker machine
+def test_breaker_trips_probes_and_closes():
+    b = CircuitBreaker(trip_after=3, probe_after=2)
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_ALLOW
+    b.record_failure(0, PUSHDOWN)
+    b.record_failure(0, PUSHDOWN)
+    b.record_success(0, PUSHDOWN)          # success resets the streak
+    b.record_failure(0, PUSHDOWN)
+    b.record_failure(0, PUSHDOWN)
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_CLOSED
+    b.record_failure(0, PUSHDOWN)          # 3rd consecutive: trip
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_OPEN
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_DENY
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_PROBE   # probe_after=2
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_HALF_OPEN
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_DENY    # one probe at a time
+    b.record_success(0, PUSHDOWN)          # the probe came back healthy
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_CLOSED
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_ALLOW
+    # other (node, path) circuits were never touched
+    assert b.state(1, PUSHDOWN) == faults.BREAKER_CLOSED
+    assert b.state(0, PUSHBACK) == faults.BREAKER_CLOSED
+
+
+def test_breaker_probe_failure_reopens():
+    b = CircuitBreaker(trip_after=1, probe_after=1)
+    b.record_failure(0, PUSHDOWN)
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_OPEN
+    assert b.route(0, PUSHDOWN) == faults.ROUTE_PROBE
+    b.record_failure(0, PUSHDOWN)          # probe failed: straight back open
+    assert b.state(0, PUSHDOWN) == faults.BREAKER_OPEN
+    snap = b.snapshot()["node0.pushdown"]
+    assert snap["state"] == faults.BREAKER_OPEN
+    assert snap["consecutive_failures"] >= 1
+
+
+# --------------------------- byte-identity under ANY fault schedule (tentpole)
+@pytest.mark.parametrize("qid", Q.QUERY_IDS)
+def test_chaos_byte_identity_all_queries(qid):
+    clean = run_with(qid)
+    assert clean.recovery is None
+    chaotic = run_with(qid, plan=chaos_plan(seed=int(qid[1:])),
+                       breaker=CircuitBreaker())
+    assert_tables_identical(clean.result, chaotic.result, qid)
+    # every admitted request either really pushed down or was demoted
+    assert (sum(1 for o in chaotic.outcomes if o.path == PUSHDOWN)
+            + chaotic.n_demoted) == chaotic.n_admitted
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           crash=st.floats(0, 1), timeout=st.floats(0, 0.5),
+           transient=st.floats(0, 0.5), straggler=st.floats(0, 0.5),
+           qid=st.sampled_from(Q.QUERY_IDS))
+    def test_chaos_byte_identity_property(seed, crash, timeout, transient,
+                                          straggler, qid):
+        prev = om.get_metrics()
+        om.set_metrics(om.Metrics())
+        try:
+            clean = run_with(qid)
+            chaotic = run_with(
+                qid, plan=chaos_plan(seed, crash, timeout, transient,
+                                     straggler))
+            assert_tables_identical(clean.result, chaotic.result,
+                                    (qid, seed))
+        finally:
+            om.set_metrics(prev)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_chaos_byte_identity_seed_sweep(seed):
+        qid = Q.QUERY_IDS[seed % len(Q.QUERY_IDS)]
+        clean = run_with(qid)
+        chaotic = run_with(qid, plan=chaos_plan(seed, crash=0.2 * seed / 5,
+                                                straggler=0.3))
+        assert_tables_identical(clean.result, chaotic.result, (qid, seed))
+
+
+def test_deterministic_schedule_replays_identically():
+    a = run_with("Q5", plan=chaos_plan(seed=42))
+    b = run_with("Q5", plan=chaos_plan(seed=42))
+    assert a.recovery == b.recovery
+    assert [dataclasses.astuple(o) for o in a.outcomes] == \
+        [dataclasses.astuple(o) for o in b.outcomes]
+
+
+# ------------------------------------ counters reconcile with the ledger
+def test_counters_reconcile_exactly_with_injected_schedule(fresh_metrics):
+    plan = chaos_plan(seed=7)
+    run = run_with("Q3", plan=plan)
+    counters = fresh_metrics.snapshot()["counters"]
+    ledger = plan.counts()
+    assert sum(ledger.values()) > 0          # the schedule really fired
+    for kind in faults.FAULT_KINDS:
+        assert counters.get(f"faults.{kind}", 0) == ledger[kind], kind
+    # per-(node, path) failure signals == failure-kind events in the ledger
+    fail_events = [e for e in plan.events()
+                   if e.kind in faults.FAILURE_KINDS]
+    by_np = {}
+    for e in fail_events:
+        k = f"faults.node{e.node}.{e.path}.failures"
+        by_np[k] = by_np.get(k, 0) + 1
+    for k, v in by_np.items():
+        assert counters.get(k, 0) == v, k
+    # split accounting matches both the ledger and the counters
+    assert run.recovery["faults_injected"] == sum(ledger.values())
+    assert run.recovery["retries"] == counters.get("retry.attempts", 0)
+    assert run.recovery["n_demoted"] == \
+        sum(1 for o in run.outcomes if o.demoted)
+    demote_groups = counters.get("retry.demotions", 0)
+    assert (run.recovery["n_demoted"] > 0) == (demote_groups > 0)
+
+
+def test_guaranteed_crash_demotes_every_admitted_group(fresh_metrics):
+    plan = FaultPlan.from_spec("pushdown.crash:1.0", seed=1)
+    run = run_with("Q6", plan=plan)
+    assert run.n_admitted > 0
+    assert run.recovery["n_demoted"] == run.n_admitted
+    assert all(o.path == PUSHBACK for o in run.outcomes)
+    assert all(o.replayed for o in run.outcomes)
+    # every admitted group burned its full attempt budget
+    demoted = [o for o in run.outcomes if o.demoted]
+    assert all(o.attempts == FAST.max_attempts for o in demoted)
+    clean = run_with("Q6")
+    assert_tables_identical(clean.result, run.result, "Q6 demoted")
+
+
+def test_deadline_budget_exhausts_before_max_attempts():
+    plan = FaultPlan.from_spec("pushdown.timeout:1.0", seed=2)
+    tight = RetryPolicy(sleep_scale=0.0, max_attempts=100,
+                        attempt_timeout_s=0.03, deadline_s=0.05)
+    run = run_with("Q6", plan=plan, retry=tight)
+    demoted = [o for o in run.outcomes if o.demoted]
+    assert demoted
+    # 0.03 charged per timeout + backoff: the 100-attempt cap is never the
+    # binding constraint — the charged budget is
+    assert all(o.attempts <= 3 for o in demoted)
+
+
+def test_straggler_completes_without_retry(fresh_metrics):
+    plan = FaultPlan.from_spec("straggler:1.0:0.0001", seed=3)
+    run = run_with("Q6", plan=plan)
+    assert run.recovery["n_demoted"] == 0
+    assert run.recovery["retries"] == 0
+    assert run.recovery["faults_injected"] > 0
+    counters = fresh_metrics.snapshot()["counters"]
+    assert counters["faults.straggler"] == plan.counts()["straggler"]
+    assert all(o.path == PUSHDOWN for o in run.outcomes
+               if not o.replayed and o.path == PUSHDOWN)
+
+
+def test_fail_to_error_baseline_raises():
+    plan = FaultPlan.from_spec("pushdown.crash:1.0", seed=4)
+    strict = RetryPolicy(sleep_scale=0.0, demote_on_exhaust=False)
+    with pytest.raises(FaultExhausted) as ei:
+        run_with("Q6", plan=plan, retry=strict)
+    assert ei.value.kind == "crash" and ei.value.path == PUSHDOWN
+
+
+def test_pushback_faults_recover_via_local_replay(fresh_metrics):
+    plan = FaultPlan.from_spec("pushback.crash:1.0", seed=5)
+    clean = run_with("Q6", mode="no_pushdown")
+    run = run_with("Q6", plan=plan, mode="no_pushdown")
+    assert_tables_identical(clean.result, run.result, "pushback chaos")
+    # a pushback group has no further fallback path: exhaustion replays
+    # locally, never counts as a demotion
+    assert run.recovery["n_demoted"] == 0
+    counters = fresh_metrics.snapshot()["counters"]
+    assert counters.get("retry.local_replays", 0) > 0
+    assert counters.get("retry.demotions", 0) == 0
+
+
+def test_fault_free_split_is_exactly_prior_behavior():
+    """No plan anywhere: zero recovery accounting, no fault counters."""
+    q = Q.build_query("Q12")
+    reqs = engine.plan_requests(q, CAT)
+    split = runtime.execute_split(
+        reqs, {r.req_id: PUSHDOWN for r in reqs})
+    assert split.n_demoted == 0 and split.retries == 0 \
+        and split.faults_injected == 0
+    assert all(o.attempts == 1 and not o.demoted and not o.hedged
+               for o in split.outcomes)
+    counters = om.get_metrics().snapshot()["counters"]
+    assert not any(k.startswith(("faults.", "retry.", "hedge."))
+                   for k in counters)
+
+
+# --------------------------------------------------- chaos through the stream
+def stream_of(qids, arrival=0.0):
+    return [runtime.StreamQuery(Q.build_query(q), arrival) for q in qids]
+
+
+def test_stream_chaos_byte_identity_and_accounting():
+    qids = ["Q1", "Q3", "Q6", "Q12", "Q14"]
+    cfg = engine.EngineConfig()
+    clean = runtime.run_stream(stream_of(qids), CAT, cfg, time_scale=0)
+    chaos_cfg = engine.EngineConfig(
+        faults=chaos_plan(seed=21, crash=0.4), retry=FAST,
+        breaker=CircuitBreaker())
+    chaotic = runtime.run_stream(stream_of(qids), CAT, chaos_cfg,
+                                 time_scale=0)
+    for qid in qids:
+        assert_tables_identical(clean.results[qid], chaotic.results[qid],
+                                qid)
+    assert chaotic.n_demoted == sum(d["n_demoted"]
+                                    for d in chaotic.per_query.values())
+    assert chaotic.retries >= 0 and chaotic.n_pushdown + \
+        chaotic.n_pushback == clean.n_pushdown + clean.n_pushback
+
+
+def test_stream_hedging_fires_and_reconciles(fresh_metrics):
+    # every group straggles 5ms; a 1ms fixed hedge delay guarantees races
+    cfg = engine.EngineConfig(
+        faults=FaultPlan.from_spec("pushdown.straggler:1.0:0.005", seed=8),
+        retry=RetryPolicy(sleep_scale=1.0),
+        hedge=HedgePolicy(fixed_delay_s=0.001))
+    clean = runtime.run_stream(stream_of(["Q6"]), CAT,
+                               engine.EngineConfig(), time_scale=0)
+    run = runtime.run_stream(stream_of(["Q6"]), CAT, cfg, time_scale=0)
+    assert_tables_identical(clean.results["Q6"], run.results["Q6"],
+                            "hedged")
+    c = fresh_metrics.snapshot()["counters"]
+    assert c.get("hedge.launched", 0) > 0
+    assert c.get("hedge.won", 0) + c.get("hedge.lost", 0) == \
+        c["hedge.launched"]
+    assert run.hedged == c.get("hedge.won", 0)
+
+
+def test_stream_worker_exception_propagates_and_pools_shut_down():
+    """Satellite: a worker exception must surface (not deadlock), close
+    the query span, release every core-semaphore permit, and leave all
+    pools joined."""
+    import threading
+
+    before = threading.active_count()
+    cfg = engine.EngineConfig(
+        faults=FaultPlan.from_spec("pushdown.crash:1.0", seed=9),
+        retry=RetryPolicy(sleep_scale=0.0, demote_on_exhaust=False))
+    with pytest.raises(RuntimeError) as ei:
+        runtime.run_stream(stream_of(["Q6", "Q1"]), CAT, cfg, time_scale=0)
+    assert isinstance(ei.value.__cause__, FaultExhausted)
+    # shutdown(wait=True) joined every pool thread before the raise
+    assert threading.active_count() <= before + 1
+
+
+def test_stream_worker_exception_closes_query_span():
+    from repro.obs import trace as T
+    cfg = engine.EngineConfig(
+        faults=FaultPlan.from_spec("pushdown.crash:1.0", seed=9),
+        retry=RetryPolicy(sleep_scale=0.0, demote_on_exhaust=False))
+    with T.tracing() as tr:
+        with pytest.raises(RuntimeError):
+            runtime.run_stream(stream_of(["Q6"]), CAT, cfg, time_scale=0)
+    qspans = tr.find("query")
+    assert qspans and all(s.dur is not None for s in qspans)
+    assert any("error" in s.attrs for s in qspans)
+
+
+# ------------------------------------- breaker-aware Arbitrator routing
+def _cost() -> RequestCost:
+    return RequestCost(s_in=8_000_000, s_out=500_000, compute_in=8_000_000)
+
+
+def test_tripped_node_routes_new_decisions_to_pushback():
+    b = CircuitBreaker(trip_after=1, probe_after=10**6)
+    b.record_failure(0, PUSHDOWN)           # node 0's pushdown circuit open
+    res = StorageResources()
+    reqs = [SimRequest(i, node_id=i % 2, query_id="q", cost=_cost())
+            for i in range(8)]
+    sim = simulate(reqs, res, "adaptive", breaker=b)
+    dec = sim.decisions()
+    assert all(dec[i] == PUSHBACK for i in range(0, 8, 2))   # node 0
+    assert all(dec[i] == PUSHDOWN for i in range(1, 8, 2))   # node 1 healthy
+
+
+def test_probe_readmits_pushdown_on_tripped_node():
+    # probe_after=1: the first denial immediately grants a half-open probe
+    b = CircuitBreaker(trip_after=1, probe_after=1)
+    b.record_failure(0, PUSHDOWN)
+    res = StorageResources()
+    reqs = [SimRequest(i, node_id=0, query_id="q", cost=_cost())
+            for i in range(4)]
+    sim = simulate(reqs, res, "adaptive", breaker=b)
+    paths = [sim.decisions()[i] for i in range(4)]
+    # the probe readmits one request down pushdown; while it is in
+    # flight (half-open) the rest are denied to pushback
+    assert PUSHBACK in paths and PUSHDOWN in paths
+
+
+def test_forced_baselines_ignore_the_breaker():
+    b = CircuitBreaker(trip_after=1, probe_after=10**6)
+    b.record_failure(0, PUSHDOWN)
+    reqs = [SimRequest(i, node_id=0, query_id="q", cost=_cost())
+            for i in range(4)]
+    sim = simulate(reqs, StorageResources(), "eager", breaker=b)
+    assert all(p == PUSHDOWN for p in sim.decisions().values())
+
+
+# ------------------------------- Arbitrator release/drain edges (satellite)
+def test_release_on_full_pools_is_capped():
+    res = StorageResources()
+    arb = Arbitrator(res)
+    for _ in range(5):
+        arb.release(PUSHDOWN)
+        arb.release(PUSHBACK)
+    assert arb.free_pd == res.pd_slots       # never minted beyond the pool
+    assert arb.free_pb == res.pb_slots
+    # the minted-slot overdraft would have admitted more than the pool
+    for i in range(res.pd_slots + res.pb_slots + 4):
+        arb.submit(i, _cost())
+    assert arb.admitted <= res.pd_slots
+    assert arb.pushed_back <= res.pb_slots
+
+
+def test_drain_mixed_tripped_and_healthy_nodes():
+    b = CircuitBreaker(trip_after=1, probe_after=10**6)
+    b.record_failure(3, PUSHDOWN)
+    res = StorageResources()
+    sick = Arbitrator(res, node_id=3, breaker=b)
+    healthy = Arbitrator(res, node_id=4, breaker=b)
+    sick_paths = [p for i in range(4)
+                  for _r, p in sick.submit(i, _cost())]
+    healthy_paths = [p for i in range(4)
+                     for _r, p in healthy.submit(100 + i, _cost())]
+    assert set(sick_paths) == {PUSHBACK}
+    assert set(healthy_paths) == {PUSHDOWN}
+
+
+def test_drain_pa_respects_tripped_breaker():
+    b = CircuitBreaker(trip_after=1, probe_after=10**6)
+    b.record_failure(0, PUSHDOWN)
+    arb = Arbitrator(StorageResources(), pa_aware=True, node_id=0,
+                     breaker=b)
+    paths = [p for i in range(4) for _r, p in arb.submit(i, _cost())]
+    assert set(paths) == {PUSHBACK}
+
+
+class _FlakyMeasured(MeasuredLoad):
+    """Publishes a depth on the first read, then goes dark (a poller
+    losing its feed mid-stream)."""
+
+    def __init__(self):
+        super().__init__()
+        self._reads = 0
+
+    def queue_depth(self, node_id, path):
+        self._reads += 1
+        return 64.0 if self._reads == 1 else None
+
+    def refresh(self):
+        pass
+
+
+def test_spill_ok_survives_measured_going_dark_mid_stream():
+    res = StorageResources(cores=1, net_streams=1)
+    cost = RequestCost(s_in=10_000_000, s_out=1_000_000,
+                       compute_in=1_000_000)
+    arb = Arbitrator(res, measured=_FlakyMeasured(), node_id=0)
+    arb.free_pd = 0
+    # first submit: measured depth 64 -> spill admitted to pushback
+    assert [p for _r, p in arb.submit(0, cost)] == [PUSHBACK]
+    # signal lost: falls back to the fluid queue (len==1 here -> no spill,
+    # the request just waits) — no crash, no stale-signal reuse
+    assert arb.submit(1, cost) == []
+    assert len(arb.queue) == 1
+
+
+def test_release_drains_after_breaker_recovery():
+    b = CircuitBreaker(trip_after=1, probe_after=10**6)
+    b.record_failure(0, PUSHDOWN)
+    res = StorageResources(cores=1, net_streams=1)  # 1 slot per pool
+    arb = Arbitrator(res, node_id=0, breaker=b, backlog_guard=False)
+    # with a single full-bandwidth stream, pushdown only wins for a very
+    # selective request: big s_in, tiny s_out
+    cost = RequestCost(s_in=50_000_000, s_out=500_000, compute_in=8_000_000)
+    first = [p for _r, p in arb.submit(0, cost)]
+    assert first == [PUSHBACK]                      # denied -> pushback
+    arb.submit(1, cost)                             # pb pool now full: queued
+    assert len(arb.queue) == 1
+    b.record_success(0, PUSHDOWN)                   # circuit closes
+    assert [p for _r, p in arb.release(PUSHBACK)] == [PUSHDOWN]

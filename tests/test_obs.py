@@ -400,3 +400,116 @@ def test_compute_side_bitmap_routes_through_execute_split():
     es = tr.find("execute_split")
     assert es and es[0].attrs["n_pushdown"] == len(parts)
     assert tr.find("storage_execute")
+
+
+# ------------------------------ crash-safe streaming export (JsonlStreamWriter)
+def test_stream_writer_round_trip_merges_pairs(tmp_path):
+    """Closed spans merge start+end (final dur + attrs), a span open at
+    close-time reads back open (dur=None), writes after close are
+    silently dropped."""
+    path = tmp_path / "stream.jsonl"
+    w = obs_export.JsonlStreamWriter(path, meta={"suite": "t"})
+    tr = Tracer()
+    tr.attach_sink(w)
+    with tracing(tr):
+        with tr.span("closed", qid="Q1") as sp:
+            sp.set(late_attr=7)
+            tr.event("ev", k=1)
+        never = tr.start("never_closed")
+    w.close()
+    tr.end(never)                      # after close: dropped, no error
+    meta, spans = obs_export.from_jsonl(path)
+    assert meta["streaming"] is True and meta["suite"] == "t"
+    by_name = {s["name"]: s for s in spans}
+    assert by_name["closed"]["dur"] is not None
+    assert by_name["closed"]["attrs"]["late_attr"] == 7   # end-side attrs won
+    assert by_name["ev"]["dur"] == 0.0                    # events close too
+    assert by_name["never_closed"]["dur"] is None         # still open on disk
+    # the merged stream builds the same forest shape as the live tracer
+    roots = obs_export.build_tree(spans)
+    assert [r["name"] for r in roots] == ["closed", "never_closed"]
+    assert [c["name"] for c in roots[0]["children"]] == ["ev"]
+
+
+def test_stream_writer_tolerates_torn_tail(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    with obs_export.JsonlStreamWriter(path) as w:
+        tr = Tracer()
+        tr.attach_sink(w)
+        with tracing(tr):
+            with tr.span("a"):
+                pass
+            with tr.span("b"):
+                pass
+    # simulate the process dying mid-write: chop the last line in half
+    raw = path.read_bytes()
+    path.write_bytes(raw[:len(raw) - 17])
+    meta, spans = obs_export.from_jsonl(path)
+    assert meta.get("streaming") is True
+    names = [s["name"] for s in spans]
+    assert "a" in names                 # the valid prefix survived
+    a = next(s for s in spans if s["name"] == "a")
+    assert a["dur"] is not None         # its end line landed before the tear
+
+
+def test_stream_writer_survives_kill_dash_nine(tmp_path):
+    """The satellite's contract end-to-end: a child process streaming a
+    trace is SIGKILLed with spans open; the file left behind parses, the
+    finished span has its dur, the in-flight spans read back open."""
+    import signal
+    import subprocess
+    import sys
+    import time
+
+    path = tmp_path / "killed.jsonl"
+    child = subprocess.Popen(
+        [sys.executable, "-c", f"""
+import sys, time
+from repro.obs.trace import Tracer, tracing
+from repro.obs.export import JsonlStreamWriter
+
+w = JsonlStreamWriter({str(path)!r})
+tr = Tracer()
+tr.attach_sink(w)
+with tracing(tr):
+    with tr.span("finished", qid="Q1"):
+        pass
+    open_outer = tr.start("query", qid="Q9")
+    open_inner = tr.start("storage_execute", parent=open_outer, node=0)
+    print("SPANS_OPEN", flush=True)
+    time.sleep(30)                     # killed long before this returns
+"""],
+        stdout=subprocess.PIPE, text=True, env={"PYTHONPATH": "src"},
+        cwd="/root/repo")
+    try:
+        assert child.stdout.readline().strip() == "SPANS_OPEN"
+        child.send_signal(signal.SIGKILL)
+        child.wait(timeout=30)
+    finally:
+        if child.poll() is None:
+            child.kill()
+    assert child.returncode == -signal.SIGKILL
+    meta, spans = obs_export.from_jsonl(path)
+    assert meta.get("streaming") is True
+    by_name = {s["name"]: s for s in spans}
+    assert by_name["finished"]["dur"] is not None
+    assert by_name["query"]["dur"] is None
+    assert by_name["storage_execute"]["dur"] is None
+    assert by_name["storage_execute"]["parent"] == by_name["query"]["sid"]
+    assert by_name["query"]["attrs"]["qid"] == "Q9"
+
+
+def test_stream_writer_matches_batch_export_shape(tmp_path):
+    """Streaming a real engine run produces the same forest as the batch
+    exporter over the same tracer — the crash-safe path loses nothing."""
+    tr = Tracer()
+    w = obs_export.JsonlStreamWriter(tmp_path / "live.jsonl")
+    tr.attach_sink(w)
+    with tracing(tr):
+        engine.run_query(Q.build_query("Q6"), CAT,
+                         engine.EngineConfig(mode="adaptive"))
+    w.close()
+    obs_export.to_jsonl(tr, tmp_path / "batch.jsonl")
+    _, live = obs_export.from_jsonl(tmp_path / "live.jsonl")
+    _, batch = obs_export.from_jsonl(tmp_path / "batch.jsonl")
+    assert obs_export.build_tree(live) == obs_export.build_tree(batch)
