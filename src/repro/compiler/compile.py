@@ -103,7 +103,7 @@ def compile_ir(root: ir.Node, qid: str = "Q?",
     residual = sp.residual
     q = Query(qid=qid.upper(), plans=sp.plans,
               compute=lambda merged: interpreter.run(residual, merged),
-              shuffle_keys=sp.shuffle_keys)
+              shuffle_keys=sp.shuffle_keys, residual=residual)
     return CompiledQuery(qid.upper(), root, residual, q,
                          analyzer.analyze(root), batchable=sp.batchable,
                          split=sp)

@@ -11,6 +11,7 @@ the storage layer's compile-once executor (``core.executor``).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable, Dict, Tuple
 
 import numpy as np
@@ -21,19 +22,25 @@ from repro.queryproc import operators as ops
 from repro.queryproc.table import ColumnTable
 
 
-_PRED_CACHE: Dict[int, Tuple[ir.Filter, Callable]] = {}
+_PRED_CACHE: "OrderedDict[int, Tuple[ir.Filter, Callable]]" = OrderedDict()
+_PRED_CACHE_CAP = 4096   # bounded: a query has a handful of these
 
 
 def _compiled_pred(node: ir.Filter) -> Callable:
     """Compile-once cache for residual Filter predicates, keyed by node
-    identity (the node itself is retained, so its id cannot be reused)."""
+    identity (the node itself is retained, so its id cannot be reused).
+    LRU-bounded: at capacity the least-recently-used entry is evicted —
+    the hot working set survives, unlike a wholesale clear that would
+    recompile every live query's predicates on the next touch."""
     hit = _PRED_CACHE.get(id(node))
     if hit is not None and hit[0] is node:
+        _PRED_CACHE.move_to_end(id(node))
         return hit[1]
     fn = ex.compile_expr(node.predicate)
-    if len(_PRED_CACHE) > 4096:   # bounded: a query has a handful of these
-        _PRED_CACHE.clear()
     _PRED_CACHE[id(node)] = (node, fn)
+    _PRED_CACHE.move_to_end(id(node))
+    while len(_PRED_CACHE) > _PRED_CACHE_CAP:
+        _PRED_CACHE.popitem(last=False)
     return fn
 
 
@@ -81,7 +88,9 @@ def _eval(node: ir.Node, merged: Dict[str, ColumnTable],
     if isinstance(node, ir.SemiJoin):
         left = run(node.left, merged)
         right = run(node.right, merged)
-        mask = np.isin(left.cols[node.lkey], np.unique(right.cols[node.rkey]))
+        # np.isin builds its own hash/sort structure over the test values —
+        # pre-unique'ing them was a redundant O(n log n) pass
+        mask = np.isin(left.cols[node.lkey], right.cols[node.rkey])
         return left.filter(~mask if node.anti else mask)
     if isinstance(node, ir.TopK):
         return ops.top_k(run(node.child, merged), node.col, node.k,

@@ -94,6 +94,14 @@ class EngineConfig:
     retry: Optional[object] = None        # faults.RetryPolicy
     hedge: Optional[object] = None        # faults.HedgePolicy (run_stream)
     breaker: Optional[object] = None      # faults.CircuitBreaker
+    # residual backend (runtime.RESIDUALS): "interpreter" walks the
+    # residual IR with the numpy oracle; "tensor" compiles it into fused
+    # jax.jit programs (compiler.tensorize — jit-cached per input-shape
+    # bucket); "auto" picks tensor at/above the calibrated row-count
+    # crossover. Results are identical under every backend for every
+    # mode and decision vector (tests/test_tensorize.py) — this knob is
+    # purely a performance override, like filter_gather_threshold.
+    residual: str = runtime.RESIDUAL_INTERPRETER
 
 
 @dataclasses.dataclass
@@ -129,6 +137,11 @@ class QueryRun:
     # retries, faults_injected — reconciles exactly with the FaultPlan's
     # event ledger (tests/test_faults.py)
     recovery: Optional[Dict] = None
+    # residual-backend accounting: which backend evaluated the residual
+    # ("interpreter" | "tensor") and, on the tensor path, its jit-cache
+    # hit/miss + fallback counters (None when the interpreter ran)
+    residual_backend: str = "interpreter"
+    residual_jit: Optional[Dict] = None
 
     @property
     def t_total(self) -> float:
@@ -261,8 +274,19 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
         # close the loop: measured pushdown bytes correct future estimates
         runtime.feed_corrector(cfg.corrector, query.qid, reqs,
                                split.outcomes)
-    with tr.span("residual_compute", qid=query.qid):
-        result = query.compute(split.merged)
+    with tr.span("residual_compute", qid=query.qid,
+                 backend=cfg.residual) as rsp:
+        result, trun = runtime.run_residual(query, split.merged,
+                                            cfg.residual)
+        if tr.enabled and trun is not None:
+            tr.amend(rsp, backend="tensor", jit_hits=trun.jit_hits,
+                     jit_misses=trun.jit_misses, fell_back=trun.fell_back)
+    residual_jit = None
+    if trun is not None:
+        residual_jit = {"hits": trun.jit_hits, "misses": trun.jit_misses,
+                        "fell_back": trun.fell_back,
+                        "observed": trun.observed,
+                        "n_stages": trun.n_stages}
     t_np = nonpushable_time(split.merged, cfg)
     m = get_metrics()
     m.counter("engine.queries").inc()
@@ -287,7 +311,9 @@ def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
         n_pushed_back=sim.pushed_back_by_query.get(query.qid, 0),
         real_net_bytes=split.real_net_bytes,
         net_bytes_recon=runtime.reconcile_net_bytes(sim, reqs, split),
-        outcomes=split.outcomes, recovery=recovery)
+        outcomes=split.outcomes, recovery=recovery,
+        residual_backend=("tensor" if trun is not None else "interpreter"),
+        residual_jit=residual_jit)
 
 
 def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,

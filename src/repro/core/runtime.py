@@ -57,6 +57,44 @@ from repro.obs import trace as obs_trace
 from repro.obs.metrics import get_metrics
 from repro.queryproc.table import ColumnTable
 
+# residual backends (EngineConfig.residual): how the compute layer
+# evaluates the post-pushdown residual plan over the merged tables.
+#   interpreter — the numpy tree-walker (compiler.interpreter), the oracle
+#   tensor      — fused jax.jit programs (compiler.tensorize), results
+#                 identical, faster on residual-dominant queries
+#   auto        — tensor iff the merged input is at or above the
+#                 calibrated crossover (tensorize.auto_threshold)
+RESIDUAL_INTERPRETER = "interpreter"
+RESIDUAL_TENSOR = "tensor"
+RESIDUAL_AUTO = "auto"
+RESIDUALS = (RESIDUAL_INTERPRETER, RESIDUAL_TENSOR, RESIDUAL_AUTO)
+
+
+def run_residual(query, merged: Dict[str, ColumnTable],
+                 backend: str = RESIDUAL_INTERPRETER):
+    """Evaluate ``query``'s residual over the merged per-table results.
+
+    Returns ``(table, info)`` where ``info`` is ``None`` on the
+    interpreter path and a ``tensorize.TensorRun`` (jit-cache hit/miss,
+    fallback and observe accounting) on the tensor path. Queries with no
+    attached residual IR (hand-built seed queries) always run their
+    ``compute`` closure — the tensor backend needs the IR. Both backends
+    produce identical tables for every query and decision vector
+    (tests/test_tensorize.py)."""
+    if backend is not None and backend not in RESIDUALS:
+        raise ValueError(f"unknown residual backend {backend!r}; "
+                         f"expected one of {RESIDUALS}")
+    residual = getattr(query, "residual", None)
+    if residual is None or backend in (None, RESIDUAL_INTERPRETER):
+        return query.compute(merged), None
+    from repro.compiler import tensorize  # lazy: keeps jax off cold paths
+    if backend == RESIDUAL_AUTO:
+        rows = sum(len(t) for t in merged.values())
+        if rows < tensorize.auto_threshold():
+            return query.compute(merged), None
+    run = tensorize.execute(residual, merged)
+    return run.table, run
+
 
 # --------------------------------------------------------- split execution
 @dataclasses.dataclass
@@ -811,8 +849,15 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
             with tr.span("merge", parent=qspan, tables=sorted(by_table)):
                 merged = {t: ColumnTable.concat(p)
                           for t, p in by_table.items()}
-            with tr.span("residual_compute", parent=qspan):
-                return sq.query.compute(merged)
+            backend = getattr(cfg, "residual", RESIDUAL_INTERPRETER)
+            with tr.span("residual_compute", parent=qspan) as rsp:
+                res, trun = run_residual(sq.query, merged, backend)
+                if tr.enabled:
+                    tr.amend(rsp, backend=("tensor" if trun is not None
+                                           else "interpreter"),
+                             jit_hits=(trun.jit_hits if trun else None),
+                             jit_misses=(trun.jit_misses if trun else None))
+                return res
 
         result = on_core(merge_and_compute)
         sim_pd = sum(r.cost.s_out for r in reqs_by_key[key]

@@ -58,6 +58,10 @@ class Query:
     shuffle_keys: Dict[str, str] = dataclasses.field(default_factory=dict)
     #   ^ table -> redistribution key required by the downstream join
     #     (drives the Fig-15 distributed-shuffle evaluation)
+    # residual IR (compiler-produced queries only): lets the engine swap
+    # the residual backend (runtime.run_residual) instead of being bound
+    # to the ``compute`` closure; None for the hand-built seed queries
+    residual: Optional[object] = None
 
 
 def _agg(t, keys, aggs):

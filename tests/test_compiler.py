@@ -180,6 +180,66 @@ def test_interpreter_shared_subtree_evaluated_once():
     assert len(calls) == 1
 
 
+def test_interpreter_memoizes_shared_aggregate_subtree():
+    """The memo is per-run and id-keyed: a diamond over the same Aggregate
+    object must evaluate it once, and both consumers must see the *same*
+    table object (not an equal copy)."""
+    seen = []
+    agg = ir.Aggregate(ir.Merged("t"), ("k",), (("s", "sum", "v"),))
+    tap = ir.PyOp((agg,), lambda t: (seen.append(t), t)[1])
+    root = ir.Join(ir.PyOp((agg,), lambda t: (seen.append(t), t)[1]),
+                   tap, "k", "k")
+    t = ColumnTable({"k": np.asarray([1, 1, 2]),
+                     "v": np.asarray([10.0, 20.0, 30.0])})
+    out = interpreter.run(root, {"t": t})
+    assert seen[0] is seen[1]   # one evaluation, one object
+    assert len(out) == 2
+
+
+def test_interpreter_project_drops_missing_columns():
+    """ir.Project keeps only columns present in the input — a residual
+    Project may name columns the pushed frontier already consumed."""
+    t = ColumnTable({"a": np.arange(4), "b": np.arange(4) * 2})
+    out = interpreter.run(ir.Project(ir.Merged("t"), ("b", "ghost")),
+                          {"t": t})
+    assert list(out.cols) == ["b"]
+    assert np.array_equal(out.cols["b"], np.arange(4) * 2)
+
+
+def test_interpreter_semijoin_duplicate_right_keys():
+    """SemiJoin membership is set semantics regardless of right-side key
+    duplication (the np.unique pre-pass was dropped as redundant)."""
+    left = ColumnTable({"k": np.asarray([1, 2, 3, 4])})
+    right = ColumnTable({"rk": np.asarray([2, 2, 4, 4, 4])})
+    semi = interpreter.run(
+        ir.SemiJoin(ir.Merged("l"), ir.Merged("r"), "k", "rk"),
+        {"l": left, "r": right})
+    assert np.array_equal(semi.cols["k"], [2, 4])
+    anti = interpreter.run(
+        ir.SemiJoin(ir.Merged("l"), ir.Merged("r"), "k", "rk", anti=True),
+        {"l": left, "r": right})
+    assert np.array_equal(anti.cols["k"], [1, 3])
+
+
+def test_pred_cache_lru_eviction(monkeypatch):
+    """_PRED_CACHE evicts least-recently-used at capacity instead of
+    clearing wholesale; a touch refreshes an entry's recency."""
+    monkeypatch.setattr(interpreter, "_PRED_CACHE_CAP", 4)
+    interpreter._PRED_CACHE.clear()
+    t = ColumnTable({"a": np.arange(8)})
+    nodes = [ir.Filter(ir.Merged("t"), Col("a") < i) for i in range(6)]
+    for n in nodes:   # list keeps the nodes alive -> ids stay unique
+        interpreter.run(n, {"t": t})
+    assert len(interpreter._PRED_CACHE) == 4
+    assert set(interpreter._PRED_CACHE) == {id(n) for n in nodes[2:]}
+    interpreter.run(nodes[2], {"t": t})   # refresh the oldest survivor
+    extra = ir.Filter(ir.Merged("t"), Col("a") < 99)
+    interpreter.run(extra, {"t": t})
+    assert id(nodes[2]) in interpreter._PRED_CACHE   # refreshed: kept
+    assert id(nodes[3]) not in interpreter._PRED_CACHE   # LRU: evicted
+    interpreter._PRED_CACHE.clear()
+
+
 def test_splitter_absorbs_topk_without_agg():
     """scan+filter+topk chain: partial top-k pushes, residual re-selects."""
     n = ir.TopK(ir.Filter(ir.Scan("lineitem", ("l_orderkey", "l_quantity")),

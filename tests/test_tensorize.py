@@ -1,0 +1,308 @@
+"""Tensorized compute residual (compiler.tensorize + engine dispatch).
+
+The load-bearing invariant: the interpreter is the oracle. For every
+TPC-H residual, every engine mode, every decision vector, warm or cold
+jit caches, and fault-demoted replays, the tensor backend's table is
+identical (``engine.results_equal``) to the interpreter's. On top: the
+observe -> jit-miss -> jit-hit protocol is pinned via ``TensorRun``
+counters, shape buckets share compiled programs, out-of-domain keys
+respecialize (gen bump) without changing results, duplicate-right-key
+joins fall back gracefully, and ``compile_expr_jnp`` matches
+``compile_expr`` bitwise on random columns.
+"""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.compiler import (compile_query, compile_query_detailed,
+                            interpreter, ir, tensorize)
+from repro.compiler.tpch_ir import QUERY_IDS
+from repro.core import engine, runtime
+from repro.core.arbitrator import PUSHBACK, PUSHDOWN
+from repro.queryproc import expressions as ex
+from repro.queryproc import tpch
+from repro.queryproc.expressions import Col
+from repro.queryproc.expressions_jax import compile_expr_jnp
+from repro.queryproc.table import ColumnTable
+
+CAT = tpch.build_catalog(sf=0.5, num_nodes=2, rows_per_partition=4_000)
+CFG = engine.EngineConfig(mode="eager")
+
+
+def merged_for(cq):
+    """All-pushdown merged tables (identical for any decision vector)."""
+    out = {}
+    for t, plan in cq.plans.items():
+        parts = [engine.execute_push_plan(plan, p.data)[0]
+                 for p in CAT.partitions_of(t)]
+        out[t] = ColumnTable.concat(parts)
+    return out
+
+
+# ------------------------------------------------ all-15 oracle identity
+@pytest.mark.parametrize("qid", QUERY_IDS)
+def test_tensor_matches_interpreter(qid):
+    """observe -> first jit (miss) -> warm (hit): all three runs return
+    the interpreter's exact table, and the warm run hits every stage."""
+    cq = compile_query_detailed(qid)
+    merged = merged_for(cq)
+    ref = interpreter.run(cq.residual, merged)
+    r_obs = tensorize.execute(cq.residual, merged)
+    r_cold = tensorize.execute(cq.residual, merged)
+    r_warm = tensorize.execute(cq.residual, merged)
+    assert r_obs.observed and not r_cold.observed and not r_warm.observed
+    for r in (r_obs, r_cold, r_warm):
+        assert engine.results_equal(ref, r.table), qid
+        assert not r.fell_back, qid
+    # every jittable stage misses cold and hits warm (a stage may be
+    # host-only — e.g. Q22's PyOp tail — and then touches no jit cache)
+    assert r_cold.jit_hits == 0 and r_cold.jit_misses >= 1
+    assert r_warm.jit_misses == 0
+    assert r_warm.jit_hits == r_cold.jit_misses
+
+
+def test_pyop_queries_partition_into_two_stages():
+    """Q15/Q22 residuals contain a PyOp — the lowering must split into
+    maximal jittable segments around it, not give up on the query."""
+    for qid in ("Q15", "Q22"):
+        cq = compile_query_detailed(qid)
+        merged = merged_for(cq)
+        tensorize.execute(cq.residual, merged)           # observe
+        r = tensorize.execute(cq.residual, merged)
+        assert r.n_stages == 2, qid
+        assert not r.fell_back, qid
+
+
+# ------------------------------------------- modes and decision vectors
+@pytest.mark.parametrize("mode", engine.MODES)
+def test_engine_modes_identical(mode):
+    """Same query, same mode, both backends: identical results. The
+    decision vector differs per mode; merged inputs do not — but the
+    dispatch path (engine._run_decided) must behave under all four."""
+    for qid in ("Q5", "Q22"):
+        q = compile_query(qid)
+        ri = engine.run_query(q, CAT, engine.EngineConfig(mode=mode))
+        cfg_t = engine.EngineConfig(mode=mode, residual="tensor")
+        engine.run_query(q, CAT, cfg_t)                  # observe
+        rt = engine.run_query(q, CAT, cfg_t)
+        assert engine.results_equal(ri.result, rt.result), (qid, mode)
+        assert rt.residual_backend == "tensor"
+        assert ri.residual_backend == "interpreter"
+
+
+def test_random_decision_vectors_identical():
+    """Hand-rolled pushdown/pushback splits: the merged tables are
+    reassembly-identical, so the tensor residual must be too."""
+    rng = np.random.default_rng(7)
+    cq = compile_query_detailed("Q12")
+    reqs = engine.plan_requests(cq.query, CAT)
+    for _ in range(3):
+        decisions = {r.req_id: (PUSHDOWN if rng.random() < 0.5 else PUSHBACK)
+                     for r in reqs}
+        split = runtime.execute_split(reqs, decisions, CFG.executor, None)
+        ref = interpreter.run(cq.residual, split.merged)
+        run = tensorize.execute(cq.residual, split.merged)
+        assert engine.results_equal(ref, run.table)
+
+
+def test_fault_demoted_replay_identical(monkeypatch):
+    """Guaranteed-crash fault plan: every admitted group demotes to
+    pushback replay — the tensor residual still matches the clean run."""
+    from repro.core.faults import FaultPlan, RetryPolicy
+    q = compile_query("Q6")
+    clean = engine.run_query(q, CAT, CFG)
+    cfg = engine.EngineConfig(
+        mode="eager", residual="tensor",
+        faults=FaultPlan.from_spec("pushdown.crash:1.0", seed=3),
+        retry=RetryPolicy(sleep_scale=0.0))
+    engine.run_query(q, CAT, cfg)                        # observe
+    run = engine.run_query(q, CAT, cfg)
+    assert run.recovery is not None and run.recovery["n_demoted"] > 0
+    assert run.residual_backend == "tensor"
+    assert engine.results_equal(clean.result, run.result)
+
+
+# ------------------------------------------------- engine accounting/auto
+def test_queryrun_jit_accounting():
+    q = compile_query("Q14")
+    cfg = engine.EngineConfig(mode="eager", residual="tensor")
+    r1 = engine.run_query(q, CAT, cfg)
+    r2 = engine.run_query(q, CAT, cfg)
+    r3 = engine.run_query(q, CAT, cfg)
+    assert r1.residual_jit["observed"] is True
+    assert r2.residual_jit["misses"] == r2.residual_jit["n_stages"]
+    assert r3.residual_jit["hits"] == r3.residual_jit["n_stages"]
+    assert r3.residual_jit["misses"] == 0
+    assert not r3.residual_jit["fell_back"]
+
+
+def test_auto_mode_threshold(monkeypatch):
+    """auto = tensor at/above the crossover, interpreter below; the env
+    override feeds the same knob the calibration would."""
+    q = compile_query("Q6")
+    monkeypatch.setattr(tensorize, "_AUTO_THRESHOLD", None)
+    monkeypatch.setenv("REPRO_RESIDUAL_THRESHOLD", "1")
+    r_hi = engine.run_query(
+        q, CAT, engine.EngineConfig(mode="eager", residual="auto"))
+    assert r_hi.residual_backend == "tensor"
+    monkeypatch.setattr(tensorize, "_AUTO_THRESHOLD", None)
+    monkeypatch.setenv("REPRO_RESIDUAL_THRESHOLD", str(1 << 40))
+    r_lo = engine.run_query(
+        q, CAT, engine.EngineConfig(mode="eager", residual="auto"))
+    assert r_lo.residual_backend == "interpreter"
+    assert engine.results_equal(r_hi.result, r_lo.result)
+    monkeypatch.setattr(tensorize, "_AUTO_THRESHOLD", None)
+
+
+def test_calibration_returns_usable_threshold(monkeypatch):
+    """The measured crossover is a positive row count (or inf when the
+    tensor backend never wins — auto then stays on the oracle), and
+    REPRO_NO_CALIBRATE pins the documented default."""
+    th = tensorize.calibrate_residual_threshold(sizes=(512, 2_048),
+                                                repeats=1)
+    assert th > 0
+    monkeypatch.setattr(tensorize, "_AUTO_THRESHOLD", None)
+    monkeypatch.delenv("REPRO_RESIDUAL_THRESHOLD", raising=False)
+    monkeypatch.setenv("REPRO_NO_CALIBRATE", "1")
+    assert tensorize.auto_threshold() == tensorize.DEFAULT_RESIDUAL_THRESHOLD
+    monkeypatch.setattr(tensorize, "_AUTO_THRESHOLD", None)
+
+
+def test_unknown_backend_rejected():
+    q = compile_query("Q6")
+    with pytest.raises(ValueError, match="residual backend"):
+        engine.run_query(q, CAT,
+                         engine.EngineConfig(mode="eager", residual="bogus"))
+
+
+def test_seed_queries_without_residual_fall_through():
+    """Hand-built seed queries carry no residual IR: the tensor backend
+    must transparently run their compute closure."""
+    from repro.queryproc import queries as Q
+    q = Q.build_query_legacy("Q6")
+    assert q.residual is None
+    r = engine.run_query(q, CAT,
+                         engine.EngineConfig(mode="eager", residual="tensor"))
+    ref = engine.run_query(q, CAT, CFG)
+    assert r.residual_backend == "interpreter"
+    assert engine.results_equal(r.result, ref.result)
+
+
+# ------------------------------------------------ specialization machinery
+def _agg_residual():
+    return ir.Aggregate(ir.Merged("t"), ("k",), (("s", "sum", "v"),))
+
+
+def _tab(keys, vals=None):
+    keys = np.asarray(keys, dtype=np.int64)
+    vals = (np.ones(len(keys)) if vals is None
+            else np.asarray(vals, dtype=np.float64))
+    return ColumnTable({"k": keys, "v": vals})
+
+
+def test_respecialize_on_domain_growth():
+    """Keys outside the observed domain trip the in-trace guard: that run
+    falls back (still correct), the artifact respecializes (gen bump),
+    and the next run jits cleanly over the widened bounds."""
+    res = _agg_residual()
+    small = {"t": _tab(np.arange(64) % 4)}
+    big = {"t": _tab(np.arange(64) % 4 + 100)}       # disjoint key range
+    tensorize.execute(res, small)                    # observe on small
+    art = tensorize._artifact(res)
+    assert art.gen == 0
+    ok = tensorize.execute(res, small)
+    assert not ok.fell_back
+    r_fb = tensorize.execute(res, big)               # oob -> guard trips
+    assert r_fb.fell_back
+    assert engine.results_equal(interpreter.run(res, big), r_fb.table)
+    assert art.gen == 1 and art.respecs == 1
+    r_ok = tensorize.execute(res, big)               # widened spec jits
+    assert not r_ok.fell_back and not art.disabled
+    assert engine.results_equal(interpreter.run(res, big), r_ok.table)
+
+
+def test_shape_buckets_share_jitted_programs():
+    """Row counts in the same pow-2 bucket reuse the compiled program;
+    crossing a bucket boundary compiles once more, results identical."""
+    res = _agg_residual()
+    m900 = {"t": _tab(np.arange(900) % 8)}
+    m1000 = {"t": _tab(np.arange(1000) % 8)}
+    m1500 = {"t": _tab(np.arange(1500) % 8)}
+    tensorize.execute(res, m900)                     # observe
+    r1 = tensorize.execute(res, m900)                # 1024-bucket miss
+    assert r1.jit_misses == 1
+    r2 = tensorize.execute(res, m1000)               # same bucket: hit
+    assert r2.jit_hits == 1 and r2.jit_misses == 0
+    r3 = tensorize.execute(res, m1500)               # 2048-bucket: miss
+    assert r3.jit_misses == 1
+    for m in (m900, m1000, m1500):
+        got = tensorize.execute(res, m)
+        assert engine.results_equal(interpreter.run(res, m), got.table)
+        assert got.jit_hits == 1
+
+
+def test_join_duplicate_right_keys_falls_back():
+    """The dense-LUT probe requires unique build keys; a many-to-many
+    right side must fall back to the interpreter with the same table."""
+    res = ir.Join(ir.Merged("l"), ir.Merged("r"), "k", "rk")
+    merged = {"l": ColumnTable({"k": np.asarray([1, 2, 3]),
+                                "x": np.asarray([1.0, 2.0, 3.0])}),
+              "r": ColumnTable({"rk": np.asarray([2, 2, 3]),
+                                "y": np.asarray([10.0, 20.0, 30.0])})}
+    tensorize.execute(res, merged)                   # observe
+    run = tensorize.execute(res, merged)
+    assert run.fell_back
+    assert engine.results_equal(interpreter.run(res, merged), run.table)
+
+
+def test_join_non_integer_keys_use_sorted_probe():
+    """Float keys cannot index a dense LUT — the join must still jit via
+    the in-trace sorted-probe path, not fall back."""
+    res = ir.Join(ir.Merged("l"), ir.Merged("r"), "k", "rk")
+    merged = {"l": ColumnTable({"k": np.asarray([1.5, 2.5, 3.5, 9.0]),
+                                "x": np.asarray([1.0, 2.0, 3.0, 4.0])}),
+              "r": ColumnTable({"rk": np.asarray([2.5, 3.5, 7.0]),
+                                "y": np.asarray([10.0, 20.0, 30.0])})}
+    ref = interpreter.run(res, merged)
+    tensorize.execute(res, merged)                   # observe
+    run = tensorize.execute(res, merged)
+    assert not run.fell_back
+    assert engine.results_equal(ref, run.table)
+
+
+def test_empty_build_side():
+    """An empty right table yields an empty (but well-formed) probe."""
+    res = ir.SemiJoin(ir.Merged("l"), ir.Merged("r"), "k", "rk")
+    merged = {"l": _tab([1, 2, 3]),
+              "r": ColumnTable({"rk": np.asarray([], dtype=np.int64)})}
+    ref = interpreter.run(res, merged)
+    tensorize.execute(res, merged)                   # observe
+    run = tensorize.execute(res, merged)
+    assert len(run.table) == 0
+    assert engine.results_equal(ref, run.table)
+
+
+# --------------------------------------------- expression twin equivalence
+def test_compile_expr_jnp_matches_numpy():
+    import jax
+    from jax.experimental import enable_x64
+    rng = np.random.default_rng(11)
+    cols = {"a": rng.integers(0, 50, 400).astype(np.int64),
+            "b": rng.normal(size=400),
+            "c": rng.integers(0, 5, 400).astype(np.int64)}
+    exprs = [
+        Col("a") < 25,
+        (Col("a") >= 10) & (Col("b") <= 0.3),
+        (Col("b") > Col("b")) | Col("c").eq(2),
+        Col("c").isin((1, 3, 4)) & (Col("a") > 5),
+        (Col("a") <= Col("a")) & Col("c").isin((0,)),
+    ]
+    with enable_x64():
+        for e in exprs:
+            want = ex.compile_expr(e)(cols)
+            jf = jax.jit(compile_expr_jnp(e))
+            got = np.asarray(jf({k: v for k, v in cols.items()}))
+            assert np.array_equal(want, got), e
