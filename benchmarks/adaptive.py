@@ -448,6 +448,142 @@ def render_chaos(out: dict) -> str:
         f'{out["stream_hedged"]}), ok={out["chaos_ok"]}')
 
 
+# --------------------------- process-tier chaos arm (real worker kill)
+PROCESS_TIER_KWARGS = {"qids": ("Q1", "Q6", "Q12", "Q14"), "sf": 1.0,
+                       "kill_after": 2}
+
+
+def run_process_tier(qids=None, sf: float = 1.0, power: float = 0.375,
+                     wave_gap: float = 0.005, kill_after: int = 2) -> dict:
+    """Chaos A/B through the REAL multi-process storage tier under a
+    pinned worker-kill schedule (docs/distributed.md): node 0's worker
+    self-SIGKILLs before work item ``kill_after``+1 — deterministic by
+    work-item count, no injected schedule involved.
+
+    Three arms over the same arrival-timed stream:
+
+    - ``clean``            — in-process tier, no faults (the reference)
+    - ``recovery``         — process tier + the kill schedule: the dead
+      channel's ``WorkerFault`` flows through retry -> demote-to-pushback
+      (local replay from the parent's catalog copy), results
+      byte-identical to clean
+    - ``fail_and_restart`` — same kill, ``demote_on_exhaust=False``: the
+      stream aborts and restarts from scratch on a replacement pool
+
+    Hard-asserted (the CI step fails on any violation): byte-identity
+    across all arms, the killed worker really dead, ``n_demoted`` > 0,
+    the pool's real-fault ledger reconciling exactly with the
+    ``faults.*`` counters, and recovery not losing to
+    restart-on-replacement wall clock (``chaos_ok``)."""
+    import time as _time
+
+    from repro.core import runtime
+    from repro.core.cost import StorageResources
+    from repro.core.faults import RetryPolicy
+    from repro.distributed.workers import WorkerPool
+    from repro.obs import metrics as om
+
+    sf = sf or 1.0
+    cat = common.catalog(num_nodes=2, sf=sf)
+    qids = tuple(qids or Q.QUERY_IDS)
+    res = StorageResources(storage_power=power)
+    stream = _stream(qids, wave_gap)
+    retry = RetryPolicy()
+    prev_metrics = om.get_metrics()
+
+    def timed_stream(cfg):
+        t0 = _time.perf_counter()
+        r = runtime.run_stream(stream, cat, cfg)
+        return _time.perf_counter() - t0, r
+
+    # measured_feedback off: arms must not see each other's gauges
+    t_clean, clean = timed_stream(engine.EngineConfig(
+        res=res, mode=MODE_ADAPTIVE, measured_feedback=False))
+
+    # ---- recovery: real SIGKILL mid-stream, demote-to-pushback -----------
+    om.set_metrics(om.Metrics())          # isolate the recovery ledger
+    pool = WorkerPool(cat, pd_slots=res.pd_slots)
+    try:
+        pool.die_after(0, kill_after)
+        t_rec, rec = timed_stream(engine.EngineConfig(
+            res=res, mode=MODE_ADAPTIVE, worker_pool=pool, retry=retry,
+            measured_feedback=False))
+        _assert_results_identical(clean.results, rec.results,
+                                  "process_recovery", qids)
+        assert not pool.alive(0) and pool.alive(1)
+        assert rec.n_demoted > 0          # recovery actually happened
+        events = list(pool.events)
+        c = om.get_metrics().snapshot()["counters"]
+        # exact reconciliation: every channel fault the pool recorded was
+        # counted once by the recovery loop, by kind and by (node, path)
+        assert len(events) > 0 and c.get("faults.crash", 0) + \
+            c.get("faults.timeout", 0) == len(events)
+        per_node_path = sum(v for k, v in c.items()
+                            if k.startswith("faults.node")
+                            and k.endswith(".failures"))
+        assert per_node_path == len(events)
+    finally:
+        pool.close()
+        om.set_metrics(prev_metrics)
+
+    # ---- fail-and-restart: abort, replace the pool, rerun ----------------
+    strict = RetryPolicy(demote_on_exhaust=False)
+    t_fte, restarts = 0.0, 0
+    armed = True                          # only the first pool is doomed
+    while True:
+        p = WorkerPool(cat, pd_slots=res.pd_slots)
+        try:
+            if armed:
+                p.die_after(0, kill_after)
+            t0 = _time.perf_counter()
+            try:
+                fte = runtime.run_stream(stream, cat, engine.EngineConfig(
+                    res=res, mode=MODE_ADAPTIVE, worker_pool=p,
+                    retry=strict, measured_feedback=False))
+                t_fte += _time.perf_counter() - t0
+                break
+            except RuntimeError:
+                t_fte += _time.perf_counter() - t0
+                restarts += 1
+                armed = False             # the crashed node gets replaced
+                if restarts > CHAOS_MAX_RESTARTS:
+                    raise
+        finally:
+            p.close()
+    _assert_results_identical(clean.results, fte.results,
+                              "process_fail_and_restart", qids)
+    assert restarts >= 1                  # the kill really aborted a run
+    ok = bool(t_rec <= 1.15 * t_fte)
+    assert ok, ("recovery lost to restart-on-replacement", t_rec, t_fte)
+    return {
+        "sf": sf, "power": power, "kill_after": kill_after,
+        "qids": list(qids), "all_identical": True,
+        "n_demoted": rec.n_demoted, "retries": rec.retries,
+        "real_faults": len(events), "restarts": restarts,
+        "t_clean_ms": 1e3 * t_clean, "t_recovery_ms": 1e3 * t_rec,
+        "t_fail_and_restart_ms": 1e3 * t_fte,
+        "total_speedup": t_fte / max(t_rec, 1e-9),
+        "chaos_ok": ok,
+    }
+
+
+def render_process_tier(out: dict) -> str:
+    rows = [
+        ["clean (inproc)", f'{out["t_clean_ms"]:.1f}', "-", "-"],
+        ["recovery", f'{out["t_recovery_ms"]:.1f}', out["n_demoted"],
+         out["real_faults"]],
+        ["fail_and_restart", f'{out["t_fail_and_restart_ms"]:.1f}',
+         f'{out["restarts"]} restarts', "-"],
+    ]
+    hdr = ["arm", "wall_ms", "demoted", "real faults"]
+    return common.table(rows, hdr) + (
+        f'\nprocess-tier chaos (sf={out["sf"]}, worker 0 killed after '
+        f'{out["kill_after"]} items): recovery vs restart-on-replacement '
+        f'{out["total_speedup"]:.2f}x, {out["real_faults"]} real channel '
+        f'faults reconciled, identical={out["all_identical"]}, '
+        f'ok={out["chaos_ok"]}')
+
+
 # ------------------------------------ online-correction A/B (correction)
 def run_correction(qids=None, rounds: int = 4, sf: float = None,
                    power: float = 1.0) -> dict:
@@ -628,8 +764,14 @@ if __name__ == "__main__":
     ap.add_argument("--chaos-quick", action="store_true",
                     help="fault-tolerance A/B, sf=1 mix under a pinned "
                          "~10%% storage-failure schedule (CI chaos smoke)")
+    ap.add_argument("--process-tier", action="store_true",
+                    help="chaos A/B through the real multi-process storage "
+                         "tier under a pinned worker-kill schedule "
+                         "(hard-asserting; CI chaos smoke)")
     args = ap.parse_args()
-    if args.chaos_quick:
+    if args.process_tier:
+        print(render_process_tier(run_process_tier(**PROCESS_TIER_KWARGS)))
+    elif args.chaos_quick:
         o = run_chaos(**CHAOS_QUICK_KWARGS)
         update_root_bench_chaos(o)
         print(render_chaos(o))

@@ -10,10 +10,13 @@ tolerance, when any entry recorded a result divergence, when the
 (``adaptive_ok``), when the ``correction`` suite's newest feedback
 loop failed to shrink the s_out estimate error (``converged``), when
 the ``obs`` suite's newest enabled-tracing overhead measurement blew its
-bound (``obs_overhead_ok`` — the tentpole's <2% promise), or when the
-``cache`` suite's newest warm arm failed its serve contract
+bound (``obs_overhead_ok`` — the tentpole's <2% promise), when the ``cache`` suite's newest warm arm failed its serve contract
 (``cache_ok`` — fully-warm hit rate, warm arbitration flipping
-partitions to pushdown, ``cache_hits`` reconciled with admits).
+partitions to pushdown, ``cache_hits`` reconciled with admits), or when
+the ``distributed`` suite's newest process-tier arm broke its contract
+(``distributed_ok`` — byte-identity across tiers, real worker pressure
+flipping at least one Arbitrator decision, process-tier adaptive not
+losing to its own eager baseline).
 
 A suite whose newest entry has **no comparable prior** (prior entries
 exist, but none at the same sf) is a hard failure, not a silent pass:
@@ -33,6 +36,7 @@ after the quick benchmarks:
     PYTHONPATH=src python -m benchmarks.obs_overhead --quick
     PYTHONPATH=src python -m benchmarks.cache --real-quick
     PYTHONPATH=src JAX_PLATFORMS=cpu python -m benchmarks.residual --real-quick
+    PYTHONPATH=src python -m benchmarks.distributed_tier --quick
     PYTHONPATH=src python -m benchmarks.perf_guard
 """
 from __future__ import annotations
@@ -61,9 +65,13 @@ TOLERANCE = 0.85
 # with queries auto-dispatch keeps on the interpreter (tiny inputs, the
 # lexsort-aggregate outlier) — jit wall-clock noise swings it; its hard
 # per-run invariant is ``residual_ok`` (identity + no fallbacks + the
-# residual-dominant subset's 1.3x floor).
+# residual-dominant subset's 1.3x floor). The distributed suite's speedup
+# (process-tier adaptive vs its own eager baseline) is structurally ~1.0
+# and thread-scheduling-noisy; its hard per-run invariant is
+# ``distributed_ok`` (identity + a real pressure-induced decision flip +
+# adaptive not losing to eager on its own tier).
 SUITE_TOLERANCE = {"runtime": 0.60, "cache": 0.60, "chaos": 0.60,
-                   "residual": 0.60}
+                   "residual": 0.60, "distributed": 0.60}
 
 
 def check(doc: dict, tolerance: float = TOLERANCE
@@ -110,6 +118,13 @@ def check(doc: dict, tolerance: float = TOLERANCE
                 f"{last.get('t_recovery_ms')}ms vs fail-to-error "
                 f"{last.get('t_fail_to_error_ms')}ms / no-pushdown "
                 f"{last.get('t_no_pushdown_ms')}ms)")
+        if last.get("distributed_ok") is False:
+            failures.append(
+                f"{suite}: newest process-tier arm broke its contract "
+                f"(identical={last.get('all_identical')}, "
+                f"decision_flips={last.get('decision_flips')}, adaptive "
+                f"{last.get('t_process_adaptive_ms')}ms vs eager "
+                f"{last.get('t_process_eager_ms')}ms)")
         if last.get("residual_ok") is False:
             failures.append(
                 f"{suite}: newest tensor-residual arm broke its contract "

@@ -46,6 +46,42 @@ from repro.storage.catalog import Catalog, Partition
 
 MODES = (MODE_NO_PUSHDOWN, MODE_EAGER, MODE_ADAPTIVE, MODE_ADAPTIVE_PA)
 
+# storage tiers (EngineConfig.storage_tier): where the storage side of a
+# split really runs.
+#   inproc  — partitions execute in this process (the oracle; the seed's
+#             behavior, byte-for-byte)
+#   process — one real storage-worker process per catalog node
+#             (distributed.workers.WorkerPool): plans dispatch over a
+#             length-prefixed wire codec, pushback ships real serialized
+#             bytes, workers publish live load signals, and worker death
+#             flows through retry -> demote recovery. Results are
+#             byte-identical across tiers for any decision vector and
+#             fault schedule (docs/distributed.md).
+STORAGE_INPROC = "inproc"
+STORAGE_PROCESS = "process"
+STORAGE_TIERS = (STORAGE_INPROC, STORAGE_PROCESS)
+
+
+def resolve_tier(cfg, catalog: Catalog):
+    """The worker pool a config's storage tier routes through, or ``None``
+    for the in-process oracle. An explicit ``cfg.worker_pool`` (a
+    ``distributed.workers.WorkerPool``, e.g. a test's own pool with a
+    pinned kill schedule) wins over the named tier; otherwise
+    ``storage_tier="process"`` resolves to the shared per-catalog pool
+    (``workers.pool_for``), sized by the config's ``pd_slots``."""
+    pool = getattr(cfg, "worker_pool", None)
+    if pool is not None:
+        return pool
+    tier = getattr(cfg, "storage_tier", STORAGE_INPROC)
+    if tier in (None, STORAGE_INPROC):
+        return None
+    if tier != STORAGE_PROCESS:
+        raise ValueError(f"unknown storage_tier {tier!r}; "
+                         f"expected one of {STORAGE_TIERS}")
+    from repro.distributed.workers import pool_for  # lazy: keeps the
+    #   multiprocessing machinery off every in-process import path
+    return pool_for(catalog, pd_slots=cfg.res.pd_slots)
+
 
 @dataclasses.dataclass
 class EngineConfig:
@@ -94,6 +130,14 @@ class EngineConfig:
     retry: Optional[object] = None        # faults.RetryPolicy
     hedge: Optional[object] = None        # faults.HedgePolicy (run_stream)
     breaker: Optional[object] = None      # faults.CircuitBreaker
+    # storage tier (STORAGE_TIERS): "inproc" executes the storage side in
+    # this process (the oracle); "process" dispatches it to real worker
+    # processes over the wire (distributed.workers) — byte-identical
+    # results, real transfer bytes, live worker load signals, and a real
+    # process-failure fault domain. `worker_pool` (a WorkerPool) overrides
+    # the named tier with an explicitly constructed pool.
+    storage_tier: str = STORAGE_INPROC
+    worker_pool: Optional[object] = None
     # residual backend (runtime.RESIDUALS): "interpreter" walks the
     # residual IR with the numpy oracle; "tensor" compiles it into fused
     # jax.jit programs (compiler.tensorize — jit-cached per input-shape
@@ -252,17 +296,19 @@ def nonpushable_time(merged: Dict[str, ColumnTable], cfg: EngineConfig) -> float
 
 def _run_decided(query: Query, reqs: List[PlannedRequest], sim: SimResult,
                  cfg: EngineConfig, t_pushable: float, net_bytes: float,
-                 bitmaps: Optional[Dict[int, np.ndarray]] = None
-                 ) -> QueryRun:
+                 bitmaps: Optional[Dict[int, np.ndarray]] = None,
+                 tier=None) -> QueryRun:
     """Real execution routed by the simulator's decision vector
     (``core.runtime.execute_split``), plus the net-bytes reconciliation.
-    ``bitmaps`` (req_id -> packed words) feeds apply_bitmap plans."""
+    ``bitmaps`` (req_id -> packed words) feeds apply_bitmap plans;
+    ``tier`` (resolve_tier) routes the storage side through real worker
+    processes."""
     tr = obs_trace.get_tracer()
     split = runtime.execute_split(reqs, sim.decisions(), cfg.executor,
                                   cfg.filter_gather_threshold,
                                   bitmaps=bitmaps, cache=cfg.result_cache,
                                   faults=cfg.faults, retry=cfg.retry,
-                                  breaker=cfg.breaker)
+                                  breaker=cfg.breaker, tier=tier)
     # the real split IS the simulated split — one decision vector, two
     # uses; under an active fault plan, admitted requests that exhausted
     # their retries were *demoted* to pushback (graceful degradation, the
@@ -330,7 +376,8 @@ def run_query(query: Query, catalog: Catalog, cfg: EngineConfig,
                        measured=_measured_of(cfg), breaker=cfg.breaker)
         run = _run_decided(query, reqs, sim, cfg,
                            t_pushable=sim.makespan, net_bytes=sim.net_bytes,
-                           bitmaps=bitmaps)
+                           bitmaps=bitmaps,
+                           tier=resolve_tier(cfg, catalog))
         if tr.enabled:
             _set_query_attrs(qs, run)
     return run
@@ -362,6 +409,7 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
     sim = simulate(sim_reqs, cfg.res, cfg.mode,
                    measured=_measured_of(cfg), breaker=cfg.breaker)
     tr = obs_trace.get_tracer()
+    tier = resolve_tier(cfg, catalog)
     out: Dict[str, QueryRun] = {}
     for q in queries:
         reqs = [r for r in all_reqs if r.query_id == q.qid]
@@ -369,7 +417,7 @@ def run_concurrent(queries: List[Query], catalog: Catalog, cfg: EngineConfig
                      concurrent=True) as qs:
             run = _run_decided(
                 q, reqs, sim, cfg, t_pushable=sim.finish_by_query[q.qid],
-                net_bytes=sim.net_bytes_by_query[q.qid])
+                net_bytes=sim.net_bytes_by_query[q.qid], tier=tier)
             if tr.enabled:
                 _set_query_attrs(qs, run)
         out[q.qid] = run

@@ -83,6 +83,44 @@ class FaultExhausted(RuntimeError):
         self.attempts = attempts
 
 
+class WorkerFault(RuntimeError):
+    """A *real* storage-worker failure observed at the channel boundary
+    (``distributed.workers``): the worker process died (``crash`` — the
+    channel hit EOF, e.g. after a SIGKILL) or a request outlived the
+    channel's deadline (``timeout``). The runtime's recovery loop treats
+    these exactly like injected draws of the same kind — retry under the
+    charged budget, then demote to pushback — so moving the fault domain
+    from schedules to real processes changes *where* faults come from,
+    never what recovery does. Real events are ledgered on the
+    ``WorkerPool`` (``pool.events``), next to the ``FaultPlan``'s injected
+    ledger; counters reconcile against the two ledgers' sum."""
+
+    def __init__(self, kind: str, node: int, detail: str = ""):
+        assert kind in (FAULT_CRASH, FAULT_TIMEOUT), kind
+        super().__init__(f"storage worker {kind} on node {node}"
+                         + (f": {detail}" if detail else ""))
+        self.kind = kind
+        self.node = node
+        self.detail = detail
+
+
+class HedgeAborted(RuntimeError):
+    """A hedged race's loser observed its abort token between attempts
+    and stopped instead of completing. Raised *inside the loser's future*
+    — the stream driver never retrieves it (only the winner's result is
+    read), so it surfaces nowhere; its purpose is to stop the loser from
+    double-counting calibration samples, fault-ledger draws, and demotion
+    counters after the race is already decided
+    (tests/test_faults.py)."""
+
+    def __init__(self, node: int, path: str, table: str):
+        super().__init__(f"hedge loser aborted on node {node} "
+                         f"({path}, table={table})")
+        self.node = node
+        self.path = path
+        self.table = table
+
+
 # --------------------------------------------------------------- fault plan
 @dataclasses.dataclass(frozen=True)
 class FaultRule:

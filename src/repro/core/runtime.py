@@ -158,7 +158,9 @@ def _exec_group(cplan: CompiledPushPlan, sub, path: str, executor: str,
                 threshold: Optional[float],
                 bitmaps: Optional[Dict[int, np.ndarray]] = None,
                 shipped: Optional[List[ColumnTable]] = None,
-                cache=None) -> List[Tuple[ColumnTable, Dict]]:
+                cache=None, tier=None,
+                parent: Optional[obs_trace.Span] = None
+                ) -> List[Tuple[ColumnTable, Dict]]:
     """Execute one same-(table, plan, path) request group. Pushback groups
     run the same compiled plan over raw projections (``shipped`` lets the
     stream driver pass transfer-copied batches instead of in-place views).
@@ -167,7 +169,21 @@ def _exec_group(cplan: CompiledPushPlan, sub, path: str, executor: str,
     storage-side batched pushdown path only: pushback replays run at the
     compute layer over already-shipped bytes (nothing storage-side to
     save), and the per-partition reference stays the uncached oracle.
+
+    ``tier`` (a ``distributed.workers.WorkerPool``) reroutes the storage
+    side over the wire: pushdown dispatches the compiled plan to the
+    partition-owning worker *process*; pushback fetches the raw
+    accessed-column projection as real serialized bytes and replays the
+    plan compute-side over the decoded tables — byte-identical to the
+    in-process paths (the tier oracle contract, docs/distributed.md). A
+    dead/overdue channel raises ``faults.WorkerFault``, which the
+    recovery loop maps onto the retry -> demote machinery.
     """
+    if tier is not None and shipped is None:
+        if path == PUSHDOWN:
+            return tier.execute_group(cplan, sub, executor, threshold,
+                                      bitmaps=bitmaps, parent=parent)
+        shipped = tier.fetch_projection(cplan, sub, parent=parent)
     if shipped is not None:
         tabs = shipped
     elif path == PUSHDOWN:
@@ -194,7 +210,7 @@ def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
                        shipped: Optional[List[ColumnTable]] = None,
                        parent: Optional[obs_trace.Span] = None,
                        node: Optional[int] = None,
-                       cache=None
+                       cache=None, tier=None
                        ) -> Tuple[List[Tuple[ColumnTable, Dict]],
                                   obs_trace.Span]:
     """``_exec_group`` under a span: ``storage_execute`` for pushdown
@@ -209,7 +225,8 @@ def _exec_group_traced(cplan: CompiledPushPlan, sub, path: str,
     with tr.span(name, parent=parent, table=sub[0].table,
                  n_parts=len(sub), node=node) as sp:
         out = _exec_group(cplan, sub, path, executor, threshold,
-                          bitmaps=bitmaps, shipped=shipped, cache=cache)
+                          bitmaps=bitmaps, shipped=shipped, cache=cache,
+                          tier=tier, parent=sp)
         if tr.enabled:
             sp.set(rows_out=int(sum(len(res) for res, _ in out)),
                    signature=plan_signature(cplan.plan),
@@ -223,41 +240,58 @@ class GroupRecovery:
     attempts: int = 1                 # executions tried (incl. the success)
     retries: int = 0                  # failed attempts that were retried
     injected: List[str] = dataclasses.field(default_factory=list)
+    real_faults: List[str] = dataclasses.field(default_factory=list)
+    #   WorkerFault kinds observed at the process-tier channel boundary
+    #   (disjoint from ``injected`` — the pool's ``events`` ledger is the
+    #   authoritative real-fault record the tests reconcile against)
     demoted: bool = False             # exhausted -> fallback execution ran
     charged_s: float = 0.0            # charged (virtual) seconds consumed
 
 
 def _exec_group_recovered(cplan: CompiledPushPlan, sub, path: str,
                           executor: str, threshold: Optional[float],
-                          faults: "_faults.FaultPlan",
+                          faults: Optional["_faults.FaultPlan"],
                           retry: "_faults.RetryPolicy",
                           breaker: Optional["_faults.CircuitBreaker"] = None,
                           bitmaps: Optional[Dict[int, np.ndarray]] = None,
                           shipped: Optional[List[ColumnTable]] = None,
                           parent: Optional[obs_trace.Span] = None,
                           node: Optional[int] = None,
-                          cache=None, salt: str = ""
+                          cache=None, salt: str = "", tier=None,
+                          abort: Optional[threading.Event] = None
                           ) -> Tuple[List[Tuple[ColumnTable, Dict]],
                                      obs_trace.Span, GroupRecovery]:
     """``_exec_group_traced`` under the fault/recovery contract.
 
-    Each attempt consults the ``FaultPlan`` at the storage-execute
-    boundary. A ``straggler`` completes (late: the injected delay is both
-    charged and really slept, scaled); ``crash``/``timeout``/``transient``
-    abort the attempt, charge the deadline budget their nominal detection
-    cost, and retry after capped exponential backoff with deterministic
-    jitter. On exhaustion (attempts or charged budget):
+    Each attempt consults the ``FaultPlan`` (when one is active) at the
+    storage-execute boundary. A ``straggler`` completes (late: the
+    injected delay is both charged and really slept, scaled);
+    ``crash``/``timeout``/``transient`` abort the attempt, charge the
+    deadline budget their nominal detection cost, and retry after capped
+    exponential backoff with deterministic jitter. On the process storage
+    tier the same loop also absorbs **real** failures: a
+    :class:`core.faults.WorkerFault` raised at the channel boundary
+    (worker SIGKILL -> EOF, or an overdue request) is handled exactly like
+    an injected fault of the same kind — charged, counted, retried — except
+    that a real timeout already waited its detection time out on the wire,
+    so nothing extra is slept. On exhaustion (attempts or charged budget):
 
     - ``retry.demote_on_exhaust`` (the contract): a pushdown group is
       **demoted to pushback** — ship the raw projection, replay the
       compiled plan compute-side, byte-identical by the PR-4 contract; an
       already-pushback group replays cleanly from the durable projection
-      (``retry.local_replays``). The fallback execution is not re-injected:
-      the recovery tier (durable store + local compute) is outside the
-      storage fault model — which is what makes "never an error" a
-      guarantee rather than a probability.
+      (``retry.local_replays``). The fallback execution is not re-injected
+      and, on the process tier, runs **in-process from the parent's
+      catalog copy** (``tier=None``): the recovery tier (durable store +
+      local compute) is outside the storage fault model — which is what
+      makes "never an error" a guarantee rather than a probability.
     - otherwise: raise :class:`core.faults.FaultExhausted` — the
       fail-to-error baseline the chaos benchmark compares against.
+
+    ``abort`` is the hedge loser's cancellation token: a set token raises
+    :class:`core.faults.HedgeAborted` at the next attempt boundary (and
+    before the demote fallback), so a lost race cannot keep charging the
+    fault ledger, the byte counters, or the calibration samples.
 
     Every outcome feeds the circuit breaker (when given) and the
     ``faults.node<N>.<path>.failures``/``.successes`` counters — the same
@@ -273,7 +307,11 @@ def _exec_group_recovered(cplan: CompiledPushPlan, sub, path: str,
     scale = retry.real_scale()
     attempt = 1
     while True:
-        action = faults.draw(node_id, path, table, key, attempt, salt)
+        if abort is not None and abort.is_set():
+            raise _faults.HedgeAborted(node_id, path, table)
+        action = faults.draw(node_id, path, table, key, attempt, salt) \
+            if faults is not None else None
+        kind = real = None
         if action is None or action.kind == _faults.FAULT_STRAGGLER:
             if action is not None:
                 m.counter(f"faults.{_faults.FAULT_STRAGGLER}").inc()
@@ -288,31 +326,41 @@ def _exec_group_recovered(cplan: CompiledPushPlan, sub, path: str,
                              delay_s=delay)
                 if delay * scale > 0:
                     time.sleep(delay * scale)
-            out, sp = _exec_group_traced(cplan, sub, path, executor,
-                                         threshold, bitmaps=bitmaps,
-                                         shipped=shipped, parent=parent,
-                                         node=node_id, cache=cache)
-            rec.attempts = attempt
-            m.counter(f"faults.node{node_id}.{path}.successes").inc()
-            if breaker is not None:
-                breaker.record_success(node_id, path)
-            return out, sp, rec
-        kind = action.kind
+            try:
+                out, sp = _exec_group_traced(cplan, sub, path, executor,
+                                             threshold, bitmaps=bitmaps,
+                                             shipped=shipped, parent=parent,
+                                             node=node_id, cache=cache,
+                                             tier=tier)
+            except _faults.WorkerFault as wf:
+                kind, real = wf.kind, True
+                rec.real_faults.append(kind)
+            else:
+                rec.attempts = attempt
+                m.counter(f"faults.node{node_id}.{path}.successes").inc()
+                if breaker is not None:
+                    breaker.record_success(node_id, path)
+                return out, sp, rec
+        else:
+            kind = action.kind
+            rec.injected.append(kind)
         m.counter(f"faults.{kind}").inc()
         m.counter(f"faults.node{node_id}.{path}.failures").inc()
-        rec.injected.append(kind)
         if breaker is not None:
             breaker.record_failure(node_id, path)
         if tr.enabled:
-            tr.event("fault_injected", parent=parent, kind=kind,
-                     node=node_id, table=table, path=path, attempt=attempt)
+            tr.event("worker_fault" if real else "fault_injected",
+                     parent=parent, kind=kind, node=node_id, table=table,
+                     path=path, attempt=attempt)
         charge = retry.charge(kind)
         rec.charged_s += charge
         budget -= charge
-        if kind == _faults.FAULT_TIMEOUT and charge * scale > 0:
-            time.sleep(charge * scale)  # a timeout really waits the attempt out
+        if not real and kind == _faults.FAULT_TIMEOUT and charge * scale > 0:
+            time.sleep(charge * scale)  # an *injected* timeout really waits
+            #   the attempt out; a real one already did, on the wire
         if attempt < retry.max_attempts and budget > 0:
-            u = faults.jitter(node_id, path, table, key, attempt)
+            u = faults.jitter(node_id, path, table, key, attempt) \
+                if faults is not None else 0.5
             back = retry.backoff_s(attempt, u)
             rec.charged_s += back
             budget -= back
@@ -332,6 +380,8 @@ def _exec_group_recovered(cplan: CompiledPushPlan, sub, path: str,
         if not retry.demote_on_exhaust:
             m.counter("retry.exhausted").inc()
             raise _faults.FaultExhausted(kind, node_id, path, table, attempt)
+        if abort is not None and abort.is_set():
+            raise _faults.HedgeAborted(node_id, path, table)
         rec.demoted = True
         m.counter("retry.demotions" if path == PUSHDOWN
                   else "retry.local_replays").inc()
@@ -352,7 +402,7 @@ def execute_split(reqs, decisions: Dict[int, str],
                   threshold: Optional[float] = None,
                   bitmaps: Optional[Dict[int, np.ndarray]] = None,
                   cache=None, faults=None, retry=None,
-                  breaker=None) -> SplitExecution:
+                  breaker=None, tier=None) -> SplitExecution:
     """Route every request down its decided path and merge.
 
     ``reqs`` is a list of ``engine.PlannedRequest``; ``decisions`` maps
@@ -371,11 +421,21 @@ def execute_split(reqs, decisions: Dict[int, str],
     Byte-identity holds under ANY fault schedule: demotion is just the
     pushback path, and the merge order never changes. Without a plan this
     function is byte-for-byte the fault-free PR-4 code path.
+
+    ``tier`` (``distributed.workers.WorkerPool``): route the storage side
+    through real worker processes. Grouping always splits per node (each
+    worker owns its node's partitions), execution always runs through the
+    recovery loop (real channel faults must flow retry -> demote even
+    with no injected plan; the retry policy is auto-armed), and the
+    result cache is bypassed (the workers own the storage side — a
+    parent-side cache would fake locality the wire no longer has).
     """
     if faults is None:
         faults = _faults.env_plan()
-    if faults is not None and retry is None:
-        retry = _faults.RetryPolicy()
+    if faults is not None or tier is not None:
+        retry = retry if retry is not None else _faults.RetryPolicy()
+    if tier is not None:
+        cache = None
     tr = obs_trace.get_tracer()
     with tr.span("execute_split", n_requests=len(reqs)) as es:
         per_req: Dict[int, ColumnTable] = {}
@@ -383,10 +443,12 @@ def execute_split(reqs, decisions: Dict[int, str],
         n_pd = n_pb = n_dem = retries = injected = 0
         pd_bytes = pb_bytes = 0
         groups: Dict[Tuple, List] = {}
+        recovered = faults is not None or tier is not None
         for r in reqs:
-            # with a fault plan, groups split per node: injection and
-            # recovery are per-(node, path) — the fleet's failure unit
-            gkey = (r.table, id(r.plan)) if faults is None \
+            # with a fault plan or a process tier, groups split per node:
+            # injection, recovery, and partition ownership are all
+            # per-(node, path) — the fleet's failure unit
+            gkey = (r.table, id(r.plan)) if not recovered \
                 else (r.table, id(r.plan), r.part.node_id)
             groups.setdefault(gkey, []).append(r)
         for _gkey, rs in groups.items():
@@ -396,7 +458,7 @@ def execute_split(reqs, decisions: Dict[int, str],
                        if decisions.get(r.req_id, PUSHDOWN) == path]
                 if not sub:
                     continue
-                if faults is None:
+                if not recovered:
                     out, gsp = _exec_group_traced(cplan, sub, path, executor,
                                                   threshold, bitmaps=bitmaps,
                                                   cache=cache)
@@ -405,7 +467,8 @@ def execute_split(reqs, decisions: Dict[int, str],
                 else:
                     out, gsp, rec = _exec_group_recovered(
                         cplan, sub, path, executor, threshold, faults,
-                        retry, breaker=breaker, bitmaps=bitmaps, cache=cache)
+                        retry, breaker=breaker, bitmaps=bitmaps, cache=cache,
+                        tier=tier)
                     retries += rec.retries
                     injected += len(rec.injected)
                     eff_path = PUSHBACK if rec.demoted else path
@@ -668,9 +731,15 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
     faults = getattr(cfg, "faults", None)
     if faults is None:
         faults = _faults.env_plan()
+    # storage tier (distributed.workers): "process" dispatches every
+    # storage-side group to real worker processes over the wire; real
+    # channel faults must flow through retry -> demote, so the recovery
+    # loop is always armed on this tier
+    tier = _engine.resolve_tier(cfg, catalog)
     retry = getattr(cfg, "retry", None)
-    if faults is not None and retry is None:
+    if (faults is not None or tier is not None) and retry is None:
         retry = _faults.RetryPolicy()
+    recovered = faults is not None or tier is not None
     hedge = getattr(cfg, "hedge", None)
     breaker = getattr(cfg, "breaker", None)
     exec_samples: List[float] = []     # storage-execute durations (hedging
@@ -680,14 +749,22 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         with cores:
             return fn(*args, **kw)
 
+    # on the process tier the submitting thread mostly *waits* on the wire
+    # while the worker process burns its own cores — gating dispatch on
+    # the parent's core semaphore would serialize I/O, not CPU
+    gate = on_core if tier is None else (lambda fn, *a, **kw: fn(*a, **kw))
+
     def exec_group(cplan, sub, path, shipped=None, qspan=None, node=None,
-                   salt=""):
+                   salt="", abort=None):
         """One storage-execute (or replay) group, through the recovery
-        loop when a fault plan is active; always returns the uniform
-        ``(out, span, GroupRecovery-or-None)`` triple and records its
-        duration for hedge-delay calibration."""
+        loop when a fault plan or the process tier is active; always
+        returns the uniform ``(out, span, GroupRecovery-or-None)`` triple
+        and records its duration for hedge-delay calibration — unless its
+        ``abort`` token was set (a lost hedge race must not pollute the
+        calibration stream; ``stream.exec_samples`` counts exactly the
+        recorded ones)."""
         t_ex = time.perf_counter()
-        if faults is None:
+        if not recovered:
             out, sp = _exec_group_traced(cplan, sub, path, cfg.executor,
                                          threshold, shipped=shipped,
                                          parent=qspan, node=node,
@@ -697,24 +774,35 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
             out, sp, rec = _exec_group_recovered(
                 cplan, sub, path, cfg.executor, threshold, faults, retry,
                 breaker=breaker, shipped=shipped, parent=qspan, node=node,
-                cache=cache, salt=salt)
-        with samples_lock:
-            exec_samples.append(time.perf_counter() - t_ex)
+                cache=cache, salt=salt, tier=tier, abort=abort)
+        if abort is None or not abort.is_set():
+            with samples_lock:
+                exec_samples.append(time.perf_counter() - t_ex)
+            metrics.counter("stream.exec_samples").inc()
         return out, sp, rec
 
     def sample_wave(qspan) -> None:
-        """Per-wave load signals: slot-pool queue depths + free cores —
-        written to the metrics gauges every dispatch wave (the live
-        signals a distributed Arbitrator polls) and, when tracing, stamped
-        on the query as a ``wave_sample`` instant."""
+        """Per-wave load signals: on the in-process tier, slot-pool queue
+        depths + free cores; on the process tier, each *worker's* live
+        queue-depth / in-flight / CPU-occupancy snapshot polled over the
+        wire (``WorkerPool.publish_load``) — written to the very metrics
+        gauges the Arbitrator's ``MeasuredLoad`` consumes every dispatch
+        wave and, when tracing, stamped on the query as a ``wave_sample``
+        instant."""
+        cores_free = getattr(cores, "_value", None)
+        if cores_free is not None:
+            metrics.gauge("stream.cores_free").set(cores_free)
+        if tier is not None:
+            loads = tier.publish_load()
+            if tr.enabled:
+                tr.event("wave_sample", parent=qspan, worker_loads=loads,
+                         cores_free=cores_free)
+            return
         exec_q = {n: exec_pools[n]._work_queue.qsize() for n in nodes}
         ship_q = {n: ship_pools[n]._work_queue.qsize() for n in nodes}
-        cores_free = getattr(cores, "_value", None)
         for n in nodes:
             metrics.gauge(f"stream.node{n}.exec_queue").set(exec_q[n])
             metrics.gauge(f"stream.node{n}.ship_queue").set(ship_q[n])
-        if cores_free is not None:
-            metrics.gauge("stream.cores_free").set(cores_free)
         if tr.enabled:
             tr.event("wave_sample", parent=qspan,
                      exec_queue=exec_q, ship_queue=ship_q,
@@ -734,20 +822,31 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
                 key=lambda kv: min(decision_pos.get(r.req_id, 0)
                                    for r in kv[1])):
             cplan = compile_push_plan(sub[0].plan)
+            abort = threading.Event() if hedge is not None else None
             if path == PUSHDOWN:
                 fut = exec_pools[node].submit(
-                    on_core, exec_group, cplan, sub, path,
-                    qspan=qspan, node=node)
+                    gate, exec_group, cplan, sub, path,
+                    qspan=qspan, node=node, abort=abort)
+            elif tier is not None:
+                # process tier: the fetch is a real wire transfer made
+                # inside the recovery loop (a dead worker mid-fetch must
+                # flow retry -> local replay, not error) — one future on
+                # the node's transfer pool, replay inline after decode
+                fut = ship_pools[node].submit(
+                    gate, exec_group, cplan, sub, path,
+                    qspan=qspan, node=node, abort=abort)
             else:
                 ship_fut = ship_pools[node].submit(
                     on_core, _ship_traced, cplan,
                     [r.part.data for r in sub], parent=qspan, node=node)
                 # wait for the transfer OUTSIDE the core gate, replay inside
                 fut = compute_pool.submit(
-                    lambda cp=cplan, s=sub, sf=ship_fut, qs=qspan, nd=node:
+                    lambda cp=cplan, s=sub, sf=ship_fut, qs=qspan, nd=node,
+                    ab=abort:
                     on_core(exec_group, cp, s, PUSHBACK,
-                            shipped=sf.result(), qspan=qs, node=nd))
-            futs.append(((sub, path, cplan, node), fut))
+                            shipped=sf.result(), qspan=qs, node=nd,
+                            abort=ab))
+            futs.append(((sub, path, cplan, node, abort), fut))
         return futs
 
     t0 = time.perf_counter()
@@ -757,10 +856,15 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         original outlives the calibrated percentile delay, a duplicate
         launches on the same node's exec pool (salted so its fault draws
         differ — a retried RPC, not a replayed one); first completion
-        wins, the loser is cancelled if still queued and discarded
-        otherwise (threads cannot be aborted). Returns
+        wins, the loser is cancelled if still queued and its **abort
+        token is set** otherwise: a thread cannot be killed mid-attempt,
+        but the token makes the running loser bail at its next attempt
+        boundary (``HedgeAborted``) and suppresses its calibration
+        sample — a lost race never double-counts shipped bytes,
+        fault-ledger entries, or ``exec_samples`` updates (the winner is
+        the only future whose results reach the accounting). Returns
         ``(out, span, rec, hedge_won)``."""
-        sub, path, _cplan, node = meta
+        sub, path, _cplan, node, abort = meta
         delay = None
         if hedge is not None and path == PUSHDOWN:
             with samples_lock:
@@ -775,13 +879,17 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         if tr.enabled:
             tr.event("hedge", parent=qspan, node=node,
                      table=sub[0].table, delay_s=delay)
-        dup = exec_pools[node].submit(on_core, exec_group, _cplan, sub,
+        dup_abort = threading.Event()
+        dup = exec_pools[node].submit(gate, exec_group, _cplan, sub,
                                       path, qspan=qspan, node=node,
-                                      salt="hedge")
+                                      salt="hedge", abort=dup_abort)
         done, _ = fut_wait({fut, dup}, return_when=FIRST_COMPLETED)
         winner = fut if fut in done else dup       # original preferred
-        loser = dup if winner is fut else fut
+        loser, loser_abort = (dup, dup_abort) if winner is fut \
+            else (fut, abort)
         loser.cancel()
+        if loser_abort is not None:
+            loser_abort.set()
         won = winner is dup
         metrics.counter("hedge.won" if won else "hedge.lost").inc()
         return (*winner.result(), won)
@@ -802,9 +910,9 @@ def _run_stream_body(stream, catalog, cfg, time_scale, tr, metrics,
         outcomes: List[RequestOutcome] = []
         n_pd = n_pb = n_hit = n_dem = n_retry = n_hedge = 0
         pd_b = pb_b = 0
-        for (sub, path, cplan, node), fut in futs:
-            out, gsp, rec, hedged = resolve((sub, path, cplan, node), fut,
-                                            qspan)
+        for meta, fut in futs:
+            (sub, path, cplan, node, _abort) = meta
+            out, gsp, rec, hedged = resolve(meta, fut, qspan)
             eff_path = PUSHBACK if (rec is not None and rec.demoted) \
                 else path
             demoted = eff_path != path

@@ -1,1 +1,6 @@
 from repro.distributed import sharding  # noqa: F401
+
+# NOTE: `workers` (the multi-process storage tier) is intentionally NOT
+# imported here — it pulls in multiprocessing/socket machinery that every
+# in-process engine path should stay free of. Import it explicitly:
+#     from repro.distributed.workers import WorkerPool, pool_for

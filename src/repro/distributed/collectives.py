@@ -93,7 +93,14 @@ def compressed_psum(grad: jax.Array, err: jax.Array, mesh: Mesh,
 
     n = mesh.shape[axis]
     if n == 1:
-        return grad, jnp.zeros_like(err)
+        # degenerate mesh: nothing to reduce, but the carried error MUST
+        # still fold into the estimate — dropping it here would silently
+        # bias error-feedback (the shard_map path returns g+e exactly,
+        # since a single shard's common-scale quantization round-trips
+        # through its own rounding and new_err absorbs the difference:
+        # approx + new_err == g + e). Conservation pinned by
+        # tests/test_distributed.py::test_compressed_psum_n1_error_feedback.
+        return grad + err, jnp.zeros_like(err)
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axis), P(axis)),
                      out_specs=(P(axis), P(axis)))(grad, err)

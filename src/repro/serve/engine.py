@@ -7,10 +7,13 @@ cache is pre-laid-out by ``api.build_decode_cache`` (ring caches for
 windowed layers, O(1) states for SSM/RG-LRU).
 
 The serving analogue of the paper's arbitration also lives here: a cheap
-admission rule decides per request whether its *prefill* runs as one big
+admission rule decides per wave whether its *prefill* runs as one big
 batched step (the "pushdown" — throughput-optimal, occupies the device) or
-is chunked and interleaved with decode steps (the "pushback" — latency-
-protective when decode slots are busy). See ``AdmissionPolicy``.
+is chunked and interleaved as single-token steps (the "pushback" —
+latency-protective when many decode slots are about to go live). See
+``AdmissionPolicy``. Both prefill paths produce the same next-token
+logits for causal models — the chunk boundary only changes how the KV
+cache fills, not what it holds (pinned by tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -37,14 +40,19 @@ class ServeConfig:
 class Request:
     rid: int
     prompt: np.ndarray           # (P,) int32
-    max_new: int = 16
+    max_new: int = 16            # per-request output budget (honored:
+    #                              the slot stops accumulating — and flips
+    #                              ``done`` — at exactly this many tokens)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class AdmissionPolicy:
     """Decode-busy arbitration (the serving-side Algorithm-1 analogue):
-    batched prefill when few live decode slots, chunked when many."""
+    batched prefill when few decode slots are going live, chunked when
+    many — a monolithic prefill monopolizes the device for its full
+    prompt length, which is exactly when a big wave of live slots is
+    about to need per-step latency."""
 
     def __init__(self, cfg: ServeConfig):
         self.cfg = cfg
@@ -59,42 +67,90 @@ class ServingEngine:
         self.params = params
         self.scfg = scfg
         self.policy = AdmissionPolicy(scfg)
+        self.chunked_prefills = 0    # waves served via the chunked branch
         self._decode = jax.jit(
             lambda p, c, pos, tok: api.decode_step(p, model_cfg, c, pos, tok))
 
     # ------------------------------------------------------------ serving
     def generate(self, prompts: List[np.ndarray], max_new: int = 16
                  ) -> List[List[int]]:
-        """Serve a list of prompts (equal length per wave for the batched
-        prefill; ragged prompts are right-aligned by left-padding)."""
-        outs: List[List[int]] = []
-        B = self.scfg.max_batch
-        for i in range(0, len(prompts), B):
-            wave = prompts[i:i + B]
-            outs.extend(self._serve_wave(wave, max_new))
-        return outs
+        """Serve a list of prompts with a shared output budget. Sugar for
+        :meth:`serve` over uniform ``Request``s."""
+        reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                        max_new=max_new)
+                for i, p in enumerate(prompts)]
+        self.serve(reqs)
+        return [r.out_tokens for r in reqs]
 
-    def _serve_wave(self, prompts: List[np.ndarray], max_new: int
-                    ) -> List[List[int]]:
-        B = len(prompts)
-        P = max(len(p) for p in prompts)
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Serve requests in waves of ``max_batch`` slots, honoring each
+        request's own ``max_new``: a slot stops accumulating (and its
+        request flips ``done``) the moment its budget is reached, while
+        the remaining live slots keep decoding; the wave ends when every
+        slot is done. Ragged prompts are right-aligned by left-padding."""
+        B = self.scfg.max_batch
+        for i in range(0, len(requests), B):
+            self._serve_wave(requests[i:i + B])
+        return requests
+
+    # ------------------------------------------------------------ prefill
+    def _prefill(self, toks: np.ndarray, live_slots: int):
+        """Batched or chunked prefill, per the admission policy. Returns
+        ``(last_logits, cache)`` with ``last_logits`` shaped (B, V).
+
+        The chunked branch builds the decode cache from the first
+        ``prefill_chunk`` (left-padded) columns, then feeds the remaining
+        prompt columns one position at a time through the jitted decode
+        step — for causal models the final logits match the monolithic
+        prefill (same tokens, same positions, KV filled incrementally),
+        while the device is yielded between chunks instead of being held
+        for the whole prompt."""
+        B, P = toks.shape
+        chunk = self.scfg.prefill_chunk
+        use_chunked = self.policy.chunked(live_slots) and P > chunk
+        first = toks if not use_chunked else toks[:, :chunk]
+        last, cache = api.build_decode_cache(
+            self.params, self.cfg, {"tokens": jnp.asarray(first)},
+            self.scfg.max_len)
+        if not use_chunked:
+            return last, cache
+        self.chunked_prefills += 1
+        for pos in range(chunk, P):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(pos, jnp.int32),
+                jnp.asarray(toks[:, pos:pos + 1]))
+            last = logits[..., -1, :] if logits.ndim == 3 else logits
+        return last, cache
+
+    def _serve_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        P = max(len(r.prompt) for r in wave)
         toks = np.zeros((B, P), np.int32)
-        for b, p in enumerate(prompts):
-            toks[b, P - len(p):] = p   # left-pad: positions align at the end
-        batch = {"tokens": jnp.asarray(toks)}
-        last_logits, cache = api.build_decode_cache(
-            self.params, self.cfg, batch, self.scfg.max_len)
+        for b, r in enumerate(wave):
+            toks[b, P - len(r.prompt):] = r.prompt  # left-pad: align ends
+        last_logits, cache = self._prefill(toks, live_slots=B)
         tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
-        outs = [[int(tok[b, 0])] for b in range(B)]
+
+        def emit(b: int, t: int) -> None:
+            r = wave[b]
+            if not r.done:
+                r.out_tokens.append(t)
+                if len(r.out_tokens) >= r.max_new:
+                    r.done = True
+
+        for b, r in enumerate(wave):
+            if r.max_new <= 0:
+                r.done = True
+            else:
+                emit(b, int(tok[b, 0]))
         pos = P
-        for _ in range(max_new - 1):
+        while not all(r.done for r in wave):
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(pos, jnp.int32), tok)
-            nxt = jnp.argmax(logits[..., -1, :] if logits.ndim == 3 else logits,
-                             axis=-1).astype(jnp.int32)
+            nxt = jnp.argmax(logits[..., -1, :] if logits.ndim == 3
+                             else logits, axis=-1).astype(jnp.int32)
             nxt = nxt.reshape(B, 1)
             for b in range(B):
-                outs[b].append(int(nxt[b, 0]))
+                emit(b, int(nxt[b, 0]))
             tok = nxt
             pos += 1
-        return outs

@@ -60,6 +60,39 @@ def test_compressed_psum_error_feedback():
     assert "compressed psum ok" in out
 
 
+def test_compressed_psum_n1_error_feedback():
+    """The n==1 fast path must fold the carried error into the estimate
+    (grad + err), matching the shard_map path's conservation invariant
+    approx + sum(new_err) == sum(g + e) — the old `return grad, zeros`
+    silently dropped the feedback and biased the long-run average."""
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.collectives import compressed_psum
+    mesh1 = jax.make_mesh((1, 8), ("pod", "data"))
+    g = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    e = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    approx, err = compressed_psum(g, e, mesh1, "pod")
+    # n=1: nothing to reduce, but the carried error must not vanish
+    np.testing.assert_allclose(np.asarray(approx), np.asarray(g + e),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(err), 0.0)
+    # same conservation the multi-shard path provides: each shard's
+    # approx + its own new_err reconstructs its g+e contribution exactly
+    mesh8 = jax.make_mesh((8, 1), ("pod", "data"))
+    a8, e8 = compressed_psum(g, e, mesh8, "pod")
+    v = np.asarray(g + e).reshape(8, 1, 64)
+    tot = v.sum(0)
+    rec = np.asarray(a8).reshape(8, 1, 64) + 0  # per-shard psum estimate
+    # sum over shards of (v_i - q_i*scale) == sum v_i - approx, so
+    # approx + sum(new_err) == sum(g+e) up to float assoc
+    np.testing.assert_allclose(
+        rec[0] + np.asarray(e8).reshape(8, 1, 64).sum(0), tot,
+        rtol=1e-4, atol=1e-4)
+    print("n1 feedback ok")
+    """)
+    assert "n1 feedback ok" in out
+
+
 @pytest.mark.parametrize("arch,shape", [("olmo-1b", "train_4k"),
                                         ("qwen2-moe-a2.7b", "decode_32k"),
                                         ("mamba2-2.7b", "long_500k")])

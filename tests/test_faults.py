@@ -411,6 +411,70 @@ def test_stream_hedging_fires_and_reconciles(fresh_metrics):
     assert run.hedged == c.get("hedge.won", 0)
 
 
+def test_hedge_abort_token_stops_recovery_loop(fresh_metrics):
+    """A lost hedge race's runner cannot be killed mid-attempt, but its
+    abort token must stop it at the next attempt boundary BEFORE it draws
+    more faults, charges counters, or demotes — the regression behind
+    'a cancelled loser already running cannot be aborted'."""
+    import threading
+
+    q = Q.build_query("Q6")
+    reqs = engine.plan_requests(q, CAT)
+    sub = [r for r in reqs if r.part.node_id == 0][:2]
+    cplan = runtime.compile_push_plan(sub[0].plan)
+    plan = FaultPlan.from_spec("transient:1.0", seed=1)
+    ev = threading.Event()
+    ev.set()                     # race already resolved against this runner
+    with pytest.raises(faults.HedgeAborted):
+        runtime._exec_group_recovered(cplan, sub, PUSHDOWN,
+                                      runtime.EXECUTOR_BATCHED, None,
+                                      plan, FAST, abort=ev)
+    # the aborted loser charged NOTHING: no ledger entries, no counters
+    assert plan.events() == []
+    c = om.get_metrics().snapshot()["counters"]
+    assert not any(k.startswith(("faults.", "retry."))
+                   for k in c), c
+
+
+def test_hedge_loser_late_completion_no_double_count(fresh_metrics):
+    """Slow-loser schedule: every pushdown group straggles 50ms (really
+    slept), the hedge fires at 1ms, so every race has a loser that is
+    ALREADY RUNNING when it loses and completes after the race resolved
+    (run_stream joins all pools before returning, so the late completions
+    are fully drained by the time we assert). Its late completion must
+    not double-count shipped bytes, fault-ledger entries, or the
+    exec_samples calibration stream."""
+    spec = "pushdown.straggler:1.0:0.05"
+    slow = RetryPolicy(sleep_scale=1.0)
+    ref_cfg = engine.EngineConfig(
+        faults=FaultPlan.from_spec(spec, seed=8), retry=slow,
+        measured_feedback=False)
+    ref = runtime.run_stream(stream_of(["Q6"]), CAT, ref_cfg, time_scale=0)
+    ref_samples = om.get_metrics().snapshot()["counters"][
+        "stream.exec_samples"]
+
+    om.set_metrics(om.Metrics())         # isolate the hedged run's ledger
+    hplan = FaultPlan.from_spec(spec, seed=8)
+    cfg = engine.EngineConfig(faults=hplan, retry=slow,
+                              hedge=HedgePolicy(fixed_delay_s=0.001),
+                              measured_feedback=False)
+    run = runtime.run_stream(stream_of(["Q6"]), CAT, cfg, time_scale=0)
+    c = om.get_metrics().snapshot()["counters"]
+    assert c.get("hedge.launched", 0) > 0          # races actually happened
+    # 1. calibration: exactly one sample per group — the winners'. Losers
+    #    completed (straggler really slept) but their samples are
+    #    suppressed by the abort token.
+    assert c["stream.exec_samples"] == ref_samples
+    # 2. bytes: only the winner's results reach the accounting — the
+    #    hedged run ships byte-for-byte what the unhedged one does
+    assert run.real_net_bytes == ref.real_net_bytes
+    assert_tables_identical(ref.results["Q6"], run.results["Q6"], "hedged")
+    # 3. fault ledger: every straggler draw (winners AND losers both draw
+    #    at execution start) appears in ledger and counter alike — no
+    #    post-race drift between the two
+    assert c.get("faults.straggler", 0) == len(hplan.events())
+
+
 def test_stream_worker_exception_propagates_and_pools_shut_down():
     """Satellite: a worker exception must surface (not deadlock), close
     the query span, release every core-semaphore permit, and leave all

@@ -1,12 +1,12 @@
 """Serving engine: batched prefill+decode across model families, prompt
-padding, wave batching."""
+padding, wave batching, per-request budgets, chunked prefill."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import api
-from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.engine import Request, ServeConfig, ServingEngine
 
 FAMILIES = ["olmo-1b", "qwen3-14b", "mamba2-2.7b", "recurrentgemma-2b",
             "qwen2-moe-a2.7b", "whisper-small"]
@@ -25,6 +25,75 @@ def test_generate_shapes(arch):
     outs = eng.generate(prompts, max_new=4)
     assert len(outs) == 3 and all(len(o) == 4 for o in outs)
     assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_per_request_max_new_honored():
+    """serve() must stop each slot at ITS OWN budget — Request.max_new
+    and .done were dead fields before (generate() applied one shared
+    limit); this pins the per-request contract."""
+    cfg = get_config("olmo-1b", reduced=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, ServeConfig(max_batch=4, max_len=64))
+    rng = np.random.default_rng(2)
+    budgets = [1, 3, 6, 0]
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, 6)
+                    .astype(np.int32),
+                    max_new=m)
+            for i, m in enumerate(budgets)]
+    out = eng.serve(reqs)
+    assert out is reqs
+    assert [len(r.out_tokens) for r in reqs] == budgets
+    assert all(r.done for r in reqs)
+    # the longer slots kept decoding after the shorter ones finished, and
+    # all tokens are in-vocab
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+
+
+def test_prefix_budget_matches_shared_generate():
+    """A slot capped at k tokens must see exactly the first k tokens of
+    the uncapped greedy stream (stopping early cannot change what was
+    already decoded)."""
+    cfg = get_config("olmo-1b", reduced=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(3))
+    scfg = ServeConfig(max_batch=2, max_len=64)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    full = ServingEngine(cfg, params, scfg).generate([prompt], max_new=6)[0]
+    short = ServingEngine(cfg, params, scfg).generate([prompt], max_new=3)[0]
+    assert short == full[:3]
+
+
+def test_chunked_prefill_equivalent_and_wired():
+    """The chunked-prefill branch (AdmissionPolicy.chunked +
+    ServeConfig.prefill_chunk — previously never consulted) must (a)
+    actually run when the policy says so, and (b) produce the same greedy
+    tokens as the monolithic batched prefill: the chunk boundary changes
+    how the KV cache fills, not what it holds."""
+    cfg = get_config("olmo-1b", reduced=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    # 3 live slots > max_batch//2 = 2 -> policy says chunk; P=20 > chunk=8
+    prompts = [rng.integers(1, cfg.vocab_size, 20).astype(np.int32)
+               for _ in range(3)]
+    mono = ServingEngine(cfg, params,
+                         ServeConfig(max_batch=4, max_len=64,
+                                     prefill_chunk=64))
+    outs_mono = mono.generate(prompts, max_new=4)
+    assert mono.chunked_prefills == 0          # P <= chunk: batched path
+    chunked = ServingEngine(cfg, params,
+                            ServeConfig(max_batch=4, max_len=64,
+                                        prefill_chunk=8))
+    outs_chunked = chunked.generate(prompts, max_new=4)
+    assert chunked.chunked_prefills == 1       # the wave went chunked
+    assert outs_chunked == outs_mono
+    # a small wave (1 slot <= max_batch//2) stays batched even with a
+    # long prompt: the policy, not just the length, gates the branch
+    small = ServingEngine(cfg, params,
+                          ServeConfig(max_batch=4, max_len=64,
+                                      prefill_chunk=8))
+    small.generate(prompts[:1], max_new=2)
+    assert small.chunked_prefills == 0
 
 
 def test_decode_matches_forward():
